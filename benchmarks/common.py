@@ -1,0 +1,91 @@
+"""Shared benchmark utilities: FCT bookkeeping, law runners, pretty tables."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (LeafSpine, SimConfig, default_law_config,
+                        homa_alloc_fn, simulate)
+
+SHORT = 10e3            # <10 KB   (paper Fig. 6 buckets)
+MEDIUM_LO = 100e3
+MEDIUM_HI = 1e6
+
+
+def fct_stats(st, flows, percentile=99.9) -> Dict[str, float]:
+    fct = np.asarray(st.fct)
+    size = np.asarray(flows.size)
+    done = np.isfinite(fct) & np.isfinite(size)
+    out = {}
+    buckets = {
+        "short": size < SHORT,
+        "medium": (size >= MEDIUM_LO) & (size <= MEDIUM_HI),
+        "long": size > MEDIUM_HI,
+        "all": np.ones_like(done),
+    }
+    for name, m in buckets.items():
+        sel = done & m
+        if sel.sum() == 0:
+            out[f"{name}_p"] = float("nan")
+            out[f"{name}_mean"] = float("nan")
+            continue
+        out[f"{name}_p"] = float(np.percentile(fct[sel], percentile))
+        out[f"{name}_mean"] = float(fct[sel].mean())
+    out["completed"] = int(done.sum())
+    out["total"] = int(np.isfinite(size).sum())
+    return out
+
+
+def run_law(topo, flows, law: str, cfg: SimConfig, fabric: Optional[LeafSpine]
+            = None, expected_flows: float = 4.0, record: bool = True,
+            homa_overcommit: int = 0):
+    """One simulation; law='homa' uses the receiver-driven allocator."""
+    alloc_fn = None
+    sim_law = law
+    lcfg = default_law_config(flows, expected_flows=expected_flows)
+    if law == "homa":
+        sim_law = "reno"        # window non-binding; grants cap the rate
+        recv = _receiver_ids(flows, fabric)
+        alloc_fn = homa_alloc_fn(recv, fabric.host_bw,
+                                 max(homa_overcommit, 1), flows.tau,
+                                 flows.start)
+    t0 = time.time()
+    st, rec = simulate(topo, flows, sim_law, lcfg, cfg, alloc_fn=alloc_fn,
+                       record=record)
+    return st, rec, time.time() - t0
+
+
+def _receiver_ids(flows, fabric: LeafSpine):
+    """Recover receiver host id from the last real hop (host downlink)."""
+    import numpy as np
+    path = np.asarray(flows.path)
+    R, S, H = fabric.racks, fabric.spines, fabric.hosts_per_rack
+    base = 2 * R * S
+    recv = np.zeros(path.shape[0], np.int64)
+    for i in range(path.shape[0]):
+        hops = path[i][path[i] < fabric.num_queues]
+        host_q = [q for q in hops if q >= base]
+        recv[i] = (host_q[-1] - base) if host_q else 0
+    return recv
+
+
+def table(rows: List[dict], cols: List[str], title: str = "") -> str:
+    out = []
+    if title:
+        out.append(f"\n== {title} ==")
+    hdr = " | ".join(f"{c:>14s}" for c in cols)
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        out.append(" | ".join(
+            f"{r.get(c, ''):>14.6g}" if isinstance(r.get(c), (int, float))
+            else f"{str(r.get(c, '')):>14s}" for c in cols))
+    return "\n".join(out)
+
+
+def emit(name: str, value, unit: str = ""):
+    print(f"BENCH,{name},{value},{unit}")
+    sys.stdout.flush()

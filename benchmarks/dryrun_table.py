@@ -1,0 +1,90 @@
+"""Deliverable (e)+(g): full dry-run sweep — every (arch x shape x mesh)
+cell in a subprocess (fresh XLA device state per cell), results persisted
+under experiments/dryrun/, roofline table rendered to
+experiments/roofline.md.
+
+  PYTHONPATH=src python -m benchmarks.dryrun_table [--mesh single,multi]
+      [--arch <name>] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, arch_shapes            # noqa: E402
+from repro.launch.roofline import HEADER, render_row    # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+# mesh-dependent microbatch override: llama3-405b single-pod has 16 DP
+# shards -> 16 microbatches keeps 1 seq/shard (see presets + EXPERIMENTS).
+MICROBATCH_OVERRIDE = {("llama3_405b", "single"): 16}
+
+
+def run_cell(arch, shape, mesh, force=False):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(out) and not force:
+        with open(out) as f:
+            return json.load(f), True
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--json", out]
+    mb = MICROBATCH_OVERRIDE.get((arch, mesh))
+    if mb:
+        cmd += ["--microbatch", str(mb)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    p = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=3600)
+    if p.returncode != 0:
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "error": p.stderr[-2000:]}, False
+    with open(out) as f:
+        return json.load(f), False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--force", action="store_true")
+    a = ap.parse_args()
+    meshes = a.mesh.split(",")
+    archs = [a.arch] if a.arch else ARCHS
+
+    rows, failures = [], []
+    for arch in archs:
+        for shape in arch_shapes(arch):
+            for mesh in meshes:
+                t0 = time.time()
+                res, cached = run_cell(arch, shape.name, mesh, a.force)
+                tag = "cached" if cached else f"{time.time()-t0:5.1f}s"
+                if "error" in res:
+                    failures.append(res)
+                    print(f"FAIL {arch:22s} {shape.name:12s} {mesh:7s}"
+                          f" -> {res['error'][-200:]}", flush=True)
+                    continue
+                print(f"OK   {arch:22s} {shape.name:12s} {mesh:7s} {tag} "
+                      f"compile={res['compile_s']:6.1f}s", flush=True)
+                rows.append(res)
+
+    table = [HEADER] + [render_row(r) for r in rows if r["mesh"] == "single"]
+    md = "\n".join(table)
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline.md")
+    with open(path, "w") as f:
+        f.write("# Roofline (single-pod 16x16, per step)\n\n" + md + "\n")
+    print(f"\n{len(rows)} cells OK, {len(failures)} failed. Roofline table "
+          f"-> {path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

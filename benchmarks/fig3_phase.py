@@ -1,0 +1,62 @@
+"""Paper Fig. 3 (claim C1): phase-plane behaviour of the four CC classes.
+
+For each control-law class we integrate the paper's ODE system (Appendix
+A/C) from a grid of initial (q0, w0) points and measure:
+  * endpoint spread of final queue length (0 => unique equilibrium),
+  * throughput loss: fraction of trajectories whose window dips below BDP
+    after the initial transient (voltage-CC overreaction),
+  * convergence time of PowerTCP vs the Theorem-2 constant 5*dt/gamma.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analysis import (ODEConfig, endpoint_spread,
+                                 equilibrium_powertcp, eigenvalues_powertcp,
+                                 phase_portrait, trajectory)
+from .common import emit, table
+
+
+def run(quick: bool = False):
+    cfg = ODEConfig()
+    bdp = cfg.b * cfg.tau
+    grid = 3 if quick else 5
+    rows = []
+    for kind, label in [("voltage_q", "voltage (HPCC-class)"),
+                        ("voltage_delay", "voltage (Swift-class)"),
+                        ("current", "current (TIMELY-class)"),
+                        ("power", "PowerTCP")]:
+        spread = endpoint_spread(kind, cfg, grid=grid)
+        paths = phase_portrait(kind, cfg, grid=grid)
+        # throughput loss: window below 0.95 BDP after the first 20% steps
+        tail = paths[:, paths.shape[1] // 5:, 1]
+        loss_frac = float((tail.min(axis=1) < 0.95 * bdp).mean())
+        rows.append({"law": label, "endpoint_spread_bdp": spread,
+                     "thru_loss_frac": loss_frac})
+        emit(f"fig3.{kind}.endpoint_spread_bdp", f"{spread:.4f}")
+        emit(f"fig3.{kind}.throughput_loss_frac", f"{loss_frac:.2f}")
+
+    # PowerTCP convergence vs Theorem 2 (99.3% decay in 5 dt/gamma)
+    w_e, q_e = equilibrium_powertcp(cfg)
+    path = np.asarray(trajectory("power", w0=0.3 * bdp, q0=2.0 * bdp, cfg=cfg))
+    err = np.abs(path[:, 1] - w_e) / abs(0.3 * bdp - w_e)
+    t993 = float(np.argmax(err < 0.007)) * cfg.dt
+    tconst = 5.0 / cfg.gamma_r
+    emit("fig3.powertcp.t_99.3pct_s", f"{t993:.2e}")
+    emit("fig3.powertcp.thm2_bound_s", f"{tconst:.2e}")
+    lam1, lam2 = eigenvalues_powertcp(cfg)
+    emit("fig3.powertcp.eigenvalues", f"{lam1:.3g};{lam2:.3g}")
+    print(table(rows, ["law", "endpoint_spread_bdp", "thru_loss_frac"],
+                "Fig. 3 — equilibrium uniqueness & overreaction"))
+    ok = (rows[0]["endpoint_spread_bdp"] < 0.05
+          and rows[2]["endpoint_spread_bdp"] > 0.5
+          and rows[3]["endpoint_spread_bdp"] < 0.05
+          and rows[3]["thru_loss_frac"] == 0.0
+          and rows[0]["thru_loss_frac"] > 0.5
+          and t993 <= 1.5 * tconst)
+    emit("fig3.claims_hold", ok)
+    return ok
+
+
+if __name__ == "__main__":
+    run()

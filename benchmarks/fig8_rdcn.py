@@ -1,0 +1,84 @@
+"""Paper Fig. 8 / section 5 (claim C5): reconfigurable-DCN case study.
+
+A ToR-pair VOQ alternates between the 100G optical circuit (225us day) and
+the 25G packet fabric, cycling through 24 matchings (one 'week'). A
+long-lived transfer runs under each law; reported:
+  * circuit utilization (egress rate during circuit-up / circuit bw),
+  * p99 queuing latency (q / instantaneous service rate).
+Claims: PowerTCP reaches 80-85%+ circuit utilization at near-zero queues;
+reTCP fills the circuit only by prebuffering (latency 2-5x worse); HPCC
+(voltage-only, and window-capped per RTT) underfills the circuit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CircuitSchedule, SimConfig, circuit_utilization,
+                        default_law_config, make_flows_single,
+                        make_retcp_law, queuing_latency_percentile,
+                        simulate, voq_topology)
+from repro.core.laws import LAWS as LAW_TABLE
+from .common import emit, table
+
+
+def run(quick: bool = False):
+    sched = CircuitSchedule()
+    topo = voq_topology(sched)
+    tau = 24e-6
+    dt = 1e-6
+    weeks = 2 if quick else 4
+    steps = int(weeks * sched.week / dt)
+    # 8 servers at 25G feed the ToR-pair VOQ (aggregate 200G >= circuit 100G)
+    flows = make_flows_single(8, tau=tau, nic=25 * 12.5e8, sim_dt=dt)
+    cfg = SimConfig(dt=dt, steps=steps, hist=256, update_period=0.0)
+
+    rows = []
+    results = {}
+    cases = [("powertcp", None), ("theta_powertcp", None), ("hpcc", None),
+             ("retcp_1800us", 1800e-6), ("retcp_600us", 600e-6)]
+    for name, prebuf in cases:
+        if prebuf is None:
+            law = name
+            lcfg = default_law_config(flows, expected_flows=32.0)
+            st, rec = simulate(topo, flows, law, lcfg, cfg,
+                               bw_fn=sched.bw_fn())
+        else:
+            retcp = make_retcp_law(sched, prebuffer=prebuf)
+            lcfg = default_law_config(flows, expected_flows=32.0)
+            from repro.core.fluid import FluidSim, init_state, step as fstep
+            import jax
+            sim = FluidSim(topo, flows, retcp, lcfg, cfg)
+            state = init_state(sim)
+
+            def body(st, _):
+                s2, rec = fstep(sim, st, bw_fn=sched.bw_fn())
+                return s2, rec
+            st, rec = jax.jit(
+                lambda s: jax.lax.scan(body, s, None, length=cfg.steps)
+            )(state)
+        t = np.asarray(rec.t)
+        util = circuit_utilization(rec.t, rec.thru[:, 0], sched)
+        p99 = queuing_latency_percentile(rec.q[:, 0], rec.t, sched, 99.0)
+        rows.append({"law": name, "circuit_util": util,
+                     "p99_qlat_us": p99 * 1e6,
+                     "mean_q_KB": float(np.asarray(rec.q[:, 0]).mean()) / 1e3})
+        results[name] = rows[-1]
+        emit(f"fig8.{name}.circuit_util", f"{util:.3f}")
+        emit(f"fig8.{name}.p99_qlat_us", f"{p99*1e6:.2f}")
+    print(table(rows, ["law", "circuit_util", "p99_qlat_us", "mean_q_KB"],
+                "Fig. 8 — RDCN circuit utilization vs queuing latency"))
+    p = results["powertcp"]
+    # paper: 80-85%+ circuit utilization, >=2x (up to 5x) tail latency cut
+    # vs reTCP; vs HPCC the fluid model shows a smaller underfill than NS3
+    # (documented), but PowerTCP must dominate on BOTH axes.
+    ok = (p["circuit_util"] >= 0.85
+          and p["p99_qlat_us"] * 2 <= results["retcp_1800us"]["p99_qlat_us"]
+          and p["p99_qlat_us"] * 2 <= results["retcp_600us"]["p99_qlat_us"]
+          and p["circuit_util"] >= results["hpcc"]["circuit_util"]
+          and p["p99_qlat_us"] <= 0.6 * results["hpcc"]["p99_qlat_us"])
+    emit("fig8.claims_hold", ok)
+    return ok
+
+
+if __name__ == "__main__":
+    run()

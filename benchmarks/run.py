@@ -1,0 +1,87 @@
+"""Benchmark driver — one module per paper table/figure + framework tables.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,fig8]
+
+Emits ``BENCH,name,value,unit`` lines (machine-parseable) plus pretty
+tables, and finishes with a claims scoreboard. The dry-run/roofline sweep
+(benchmarks.dryrun_table) is orchestrated separately because each cell runs
+in a subprocess; its persisted results are summarized here when present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _dryrun_summary():
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun")
+    if not os.path.isdir(d):
+        print("dryrun: no persisted cells (run benchmarks.dryrun_table)")
+        return None
+    from repro.launch.roofline import roofline_terms
+    cells = []
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                cells.append(json.load(f))
+    ok = [c for c in cells if "hlo_analysis" in c]
+    multi = [c for c in ok if c["mesh"] == "multi"]
+    print(f"BENCH,dryrun.cells_compiled,{len(ok)},")
+    print(f"BENCH,dryrun.multi_pod_cells,{len(multi)},")
+    bots = {}
+    for c in ok:
+        if c["mesh"] != "single":
+            continue
+        b = roofline_terms(c)["bottleneck"]
+        bots[b] = bots.get(b, 0) + 1
+    print(f"BENCH,dryrun.bottleneck_histogram,{bots},")
+    return len(ok)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    a = ap.parse_args()
+
+    from . import (fig3_phase, fig4_incast, fig5_fairness, fig6_fct,
+                   fig7_load_sweep, fig8_rdcn, tab_commsched)
+    suite = {
+        "fig3": fig3_phase.run,
+        "fig4": fig4_incast.run,
+        "fig5": fig5_fairness.run,
+        "fig6": fig6_fct.run,
+        "fig7": fig7_load_sweep.run,
+        "fig8": fig8_rdcn.run,
+        "commsched": tab_commsched.run,
+    }
+    only = set(a.only.split(",")) if a.only else set(suite)
+    scoreboard = {}
+    for name, fn in suite.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            scoreboard[name] = bool(fn(quick=a.quick))
+        except Exception as e:          # pragma: no cover
+            scoreboard[name] = False
+            print(f"ERROR in {name}: {type(e).__name__}: {e}")
+        print(f"BENCH,{name}.wall_s,{time.time()-t0:.1f},s")
+
+    _dryrun_summary()
+    print("\n== CLAIMS SCOREBOARD ==")
+    for k, v in scoreboard.items():
+        print(f"  {k:12s} {'PASS' if v else 'FAIL'}")
+    print(f"BENCH,claims.passed,{sum(scoreboard.values())},"
+          f"/{len(scoreboard)}")
+    return 0 if all(scoreboard.values()) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Batched serving: prefill a batch of prompts, decode with greedy/sampled
+generation against KV / recurrent-state caches.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch recurrentgemma_2b]
+      [--steps 32] [--temperature 0.8]
+
+Works for every assigned arch family: full-attention KV caches, sliding-
+window ring buffers, and O(1) recurrent state (rec/ssm) — the same code
+path the decode_32k / long_500k dry-run cells lower at production scale.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.models import init_params, lm_specs
+from repro.serve import cache_bytes, decode_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    a = ap.parse_args()
+
+    cfg = reduced_config(a.arch)
+    params = init_params(lm_specs(cfg), jax.random.key(0))
+    tv = cfg.true_vocab or cfg.vocab_size
+    prompt = jax.random.randint(jax.random.key(1),
+                                (a.batch, a.prompt_len), 0, tv)
+    extras = {}
+    if cfg.enc_layers:
+        extras["enc_feats"] = jax.random.normal(
+            jax.random.key(2), (a.batch, cfg.enc_seq, cfg.d_model))
+    if cfg.num_image_tokens:
+        extras["img_embeds"] = jax.random.normal(
+            jax.random.key(3), (a.batch, cfg.num_image_tokens, cfg.d_model))
+
+    cl = a.prompt_len + a.steps
+    print(f"arch={cfg.name} batch={a.batch} prompt={a.prompt_len} "
+          f"gen={a.steps} cache={cache_bytes(cfg, a.batch, cl)/1e6:.2f}MB")
+    t0 = time.time()
+    toks = decode_loop(params, cfg, prompt, a.steps, cache_len=cl,
+                       temperature=a.temperature, extras=extras)
+    dt = time.time() - t0
+    print(f"decoded {a.batch}x{a.steps} tokens in {dt:.2f}s "
+          f"({a.batch*a.steps/dt:.1f} tok/s on CPU)")
+    print("first sequence:", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model/shape/mesh configuration."""
+from .base import MeshConfig, ModelConfig, SHAPES, ShapeConfig, TrainConfig
+from .registry import (ARCHS, LONG_CONTEXT_OK, arch_shapes, canon,
+                       get_config, padded_vocab, reduced_config)
+
+__all__ = [
+    "MeshConfig", "ModelConfig", "SHAPES", "ShapeConfig", "TrainConfig",
+    "ARCHS", "LONG_CONTEXT_OK", "arch_shapes", "canon", "get_config",
+    "padded_vocab", "reduced_config",
+]

@@ -1,0 +1,62 @@
+"""Architecture registry: one module per assigned arch, plus shape rules.
+
+Shape-cell rules from the brief:
+  * ``long_500k`` (524288-ctx decode) only for sub-quadratic archs
+    (SSM / hybrid-with-sliding-window). Skips are recorded per arch.
+  * ``decode_*`` lower ``serve_step`` (1 new token against a cache), not
+    ``train_step``.
+Vocab sizes that don't divide the 16-way model axis are padded (Megatron
+convention, multiple of 256); labels never reference pad ids and the loss
+masks pad columns.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from .base import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = [
+    "recurrentgemma_2b",
+    "qwen3_moe_30b_a3b",
+    "granite_moe_3b_a800m",
+    "whisper_large_v3",
+    "mamba2_130m",
+    "phi3_vision_4_2b",
+    "qwen3_14b",
+    "gemma_7b",
+    "stablelm_3b",
+    "llama3_405b",
+]
+
+# archs able to decode at 524288 context (sub-quadratic sequence mixing)
+LONG_CONTEXT_OK = {"recurrentgemma_2b", "mamba2_130m"}
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.CONFIG
+
+
+def reduced_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.REDUCED
+
+
+def arch_shapes(name: str) -> List[ShapeConfig]:
+    """The assigned shape cells for this arch (with documented skips)."""
+    name = canon(name)
+    out = []
+    for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        if s == "long_500k" and name not in LONG_CONTEXT_OK:
+            continue        # full-attention arch: documented skip
+        out.append(SHAPES[s])
+    return out
+
+
+def padded_vocab(v: int, mult: int = 256) -> int:
+    return ((v + mult - 1) // mult) * mult

@@ -1,0 +1,27 @@
+"""PowerTCP core: control laws, power computation, fluid-model simulator."""
+from .types import (Flows, PathObs, Record, SimConfig, SimState, Topology,
+                    GBPS, KB, MB, MTU, US)
+from .laws import (LAWS, Law, LawConfig, get_law, norm_power_int,
+                   norm_power_theta)
+from .fluid import FluidSim, default_law_config, init_state, simulate, step
+from .network import LeafSpine, make_flows_single, single_bottleneck
+from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
+                       poisson_websearch, synthetic_incast_workload,
+                       websearch_mean, websearch_sample)
+from .rdcn import (CircuitSchedule, circuit_utilization, make_retcp_law,
+                   queuing_latency_percentile, voq_topology)
+from . import analysis
+
+__all__ = [
+    "Flows", "PathObs", "Record", "SimConfig", "SimState", "Topology",
+    "GBPS", "KB", "MB", "MTU", "US",
+    "LAWS", "Law", "LawConfig", "get_law", "norm_power_int",
+    "norm_power_theta",
+    "FluidSim", "default_law_config", "init_state", "simulate", "step",
+    "LeafSpine", "make_flows_single", "single_bottleneck",
+    "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "poisson_websearch",
+    "synthetic_incast_workload", "websearch_mean", "websearch_sample",
+    "CircuitSchedule", "circuit_utilization", "make_retcp_law",
+    "queuing_latency_percentile", "voq_topology",
+    "analysis",
+]

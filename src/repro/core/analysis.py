@@ -1,0 +1,100 @@
+"""Analytical tools: phase-plane trajectories (paper Fig. 3), equilibria and
+linearized eigenvalues (Theorem 1), convergence constants (Theorem 2) and the
+fairness fixed point (Theorem 3).
+
+These integrate the paper's ODE system directly (Eqs. 9/10 + the per-class
+window dynamics of Appendix C), independent of the event-driven fluid
+simulator — exactly how the paper produces Fig. 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ODEConfig:
+    b: float = 12.5e9            # bottleneck bandwidth (bytes/s) == 100 Gbps
+    tau: float = 20e-6           # base RTT (seconds)
+    gamma_r: float = 0.9 / 20e-6  # gamma / delta_t with delta_t = one RTT
+    beta_hat: float = 12.5e9 * 20e-6 / 10.0   # aggregate additive increase
+    dt: float = 0.2e-6
+    steps: int = 4000
+
+
+def _theta(q, cfg):
+    return q / cfg.b + cfg.tau
+
+
+def window_dot(kind: str, w, q, qdot, cfg: ODEConfig):
+    """Per-class aggregate window dynamics (Appendix C Eqs. 25/26/27 + Eq. 15).
+
+    kind in {voltage_q, voltage_delay, current, power}.
+    """
+    if kind == "voltage_q":          # queue-length / inflight MIMD (HPCC class)
+        e, f = cfg.b * cfg.tau, q + cfg.b * cfg.tau
+    elif kind == "voltage_delay":    # delay MIMD (Swift/FAST class)
+        e, f = cfg.tau, _theta(q, cfg)
+    elif kind == "current":          # RTT-gradient MIMD (TIMELY class)
+        e, f = 1.0, qdot / cfg.b + 1.0
+    elif kind == "power":            # PowerTCP: reduces to Eq. 15
+        return cfg.gamma_r * (-w + cfg.b * cfg.tau + cfg.beta_hat)
+    else:
+        raise ValueError(kind)
+    return cfg.gamma_r * (w * e / jnp.maximum(f, 1e-9) - w + cfg.beta_hat)
+
+
+def trajectory(kind: str, w0: float, q0: float, cfg: ODEConfig):
+    """Euler-integrate (q, w) from an initial point. Returns [steps, 2]."""
+
+    def step(carry, _):
+        q, w = carry
+        qdot = jnp.where(q > 0.0, w / _theta(q, cfg) - cfg.b,
+                         jnp.maximum(w / _theta(q, cfg) - cfg.b, 0.0))
+        wdot = window_dot(kind, w, q, qdot, cfg)
+        q2 = jnp.maximum(q + qdot * cfg.dt, 0.0)
+        w2 = jnp.maximum(w + wdot * cfg.dt, 1e3)
+        return (q2, w2), jnp.stack([q2, w2])
+
+    (_, _), path = jax.lax.scan(step, (jnp.float32(q0), jnp.float32(w0)),
+                                None, length=cfg.steps)
+    return path
+
+
+def phase_portrait(kind: str, cfg: ODEConfig, grid: int = 5):
+    """Trajectories from a grid of initial (q0, w0) points (Fig. 3)."""
+    bdp = cfg.b * cfg.tau
+    q0s = np.linspace(0.0, 4.0 * bdp, grid)
+    w0s = np.linspace(0.2 * bdp, 3.0 * bdp, grid)
+    paths = []
+    for q0 in q0s:
+        for w0 in w0s:
+            paths.append(np.asarray(trajectory(kind, w0, q0, cfg)))
+    return np.stack(paths)          # [grid^2, steps, 2]
+
+
+def equilibrium_powertcp(cfg: ODEConfig) -> Tuple[float, float]:
+    """(w_e, q_e) = (b*tau + beta_hat, beta_hat) — Theorem 1."""
+    return cfg.b * cfg.tau + cfg.beta_hat, cfg.beta_hat
+
+
+def eigenvalues_powertcp(cfg: ODEConfig) -> Tuple[float, float]:
+    """Linearization eigenvalues (-1/tau, -gamma_r) — proof of Theorem 1."""
+    return -1.0 / cfg.tau, -cfg.gamma_r
+
+
+def convergence_time_constant(gamma: float, delta_t: float) -> float:
+    """Theorem 2: exponential decay constant delta_t / gamma."""
+    return delta_t / gamma
+
+
+def endpoint_spread(kind: str, cfg: ODEConfig, grid: int = 4) -> float:
+    """Spread of final queue lengths across initial conditions, normalized by
+    BDP. ~0 => unique equilibrium (voltage/power); >>0 => none (current)."""
+    paths = phase_portrait(kind, cfg, grid)
+    finals = paths[:, -1, 0]
+    return float((finals.max() - finals.min()) / (cfg.b * cfg.tau))

@@ -1,0 +1,226 @@
+"""Vectorized fluid-model network simulator.
+
+Implements the paper's analytical model (Eqs. 4/9/10 and Appendix A) as a
+jittable ``lax.scan`` over time steps:
+
+  queue dynamics    qdot_j = sum_i[i traverses j] lam_i(t - tf_i) - mu_j
+  flow rates        lam_i  = min(w_i / theta_i, rate_cap_i, nic_i)
+  measured RTT      theta_i = tau_i + sum_j on path q_j / b_j
+  feedback delay    senders observe bottleneck state theta_i seconds late
+
+Control laws (laws.py) fire on per-flow timers (default once per measured
+RTT). Telemetry is taken from ring-buffer histories, exactly the INT metadata
+of Algorithm 1 (qlen, its gradient, txRate, bandwidth) plus the RTT sample
+used by the theta variant.
+
+Deviations from a packet simulator are documented in DESIGN.md section 9:
+no per-packet loss/retransmit (losses appear as capped queues), store-and-
+forward shaping across hops is not modelled, and ECN feedback uses the
+expected marking fraction.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .laws import Law, LawConfig, get_law
+from .types import (MTU, Flows, PathObs, Record, SimConfig, SimState,
+                    Topology)
+
+
+def default_law_config(flows: Flows, gamma: float = 0.9,
+                       expected_flows: float = 1.0, **kw) -> LawConfig:
+    """Paper parameterization: beta = HostBw * tau / N."""
+    beta = flows.nic_rate * flows.tau / expected_flows
+    return LawConfig(gamma=gamma, beta=beta, tau=flows.tau,
+                     host_bw=flows.nic_rate, **kw)
+
+
+def _marking(q: jnp.ndarray, buf: jnp.ndarray, cfg: LawConfig) -> jnp.ndarray:
+    """ECN marking probability + hard mark when a hop's buffer is ~full."""
+    p = jnp.clip((q - cfg.dcqcn_kmin) /
+                 jnp.maximum(cfg.dcqcn_kmax - cfg.dcqcn_kmin, 1.0),
+                 0.0, 1.0) * cfg.dcqcn_pmax
+    hard = q >= 0.95 * buf
+    return jnp.where(hard, 1.0, p)
+
+
+class FluidSim(NamedTuple):
+    topo: Topology
+    flows: Flows
+    law: Law
+    law_cfg: LawConfig
+    cfg: SimConfig
+
+
+def init_state(sim: FluidSim) -> SimState:
+    topo, flows, cfg = sim.topo, sim.flows, sim.cfg
+    F = flows.tau.shape[0]
+    Q = topo.num_queues
+    D = cfg.hist
+    w0 = flows.nic_rate * flows.tau          # cwnd_init = HostBw * tau
+    law_state = sim.law.init(F, sim.law_cfg)
+    return SimState(
+        t=jnp.asarray(0, jnp.int32),
+        w=w0.astype(jnp.float32),
+        rate_cap=jnp.full((F,), jnp.inf, jnp.float32),
+        q=jnp.zeros((Q + 1,), jnp.float32),
+        out_rate=jnp.zeros((Q + 1,), jnp.float32),
+        hist_lam=jnp.zeros((D, F), jnp.float32),
+        hist_q=jnp.zeros((D, Q + 1), jnp.float32),
+        hist_out=jnp.zeros((D, Q + 1), jnp.float32),
+        hist_w=jnp.broadcast_to(w0, (D, F)).astype(jnp.float32),
+        remaining=flows.size.astype(jnp.float32),
+        fct=jnp.full((F,), jnp.nan, jnp.float32),
+        next_update=(flows.start + flows.tau).astype(jnp.float32),
+        last_update=flows.start.astype(jnp.float32),
+        law=law_state,
+    )
+
+
+def _bandwidth(topo: Topology, bw_fn, t_sec):
+    bw = topo.bandwidth if bw_fn is None else bw_fn(t_sec)
+    return jnp.concatenate([bw, jnp.asarray([1e15], jnp.float32)])
+
+
+def _buffer_caps(topo: Topology, q: jnp.ndarray) -> jnp.ndarray:
+    """Per-queue caps; Dynamic Thresholds [17] when dt_alpha > 0."""
+    buf = jnp.concatenate([topo.buffer, jnp.asarray([1e30], jnp.float32)])
+    if topo.dt_alpha <= 0:
+        return buf
+    used = jax.ops.segment_sum(q[:-1], topo.switch_of_queue,
+                               num_segments=topo.num_switches)
+    free = jnp.maximum(topo.switch_buffer - used, 0.0)
+    thr = topo.dt_alpha * free[topo.switch_of_queue]
+    thr = jnp.concatenate([jnp.minimum(thr, topo.buffer),
+                           jnp.asarray([1e30], jnp.float32)])
+    return thr
+
+
+def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
+    topo, flows, cfg, law_cfg = sim.topo, sim.flows, sim.cfg, sim.law_cfg
+    D = cfg.hist
+    dt = cfg.dt
+    F = flows.tau.shape[0]
+    t_sec = state.t.astype(jnp.float32) * dt
+    ptr = jnp.mod(state.t, D)
+    bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
+
+    active = ((t_sec >= flows.start) & (state.remaining > 0.0) &
+              (t_sec < flows.stop))
+    # -- instantaneous RTT and send rates ---------------------------------
+    q_hop = state.q[flows.path]                               # [F,H]
+    b_hop = bw[flows.path]
+    valid = flows.path < topo.num_queues
+    theta_now = flows.tau + jnp.sum(
+        jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
+    lam = jnp.where(active,
+                    jnp.minimum(jnp.minimum(state.w / theta_now,
+                                            state.rate_cap),
+                                flows.nic_rate), 0.0)
+
+    # -- histories at current time ----------------------------------------
+    hist_lam = state.hist_lam.at[ptr].set(lam)
+    hist_w = state.hist_w.at[ptr].set(state.w)
+
+    # -- queue update ------------------------------------------------------
+    hop_delay_idx = jnp.mod(ptr - flows.tf_steps, D)          # [F,H]
+    lam_del = hist_lam[hop_delay_idx, jnp.arange(F)[:, None]]  # [F,H]
+    contrib = jnp.where(valid, lam_del, 0.0)
+    arr = jnp.zeros_like(state.q).at[flows.path].add(contrib)
+    out = jnp.where(state.q > 0.0, bw, jnp.minimum(arr, bw))
+    caps = _buffer_caps(topo, state.q)
+    q_new = jnp.clip(state.q + (arr - out) * dt, 0.0, caps)
+    q_new = q_new.at[-1].set(0.0)
+    hist_q = state.hist_q.at[ptr].set(q_new)
+    hist_out = state.hist_out.at[ptr].set(out)
+
+    # -- delayed observation ------------------------------------------------
+    # INT metadata of hop h is stamped when a segment *dequeues* there and
+    # reaches the sender after the backward propagation delay
+    # tb_h = rtt_prop - tf_h (paper section 3.3: "all values correspond to
+    # the time when the packet is scheduled for transmission"). The RTT the
+    # sender measures is reconstructed from the same snapshot:
+    # theta = tau + sum_h q_obs_h / b_h. w_old (GETCWND of the acked seq) is
+    # the window one measured-RTT ago.
+    tb_steps = jnp.clip(flows.rtt_steps[:, None] - flows.tf_steps, 1, D - 2)
+    ohidx = jnp.mod(ptr - tb_steps, D)                        # [F,H]
+    ohprev = jnp.mod(ohidx - 1, D)
+    fidx = jnp.arange(F)
+    q_obs = hist_q[ohidx, flows.path]
+    q_obs_prev = hist_q[ohprev, flows.path]
+    qdot_obs = (q_obs - q_obs_prev) / dt
+    mu_obs = hist_out[ohidx, flows.path]
+    theta_obs = flows.tau + jnp.sum(
+        jnp.where(valid, q_obs / b_hop, 0.0), axis=1)
+    wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
+                          1, D - 2)
+    w_old = hist_w[jnp.mod(ptr - wold_delay, D), fidx]
+    buf_hop = jnp.concatenate(
+        [topo.buffer, jnp.asarray([1e30], jnp.float32)])[flows.path]
+    ecn = jnp.max(jnp.where(valid, _marking(q_obs, buf_hop, law_cfg), 0.0),
+                  axis=1)
+
+    upd = active & (t_sec >= state.next_update)
+    dt_obs = jnp.maximum(t_sec - state.last_update, dt)
+    obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=bw[flows.path],
+                  valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
+                  ecn_frac=ecn)
+
+    law_state, w, rate_cap = sim.law.update(
+        state.law, obs, state.w, state.rate_cap, upd, law_cfg, t_sec)
+    w = jnp.clip(w, MTU, 8.0 * flows.nic_rate * flows.tau +
+                 8.0 * flows.nic_rate * theta_now)
+    period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
+    next_update = jnp.where(upd, t_sec + period, state.next_update)
+    last_update = jnp.where(upd, t_sec, state.last_update)
+
+    if alloc_fn is not None:
+        rate_cap = alloc_fn(state.remaining, active, t_sec, flows, rate_cap)
+
+    # -- flow progress ------------------------------------------------------
+    remaining = jnp.where(active, state.remaining - lam * dt, state.remaining)
+    done = active & (remaining <= 0.0)
+    fct = jnp.where(done & jnp.isnan(state.fct),
+                    t_sec + flows.tau / 2.0 - flows.start, state.fct)
+
+    new_state = SimState(
+        t=state.t + 1, w=w, rate_cap=rate_cap, q=q_new, out_rate=out,
+        hist_lam=hist_lam, hist_q=hist_q, hist_out=hist_out, hist_w=hist_w,
+        remaining=remaining, fct=fct,
+        next_update=next_update, last_update=last_update, law=law_state)
+    rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(jnp.where(active, w, 0.0)),
+                 thru=out, lam=jnp.sum(lam), lam_f=lam)
+    return new_state, rec
+
+
+def simulate(topo: Topology, flows: Flows, law_name: str,
+             law_cfg: Optional[LawConfig] = None,
+             cfg: Optional[SimConfig] = None,
+             bw_fn: Optional[Callable] = None,
+             alloc_fn: Optional[Callable] = None,
+             record: bool = True):
+    """Run a scenario to completion. Returns (final_state, Record pytree).
+
+    The whole scenario (topology, flows, law) is closed over and jitted as a
+    unit; hist buffers live in the carried state so the scan is O(1) memory.
+    """
+    cfg = cfg or SimConfig()
+    law = get_law(law_name)
+    law_cfg = law_cfg or default_law_config(flows)
+    sim = FluidSim(topo, flows, law, law_cfg, cfg)
+    state = init_state(sim)
+
+    def body(st, _):
+        st, rec = step(sim, st, bw_fn=bw_fn, alloc_fn=alloc_fn)
+        return st, (rec if record else None)
+
+    @jax.jit
+    def run(st):
+        return jax.lax.scan(body, st, None, length=cfg.steps)
+
+    final, recs = run(state)
+    return final, recs
+

@@ -1,0 +1,372 @@
+"""Congestion-control laws.
+
+Every law is a pure-JAX pair ``init(nflows, cfg) -> state`` and
+``update(state, obs, w, rate_cap, upd_mask, cfg, t) -> (state, w, rate_cap)``
+operating on per-flow vectors. The fluid simulator (``fluid.py``) calls
+``update`` every step; laws apply their control action only where
+``upd_mask`` is set (the per-flow update timer fired — per-RTT by default,
+matching the paper's once-per-RTT variant and theta-PowerTCP).
+
+Implemented laws
+  powertcp        Algorithm 1 (INT feedback; per-hop max normalized power)
+  theta_powertcp  Algorithm 2 (RTT + RTT-gradient only)
+  hpcc            HPCC (Li et al., SIGCOMM'19) inflight-MIMD w/ per-RTT wc ref
+  swift           delay-based MIMD (paper Eq. 26 — Swift/FAST class)
+  timely          TIMELY (Mittal et al.) gradient-based rate control w/ HAI
+  gradient_mimd   paper Eq. 27 (pure RTT-gradient MIMD; used for phase plots)
+  dcqcn           DCQCN fluid approximation (ECN + alpha, RP increase stages)
+  reno            NewReno-style AI/MD on loss (basis for reTCP in rdcn.py)
+
+The electrical analogy (Table 1 of the paper):
+  current  lambda = qdot + mu          [bytes/s]
+  voltage  v      = q + b*tau          [bytes]
+  power    Gamma  = lambda * v         [bytes^2/s],  e = b^2 * tau
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from .types import PathObs, MTU
+
+
+class LawConfig(NamedTuple):
+    # shared
+    gamma: float = 0.9              # EWMA parameter (paper recommendation)
+    beta: jnp.ndarray = None        # [F] additive increase (bytes) = HostBw*tau/N
+    tau: jnp.ndarray = None         # [F] base RTT (seconds)
+    host_bw: jnp.ndarray = None     # [F] NIC rate (bytes/s)
+    # hpcc
+    hpcc_eta: float = 0.95
+    hpcc_max_stage: int = 5
+    # timely
+    t_low: jnp.ndarray = None       # [F] seconds (default 1.5*tau)
+    t_high: jnp.ndarray = None      # [F] seconds (default 3*tau)
+    timely_add: jnp.ndarray = None  # [F] additive step bytes/s
+    timely_beta: float = 0.8
+    timely_hai_n: int = 5
+    # dcqcn
+    dcqcn_kmin: float = 400e3       # bytes (NS3 100G-scaled defaults)
+    dcqcn_kmax: float = 1.6e6
+    dcqcn_pmax: float = 0.2
+    dcqcn_g: float = 1.0 / 256.0
+    dcqcn_rai: float = 50e6         # bytes/s additive increase (~400Mbps)
+    dcqcn_timer: float = 55e-6      # rate-increase timer (seconds, scaled down)
+    dcqcn_cnp_timer: float = 50e-6  # min interval between rate cuts (CNP gen)
+    dcqcn_f: int = 5                # fast-recovery stages
+    # reno
+    reno_md: float = 0.5
+
+
+# --------------------------------------------------------------------------
+# Power computation (Algorithm 1, NORMPOWER) — shared helper
+# --------------------------------------------------------------------------
+
+def norm_power_int(obs: PathObs, cfg: LawConfig) -> jnp.ndarray:
+    """Per-flow max over path hops of normalized power (INT variant).
+
+    Gamma'      = (qdot + mu) * (q + b*tau)     (current * voltage)
+    e           = b^2 * tau
+    Gamma'_norm = Gamma' / e
+    """
+    tau = cfg.tau[:, None]
+    current = obs.qdot + obs.mu                      # [F,H] bytes/s
+    voltage = obs.q + obs.b * tau                    # [F,H] bytes
+    base = jnp.square(obs.b) * tau                   # [F,H]
+    g = jnp.where(obs.valid, (current * voltage) / jnp.maximum(base, 1.0), 0.0)
+    return jnp.max(g, axis=1)                        # [F]
+
+
+def norm_power_theta(theta: jnp.ndarray, theta_prev: jnp.ndarray,
+                     dt_obs: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """theta-PowerTCP (Algorithm 2): Gamma_norm = (thetadot + 1) * theta / tau."""
+    thetadot = (theta - theta_prev) / jnp.maximum(dt_obs, 1e-12)
+    return (thetadot + 1.0) * theta / jnp.maximum(tau, 1e-12)
+
+
+def _smooth(prev: jnp.ndarray, new: jnp.ndarray, dt_obs: jnp.ndarray,
+            tau: jnp.ndarray) -> jnp.ndarray:
+    """Gamma_smooth update (Alg. 1 line 24), with dt clipped to tau."""
+    d = jnp.clip(dt_obs, 0.0, tau)
+    return (prev * (tau - d) + new * d) / jnp.maximum(tau, 1e-12)
+
+
+def _mimd_update(w, w_old, norm_power, cfg: LawConfig, upd_mask):
+    """UPDATEWINDOW (Alg. 1 line 27): EWMA of (w_old / Gamma_norm + beta)."""
+    target = w_old / jnp.maximum(norm_power, 1e-9) + cfg.beta
+    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    return jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+
+
+# --------------------------------------------------------------------------
+# PowerTCP (INT)
+# --------------------------------------------------------------------------
+
+class PowerTCPState(NamedTuple):
+    gamma_smooth: jnp.ndarray       # [F]
+
+
+def powertcp_init(n, cfg):
+    return PowerTCPState(gamma_smooth=jnp.ones((n,), jnp.float32))
+
+
+def powertcp_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    gnorm = norm_power_int(obs, cfg)
+    gs = jnp.where(upd_mask,
+                   _smooth(state.gamma_smooth, gnorm, obs.dt_obs, cfg.tau),
+                   state.gamma_smooth)
+    w = _mimd_update(w, obs.w_old, gs, cfg, upd_mask)
+    return PowerTCPState(gs), w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# theta-PowerTCP (timestamps only)
+# --------------------------------------------------------------------------
+
+class ThetaPowerTCPState(NamedTuple):
+    gamma_smooth: jnp.ndarray
+    prev_theta: jnp.ndarray
+
+
+def theta_powertcp_init(n, cfg):
+    return ThetaPowerTCPState(jnp.ones((n,), jnp.float32),
+                              jnp.asarray(cfg.tau, jnp.float32) * jnp.ones((n,)))
+
+
+def theta_powertcp_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    gnorm = norm_power_theta(obs.theta, state.prev_theta, obs.dt_obs, cfg.tau)
+    gs = jnp.where(upd_mask,
+                   _smooth(state.gamma_smooth, gnorm, obs.dt_obs, cfg.tau),
+                   state.gamma_smooth)
+    w = _mimd_update(w, obs.w_old, gs, cfg, upd_mask)
+    prev = jnp.where(upd_mask, obs.theta, state.prev_theta)
+    return ThetaPowerTCPState(gs, prev), w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# HPCC
+# --------------------------------------------------------------------------
+
+class HPCCState(NamedTuple):
+    u: jnp.ndarray                  # EWMA max-link utilization proxy
+    wc: jnp.ndarray                 # per-RTT reference window
+    inc_stage: jnp.ndarray          # int32
+    last_ref: jnp.ndarray           # time of last wc reference update
+
+
+def hpcc_init(n, cfg):
+    return HPCCState(jnp.ones((n,), jnp.float32),
+                     jnp.asarray(cfg.host_bw * cfg.tau, jnp.float32) * jnp.ones((n,)),
+                     jnp.zeros((n,), jnp.int32),
+                     jnp.zeros((n,), jnp.float32))
+
+
+def hpcc_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """HPCC: per-ack window update against a once-per-RTT reference wc
+    (Li et al. SIGCOMM'19, Alg. 1). upd_mask may fire per-ack or per-RTT;
+    the wc reference advances at most once per measured RTT either way."""
+    tau = cfg.tau[:, None]
+    u_link = jnp.where(obs.valid,
+                       obs.q / jnp.maximum(obs.b * tau, 1.0) +
+                       obs.mu / jnp.maximum(obs.b, 1.0), 0.0)
+    u_max = jnp.max(u_link, axis=1)
+    u = jnp.where(upd_mask, _smooth(state.u, u_max, obs.dt_obs, cfg.tau), state.u)
+    over = (u >= cfg.hpcc_eta) | (state.inc_stage >= cfg.hpcc_max_stage)
+    w_mimd = state.wc / jnp.maximum(u / cfg.hpcc_eta, 1e-6) + cfg.beta
+    w_ai = state.wc + cfg.beta
+    w_new = jnp.where(over, w_mimd, w_ai)
+    w_out = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+    ref = upd_mask & (t - state.last_ref >= obs.theta)
+    wc = jnp.where(ref, w_out, state.wc)
+    inc = jnp.where(ref, jnp.where(over, 0, state.inc_stage + 1),
+                    state.inc_stage)
+    last_ref = jnp.where(ref, t, state.last_ref)
+    return HPCCState(u, wc, inc, last_ref), w_out, rate_cap
+
+
+# --------------------------------------------------------------------------
+# Swift / FAST class: delay-based MIMD (paper Eq. 26)
+# --------------------------------------------------------------------------
+
+class SwiftState(NamedTuple):
+    dummy: jnp.ndarray
+
+
+def swift_init(n, cfg):
+    return SwiftState(jnp.zeros((n,), jnp.float32))
+
+
+def swift_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    f = jnp.maximum(obs.theta, 1e-12)
+    target = obs.w_old * cfg.tau / f + cfg.beta
+    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+    return state, w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# Pure RTT-gradient MIMD (paper Eq. 27) — current-based CC for phase plots
+# --------------------------------------------------------------------------
+
+class GradState(NamedTuple):
+    prev_theta: jnp.ndarray
+
+
+def gradient_init(n, cfg):
+    return GradState(jnp.asarray(cfg.tau, jnp.float32) * jnp.ones((n,)))
+
+
+def gradient_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    thetadot = (obs.theta - state.prev_theta) / jnp.maximum(obs.dt_obs, 1e-12)
+    f = jnp.maximum(thetadot + 1.0, 1e-2)
+    target = obs.w_old / f + cfg.beta
+    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+    prev = jnp.where(upd_mask, obs.theta, state.prev_theta)
+    return GradState(prev), w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# TIMELY (rate-based, gradient + HAI)
+# --------------------------------------------------------------------------
+
+class TimelyState(NamedTuple):
+    rate: jnp.ndarray
+    prev_theta: jnp.ndarray
+    neg_count: jnp.ndarray          # consecutive negative-gradient counter
+
+
+def timely_init(n, cfg):
+    return TimelyState(jnp.asarray(cfg.host_bw, jnp.float32) * jnp.ones((n,)),
+                       jnp.asarray(cfg.tau, jnp.float32) * jnp.ones((n,)),
+                       jnp.zeros((n,), jnp.int32))
+
+
+def timely_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    t_low = cfg.t_low if cfg.t_low is not None else 1.5 * cfg.tau
+    t_high = cfg.t_high if cfg.t_high is not None else 3.0 * cfg.tau
+    add = cfg.timely_add if cfg.timely_add is not None else cfg.host_bw / 100.0
+    grad = (obs.theta - state.prev_theta) / jnp.maximum(cfg.tau, 1e-12)  # normalized
+    neg = jnp.where(grad <= 0, state.neg_count + 1, 0)
+    hai = neg >= cfg.timely_hai_n
+    r = state.rate
+    r_low = r + jnp.where(hai, cfg.timely_hai_n * add, add)
+    r_high = r * (1.0 - cfg.timely_beta * (1.0 - t_high / jnp.maximum(obs.theta, 1e-12)))
+    r_grad_neg = r + jnp.where(hai, cfg.timely_hai_n * add, add)
+    r_grad_pos = r * jnp.maximum(1.0 - cfg.timely_beta * grad, 0.5)
+    r_mid = jnp.where(grad <= 0, r_grad_neg, r_grad_pos)
+    r_new = jnp.where(obs.theta < t_low, r_low,
+                      jnp.where(obs.theta > t_high, r_high, r_mid))
+    r_new = jnp.clip(r_new, 0.001 * cfg.host_bw, cfg.host_bw)
+    rate = jnp.where(upd_mask, r_new, state.rate)
+    # window bookkeeping: keep w tracking rate*theta so FCT logic stays uniform
+    w = jnp.where(upd_mask, jnp.maximum(rate * obs.theta, MTU), w)
+    prev = jnp.where(upd_mask, obs.theta, state.prev_theta)
+    return TimelyState(rate, prev, jnp.where(upd_mask, neg, state.neg_count)), w, rate
+
+
+# --------------------------------------------------------------------------
+# DCQCN (fluid approximation)
+# --------------------------------------------------------------------------
+
+class DCQCNState(NamedTuple):
+    rc: jnp.ndarray                 # current rate
+    rt: jnp.ndarray                 # target rate
+    alpha: jnp.ndarray
+    t_last_cut: jnp.ndarray
+    t_last_inc: jnp.ndarray
+    inc_stage: jnp.ndarray
+
+
+def dcqcn_init(n, cfg):
+    hb = jnp.asarray(cfg.host_bw, jnp.float32) * jnp.ones((n,))
+    z = jnp.zeros((n,), jnp.float32)
+    return DCQCNState(hb, hb, jnp.ones((n,), jnp.float32), z, z,
+                      jnp.zeros((n,), jnp.int32))
+
+
+def dcqcn_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """ECN-marking-driven rate control. ``upd_mask`` fires per RTT; timers
+    gate the actual cut/increase cadence."""
+    p = obs.ecn_frac                                  # marking prob at bottleneck
+    # probability >=1 marked packet among packets sent since last update
+    pkts = jnp.maximum(state.rc * obs.dt_obs / MTU, 1.0)
+    pe = 1.0 - jnp.power(jnp.clip(1.0 - p, 0.0, 1.0), pkts)
+    cut = upd_mask & (pe > 0.01) & (t - state.t_last_cut >= cfg.dcqcn_cnp_timer)
+    alpha = jnp.where(cut, (1.0 - cfg.dcqcn_g) * state.alpha + cfg.dcqcn_g * pe,
+                      state.alpha)
+    rt = jnp.where(cut, state.rc, state.rt)
+    # expected-value (fluid) cut: scale the alpha/2 cut by the mark fraction
+    rc = jnp.where(cut, state.rc * (1.0 - 0.5 * alpha * jnp.minimum(pe, 1.0)),
+                   state.rc)
+    t_cut = jnp.where(cut, t, state.t_last_cut)
+    # increase path: timer since last increase and no recent cut
+    can_inc = upd_mask & (~cut) & (t - state.t_last_inc >= cfg.dcqcn_timer)
+    stage = jnp.where(cut, 0, state.inc_stage)
+    fast = stage < cfg.dcqcn_f
+    hyper = stage >= 2 * cfg.dcqcn_f
+    rai = jnp.where(hyper, 5.0 * cfg.dcqcn_rai, cfg.dcqcn_rai)
+    rt_inc = jnp.where(fast, rt, rt + rai)
+    rc_inc = 0.5 * (rc + rt_inc)
+    rc = jnp.where(can_inc, rc_inc, rc)
+    rt = jnp.where(can_inc, rt_inc, rt)
+    stage = jnp.where(can_inc, stage + 1, stage)
+    t_inc = jnp.where(can_inc, t, state.t_last_inc)
+    # alpha decay toward 0 when no congestion (per DCQCN alpha-update timer)
+    alpha = jnp.where(can_inc, (1.0 - cfg.dcqcn_g) * alpha, alpha)
+    rc = jnp.clip(rc, 0.001 * cfg.host_bw, cfg.host_bw)
+    w = jnp.where(upd_mask, jnp.maximum(rc * jnp.maximum(obs.theta, cfg.tau), MTU), w)
+    return DCQCNState(rc, rt, alpha, t_cut, t_inc, stage), w, rc
+
+
+# --------------------------------------------------------------------------
+# NewReno-ish AI/MD (loss == bottleneck queue at capacity). Used by reTCP.
+# --------------------------------------------------------------------------
+
+class RenoState(NamedTuple):
+    last_cut: jnp.ndarray
+
+
+def reno_init(n, cfg):
+    return RenoState(jnp.zeros((n,), jnp.float32))
+
+
+def reno_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    # loss proxy: observed bottleneck queue within one MTU of the buffer cap is
+    # signalled by the simulator via ecn_frac >= 1 (hard mark).
+    loss = obs.ecn_frac >= 1.0
+    can_cut = upd_mask & loss & (t - state.last_cut > obs.theta)
+    w_cut = w * cfg.reno_md
+    w_ai = w + jnp.where(upd_mask, MTU * cfg.beta / jnp.maximum(cfg.beta, 1e-9), 0.0)
+    w_new = jnp.where(can_cut, w_cut, jnp.where(upd_mask, w + MTU, w))
+    del w_ai
+    w_new = jnp.maximum(w_new, MTU)
+    last = jnp.where(can_cut, t, state.last_cut)
+    return RenoState(last), w_new, rate_cap
+
+
+class Law(NamedTuple):
+    name: str
+    init: Callable
+    update: Callable
+    rate_based: bool = False
+
+
+LAWS = {
+    "powertcp": Law("powertcp", powertcp_init, powertcp_update),
+    "theta_powertcp": Law("theta_powertcp", theta_powertcp_init,
+                          theta_powertcp_update),
+    "hpcc": Law("hpcc", hpcc_init, hpcc_update),
+    "swift": Law("swift", swift_init, swift_update),
+    "gradient_mimd": Law("gradient_mimd", gradient_init, gradient_update),
+    "timely": Law("timely", timely_init, timely_update, rate_based=True),
+    "dcqcn": Law("dcqcn", dcqcn_init, dcqcn_update, rate_based=True),
+    "reno": Law("reno", reno_init, reno_update),
+}
+
+
+def get_law(name: str) -> Law:
+    if name not in LAWS:
+        raise KeyError(f"unknown law '{name}'; have {sorted(LAWS)}")
+    return LAWS[name]

@@ -1,0 +1,158 @@
+"""Topology and scenario builders for the fluid simulator.
+
+Two fabrics:
+  * ``single_bottleneck`` — the paper's analytical model (one shared queue).
+  * ``leaf_spine``        — oversubscribed datacenter fabric for the FCT
+                            experiments (server 25G links, 100G fabric links,
+                            per-queue model of ToR uplinks / spine downlinks /
+                            host downlinks, ECMP by flow hash).
+
+All builders return (Topology, path-metadata) and helper closures to turn a
+set of (src, dst, size, start) tuples into a ``Flows`` batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .types import Flows, Topology, GBPS, US
+
+
+def single_bottleneck(bandwidth: float = 25 * GBPS,
+                      buffer: float = 6e6,
+                      dt_alpha: float = 0.0) -> Topology:
+    return Topology(
+        num_queues=1,
+        bandwidth=jnp.asarray([bandwidth], jnp.float32),
+        buffer=jnp.asarray([buffer], jnp.float32),
+        switch_of_queue=jnp.asarray([0], jnp.int32),
+        num_switches=1,
+        switch_buffer=jnp.asarray([buffer], jnp.float32),
+        dt_alpha=dt_alpha,
+    )
+
+
+def make_flows_single(n: int, tau: float, nic: float,
+                      sizes=None, starts=None, stops=None,
+                      weights=None, sim_dt: float = 1e-6,
+                      hops_fwd_delay: float = 0.5) -> Flows:
+    """All n flows traverse the single queue 0."""
+    size = jnp.full((n,), jnp.inf, jnp.float32) if sizes is None \
+        else jnp.asarray(sizes, jnp.float32)
+    start = jnp.zeros((n,), jnp.float32) if starts is None \
+        else jnp.asarray(starts, jnp.float32)
+    stop = jnp.full((n,), jnp.inf, jnp.float32) if stops is None \
+        else jnp.asarray(stops, jnp.float32)
+    weight = jnp.ones((n,), jnp.float32) if weights is None \
+        else jnp.asarray(weights, jnp.float32)
+    tf = int(round(hops_fwd_delay * tau / sim_dt))
+    return Flows(
+        path=jnp.zeros((n, 1), jnp.int32),
+        tf_steps=jnp.full((n, 1), tf, jnp.int32),
+        rtt_steps=jnp.full((n,), max(int(round(tau / sim_dt)), 1), jnp.int32),
+        tau=jnp.full((n,), tau, jnp.float32),
+        nic_rate=jnp.full((n,), nic, jnp.float32),
+        size=size, start=start, stop=stop, weight=weight,
+    )
+
+
+@dataclasses.dataclass
+class LeafSpine:
+    """Queue layout:
+      up[r, s]      ToR r -> spine s uplink          idx = r*S + s
+      down[s, r]    spine s -> ToR r downlink        idx = R*S + s*R + r
+      host[r, h]    ToR r -> host (r,h) downlink     idx = 2*R*S + r*H + h
+    """
+    racks: int = 4
+    hosts_per_rack: int = 16
+    spines: int = 1
+    host_bw: float = 25 * GBPS                   # 25 Gbps server links
+    fabric_bw: float = 100 * GBPS                # 100 Gbps fabric links
+    d_host: float = 1 * US                       # host<->ToR propagation
+    d_fabric: float = 5 * US                     # ToR<->spine propagation
+    buffer_per_port: float = 6e6
+    switch_buffer: float = 24e6                  # Tofino-like shallow shared
+    dt_alpha: float = 1.0
+
+    def __post_init__(self):
+        R, S, H = self.racks, self.spines, self.hosts_per_rack
+        self.n_hosts = R * H
+        self.num_queues = 2 * R * S + R * H
+
+    def oversubscription(self) -> float:
+        return (self.hosts_per_rack * self.host_bw) / (self.spines * self.fabric_bw)
+
+    def topology(self) -> Topology:
+        R, S, H = self.racks, self.spines, self.hosts_per_rack
+        bw = np.concatenate([
+            np.full(R * S, self.fabric_bw),       # uplinks
+            np.full(S * R, self.fabric_bw),       # spine downlinks
+            np.full(R * H, self.host_bw),         # host downlinks
+        ]).astype(np.float32)
+        # switch ids: ToR r for uplinks & host downlinks; spine s for its ports
+        sw = np.concatenate([
+            np.repeat(np.arange(R), S),                       # up on ToR r
+            R + np.repeat(np.arange(S), R),                   # down on spine s
+            np.repeat(np.arange(R), H),                       # host on ToR r
+        ]).astype(np.int32)
+        nsw = R + S
+        return Topology(
+            num_queues=self.num_queues,
+            bandwidth=jnp.asarray(bw),
+            buffer=jnp.full((self.num_queues,), self.buffer_per_port,
+                            jnp.float32),
+            switch_of_queue=jnp.asarray(sw),
+            num_switches=nsw,
+            switch_buffer=jnp.full((nsw,), self.switch_buffer, jnp.float32),
+            dt_alpha=self.dt_alpha,
+        )
+
+    def host_down_queue(self, r, h):
+        R, S, H = self.racks, self.spines, self.hosts_per_rack
+        return 2 * R * S + r * H + h
+
+    def make_flows(self, src: np.ndarray, dst: np.ndarray, sizes: np.ndarray,
+                   starts: np.ndarray, sim_dt: float,
+                   weights: Optional[np.ndarray] = None,
+                   rng: Optional[np.random.Generator] = None) -> Flows:
+        """src/dst are host ids in [0, racks*hosts_per_rack)."""
+        R, S, H = self.racks, self.spines, self.hosts_per_rack
+        rng = rng or np.random.default_rng(0)
+        n = len(src)
+        r1, h1 = src // H, src % H
+        r2, h2 = dst // H, dst % H
+        spine = rng.integers(0, S, size=n)
+        PAD = self.num_queues
+        same_rack = r1 == r2
+        up = r1 * S + spine
+        down = R * S + spine * R + r2
+        host = 2 * R * S + r2 * H + h2
+        path = np.stack([
+            np.where(same_rack, host, up),
+            np.where(same_rack, PAD, down),
+            np.where(same_rack, PAD, host),
+        ], axis=1).astype(np.int32)
+        # forward propagation delay (seconds) to each hop's queue
+        d1 = np.where(same_rack, self.d_host, self.d_host)
+        d2 = np.where(same_rack, 0.0, self.d_host + self.d_fabric)
+        d3 = np.where(same_rack, 0.0, self.d_host + 2 * self.d_fabric)
+        tf = np.stack([d1, d2, d3], axis=1) / sim_dt
+        rtt = np.where(same_rack, 4 * self.d_host,
+                       2 * (2 * self.d_host + 2 * self.d_fabric))
+        if weights is None:
+            weights = np.ones(n)
+        return Flows(
+            path=jnp.asarray(path),
+            tf_steps=jnp.asarray(np.round(tf).astype(np.int32)),
+            rtt_steps=jnp.asarray(
+                np.maximum(np.round(rtt / sim_dt), 1).astype(np.int32)),
+            tau=jnp.asarray(rtt.astype(np.float32)),
+            nic_rate=jnp.full((n,), self.host_bw, jnp.float32),
+            size=jnp.asarray(sizes, jnp.float32),
+            start=jnp.asarray(starts, jnp.float32),
+            stop=jnp.full((n,), jnp.inf, jnp.float32),
+            weight=jnp.asarray(weights, jnp.float32),
+        )

@@ -1,0 +1,106 @@
+"""Reconfigurable-DCN (RDCN) case study (paper section 5).
+
+Model: a ToR-pair's traffic drains through one VOQ whose service rate follows
+the optical-circuit schedule — ``circuit_bw`` (100G) during this pair's "day",
+``packet_bw`` (25G) through the fallback packet fabric otherwise. A day lasts
+225us, reconfiguration ("night") 20us, and each pair is connected once per
+"week" of 24 matchings.
+
+reTCP (Mukerjee et al., NSDI'20) is modelled as NewReno plus explicit
+circuit-state feedback: the effective window is scaled by ``ratio`` while the
+circuit is up, beginning ``prebuffer`` seconds early (their prebuffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .laws import Law, LawConfig, reno_init, reno_update
+from .types import GBPS, US, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitSchedule:
+    day: float = 225 * US
+    night: float = 20 * US
+    matchings: int = 24
+    slot: int = 0                    # which matching connects our pair
+    circuit_bw: float = 100 * GBPS
+    packet_bw: float = 25 * GBPS
+
+    @property
+    def week(self) -> float:
+        return self.matchings * (self.day + self.night)
+
+    def up_fn(self) -> Callable:
+        day, night, week = self.day, self.night, self.week
+        t0 = self.slot * (day + night)
+
+        def up(t_sec):
+            ph = jnp.mod(t_sec - t0, week)
+            return (ph >= 0.0) & (ph < day)
+        return up
+
+    def bw_fn(self) -> Callable:
+        up = self.up_fn()
+
+        def bw(t_sec):
+            b = jnp.where(up(t_sec), self.circuit_bw, self.packet_bw)
+            return jnp.asarray([b], jnp.float32)
+        return bw
+
+
+def voq_topology(sched: CircuitSchedule, buffer: float = 12e6) -> Topology:
+    return Topology(
+        num_queues=1,
+        bandwidth=jnp.asarray([sched.packet_bw], jnp.float32),
+        buffer=jnp.asarray([buffer], jnp.float32),
+        switch_of_queue=jnp.asarray([0], jnp.int32),
+        num_switches=1,
+        switch_buffer=jnp.asarray([buffer], jnp.float32),
+        dt_alpha=0.0,
+    )
+
+
+class ReTCPState(NamedTuple):
+    reno: tuple
+    w_base: jnp.ndarray
+
+
+def make_retcp_law(sched: CircuitSchedule, prebuffer: float) -> Law:
+    """NewReno + circuit-aware window scaling with prebuffering."""
+    up = sched.up_fn()
+    ratio = sched.circuit_bw / sched.packet_bw
+
+    def init(n, cfg: LawConfig):
+        w0 = cfg.host_bw * cfg.tau * jnp.ones((n,), jnp.float32)
+        return ReTCPState(reno=reno_init(n, cfg), w_base=w0)
+
+    def update(state, obs, w, rate_cap, upd_mask, cfg, t):
+        rs, wb, _ = reno_update(state.reno, obs, state.w_base, rate_cap,
+                                upd_mask, cfg, t)
+        scale_on = up(t + prebuffer) | up(t)
+        w_out = wb * jnp.where(scale_on, ratio, 1.0)
+        return ReTCPState(rs, wb), w_out, rate_cap
+
+    return Law("retcp", init, update)
+
+
+def circuit_utilization(rec_t: jnp.ndarray, rec_thru: jnp.ndarray,
+                        sched: CircuitSchedule) -> float:
+    """Mean egress rate during circuit-up windows / circuit bandwidth."""
+    up = sched.up_fn()(rec_t)
+    num = jnp.sum(jnp.where(up, rec_thru, 0.0))
+    den = jnp.maximum(jnp.sum(up.astype(jnp.float32)), 1.0) * sched.circuit_bw
+    return float(num / den)
+
+
+def queuing_latency_percentile(rec_q: jnp.ndarray, rec_t: jnp.ndarray,
+                               sched: CircuitSchedule, pct: float) -> float:
+    """Queuing latency q/b with the *instantaneous* service rate."""
+    up = sched.up_fn()(rec_t)
+    b = jnp.where(up, sched.circuit_bw, sched.packet_bw)
+    lat = rec_q / b
+    return float(jnp.percentile(lat, pct))

@@ -1,0 +1,103 @@
+"""Core datatypes for the PowerTCP fluid-model simulator.
+
+Units used throughout the simulator:
+  time       -> seconds
+  data       -> bytes
+  rates      -> bytes / second
+  bandwidth  -> bytes / second  (100 Gbps == 12.5e9 B/s)
+
+The simulator is a vectorized fluid model over F flows and Q queues; every
+struct below is a registered pytree (NamedTuple) so the whole state threads
+through ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+# Handy unit constants.
+GBPS = 1e9 / 8.0          # bytes/sec per Gbit/sec
+MTU = 1000.0              # bytes; fluid model uses MTU only for increments
+US = 1e-6                 # seconds per microsecond
+KB = 1e3
+MB = 1e6
+
+
+class Topology(NamedTuple):
+    """Static description of the simulated fabric.
+
+    H is the maximum number of hops (queues) any flow traverses. Flows with
+    shorter paths pad with queue index ``Q`` which is a sentinel "infinite
+    bandwidth, zero length" queue appended internally by the simulator.
+    """
+    num_queues: int                 # Q (excluding the sentinel)
+    bandwidth: jnp.ndarray          # [Q] bytes/s, service rate per queue
+    buffer: jnp.ndarray             # [Q] bytes, hard cap per queue
+    switch_of_queue: jnp.ndarray    # [Q] int32, switch id (for DT buffer sharing)
+    num_switches: int
+    switch_buffer: jnp.ndarray      # [S] bytes, shared buffer per switch
+    dt_alpha: float = 1.0           # Dynamic-Thresholds alpha (<=0 disables DT)
+
+
+class Flows(NamedTuple):
+    """Static per-flow description (F flows)."""
+    path: jnp.ndarray               # [F, H] int32 queue ids; pad == num_queues
+    tf_steps: jnp.ndarray           # [F, H] int32 forward delay (steps) to each hop
+    rtt_steps: jnp.ndarray          # [F] int32 base round-trip feedback delay in steps
+    tau: jnp.ndarray                # [F] base RTT (seconds)
+    nic_rate: jnp.ndarray           # [F] host NIC line rate bytes/s
+    size: jnp.ndarray               # [F] flow size bytes (inf => long-lived)
+    start: jnp.ndarray              # [F] start time (seconds)
+    stop: jnp.ndarray               # [F] hard stop time (inf => none)
+    weight: jnp.ndarray             # [F] additive-increase weight multiplier
+
+
+class PathObs(NamedTuple):
+    """What a sender observes at window-update time (delayed by the feedback
+    path). Per-hop arrays carry the INT metadata of Algorithm 1: egress queue
+    length, its gradient, egress tx rate and link bandwidth."""
+    q: jnp.ndarray                  # [F, H] bytes
+    qdot: jnp.ndarray               # [F, H] bytes/s
+    mu: jnp.ndarray                 # [F, H] bytes/s (txRate)
+    b: jnp.ndarray                  # [F, H] bytes/s (link bandwidth)
+    valid: jnp.ndarray              # [F, H] bool
+    theta: jnp.ndarray              # [F] measured RTT (seconds, delayed)
+    w_old: jnp.ndarray              # [F] window one RTT ago (GETCWND(ack.seq))
+    dt_obs: jnp.ndarray             # [F] seconds since previous update (>= sim dt)
+    ecn_frac: jnp.ndarray           # [F] fraction of marked traffic (for DCQCN)
+
+
+class SimConfig(NamedTuple):
+    dt: float = 1e-6                # simulator step (seconds)
+    steps: int = 10000
+    hist: int = 256                 # ring buffer length (>= max rtt_steps + 2)
+    update_period: float = 0.0      # 0 => once per measured RTT, else fixed (s)
+    record_every: int = 0           # >0 => record time series every k steps
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray                  # int32 step counter
+    w: jnp.ndarray                  # [F] congestion window (bytes)
+    rate_cap: jnp.ndarray           # [F] explicit rate cap (bytes/s; inf if unused)
+    q: jnp.ndarray                  # [Q+1] queue bytes (sentinel appended)
+    out_rate: jnp.ndarray           # [Q+1] egress tx rate (bytes/s), last step
+    hist_lam: jnp.ndarray           # [D, F] sending-rate history
+    hist_q: jnp.ndarray             # [D, Q+1]
+    hist_out: jnp.ndarray           # [D, Q+1] egress rate history (txBytes gradient)
+    hist_w: jnp.ndarray             # [D, F] window history (for w_old)
+    remaining: jnp.ndarray          # [F] bytes left (inf for long-lived)
+    fct: jnp.ndarray                # [F] completion time (nan until done)
+    next_update: jnp.ndarray        # [F] next window-update time (seconds)
+    last_update: jnp.ndarray        # [F] previous window-update time (seconds)
+    law: tuple                      # law-specific pytree
+
+
+class Record(NamedTuple):
+    """Optional per-step recordings (subsampled by ``record_every``)."""
+    t: jnp.ndarray                  # seconds
+    q: jnp.ndarray                  # [Q+1]
+    w_sum: jnp.ndarray              # scalar, aggregate window
+    thru: jnp.ndarray               # [Q+1] egress rate
+    lam: jnp.ndarray                # scalar, aggregate arrival rate at queue 0
+    lam_f: jnp.ndarray              # [F] per-flow send rates

@@ -1,0 +1,170 @@
+"""Traffic generation: web-search flow sizes, Poisson arrivals, incast, and a
+receiver-driven (HOMA-like) grant allocator.
+
+The web-search distribution is a piecewise log-linear approximation of the
+flow-size CDF of Alizadeh et al. (DCTCP, SIGCOMM'10) as commonly re-used by
+HPCC/Homa evaluations: heavy-tailed, mean ~1.7 MB, >95% of *flows* under
+1 MB while most *bytes* come from multi-MB flows. (Approximation documented
+in DESIGN.md section 9.)
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import LeafSpine
+from .types import Flows, KB, MB
+
+# (size_bytes, cdf) anchor points
+WEBSEARCH_CDF = np.array([
+    (6 * KB, 0.00),
+    (10 * KB, 0.15),
+    (13 * KB, 0.20),
+    (19 * KB, 0.30),
+    (33 * KB, 0.40),
+    (53 * KB, 0.53),
+    (133 * KB, 0.60),
+    (667 * KB, 0.70),
+    (1.333 * MB, 0.80),
+    (4 * MB, 0.90),
+    (10 * MB, 0.97),
+    (30 * MB, 1.00),
+], dtype=np.float64)
+
+
+def websearch_mean() -> float:
+    s, c = WEBSEARCH_CDF[:, 0], WEBSEARCH_CDF[:, 1]
+    mids = 0.5 * (s[1:] + s[:-1])
+    return float(np.sum(mids * np.diff(c)))
+
+
+def websearch_sample(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Inverse-CDF sampling with log-linear interpolation between anchors."""
+    u = rng.uniform(0.0, 1.0, size=n)
+    s, c = WEBSEARCH_CDF[:, 0], WEBSEARCH_CDF[:, 1]
+    return np.exp(np.interp(u, c, np.log(s))).astype(np.float64)
+
+
+def poisson_websearch(fabric: LeafSpine, load: float, duration: float,
+                      sim_dt: float, seed: int = 0,
+                      cross_rack_only: bool = True) -> Flows:
+    """Poisson flow arrivals sized by the web-search CDF.
+
+    ``load`` is the average utilization of the ToR uplinks (as in the paper):
+    arrival byte-rate = load * racks * spines * fabric_bw.
+    """
+    rng = np.random.default_rng(seed)
+    cap = fabric.racks * fabric.spines * fabric.fabric_bw
+    lam = load * cap / websearch_mean()          # flows per second
+    n = max(int(lam * duration * 1.2) + 16, 16)
+    inter = rng.exponential(1.0 / lam, size=n)
+    starts = np.cumsum(inter)
+    keep = starts < duration
+    starts = starts[keep]
+    n = len(starts)
+    sizes = websearch_sample(rng, n)
+    nh = fabric.n_hosts
+    src = rng.integers(0, nh, size=n)
+    if cross_rack_only:
+        # re-draw destinations until cross-rack (vectorized best effort)
+        dst = rng.integers(0, nh, size=n)
+        H = fabric.hosts_per_rack
+        for _ in range(8):
+            same = (src // H) == (dst // H)
+            if not same.any():
+                break
+            dst[same] = rng.integers(0, nh, size=int(same.sum()))
+    else:
+        dst = rng.integers(0, nh, size=n)
+    return fabric.make_flows(src, dst, sizes, starts, sim_dt, rng=rng)
+
+
+def incast_flows(fabric: LeafSpine, fan_in: int, req_bytes: float,
+                 sim_dt: float, victim: int = 0, start: float = 0.0,
+                 long_flow: bool = True, seed: int = 0) -> Tuple[Flows, int]:
+    """``fan_in`` senders (cross-rack, distinct hosts) respond simultaneously
+    to ``victim``; optionally a pre-existing long-lived flow to the same
+    victim (paper Fig. 4 setup). Returns (flows, bottleneck_queue_id)."""
+    rng = np.random.default_rng(seed)
+    H = fabric.hosts_per_rack
+    nh = fabric.n_hosts
+    others = np.array([h for h in range(nh) if h // H != victim // H])
+    senders = rng.choice(others, size=fan_in, replace=fan_in > len(others))
+    src = senders
+    dst = np.full(fan_in, victim)
+    sizes = np.full(fan_in, req_bytes)
+    starts = np.full(fan_in, start)
+    if long_flow:
+        lf_src = others[~np.isin(others, senders)][0] if \
+            (~np.isin(others, senders)).any() else others[0]
+        src = np.concatenate([[lf_src], src])
+        dst = np.concatenate([[victim], dst])
+        sizes = np.concatenate([[np.inf], sizes])
+        starts = np.concatenate([[-1.0], starts])   # running before incast
+    flows = fabric.make_flows(src.astype(np.int64), dst.astype(np.int64),
+                              sizes, starts, sim_dt, rng=rng)
+    bq = fabric.host_down_queue(victim // H, victim % H)
+    return flows, bq
+
+
+def synthetic_incast_workload(fabric: LeafSpine, request_rate: float,
+                              req_bytes: float, duration: float,
+                              sim_dt: float, seed: int = 0) -> Flows:
+    """Distributed-file-system style workload (paper section 4.1): each request
+    picks a victim and a set of servers in other racks which all respond
+    simultaneously with req_bytes/fan_in each."""
+    rng = np.random.default_rng(seed)
+    fan_in = 16
+    n_req = max(int(request_rate * duration), 1)
+    req_t = np.sort(rng.uniform(0, duration, size=n_req))
+    src_l, dst_l, sz_l, st_l = [], [], [], []
+    H = fabric.hosts_per_rack
+    nh = fabric.n_hosts
+    for t in req_t:
+        victim = rng.integers(0, nh)
+        others = np.array([h for h in range(nh) if h // H != victim // H])
+        senders = rng.choice(others, size=fan_in, replace=False)
+        src_l.append(senders)
+        dst_l.append(np.full(fan_in, victim))
+        sz_l.append(np.full(fan_in, req_bytes / fan_in))
+        st_l.append(np.full(fan_in, t))
+    return fabric.make_flows(np.concatenate(src_l), np.concatenate(dst_l),
+                             np.concatenate(sz_l), np.concatenate(st_l),
+                             sim_dt, rng=rng)
+
+
+# --------------------------------------------------------------------------
+# HOMA-like receiver-driven allocation (simplified; DESIGN.md section 9)
+# --------------------------------------------------------------------------
+
+def homa_alloc_fn(receiver: np.ndarray, downlink_bw: float, overcommit: int,
+                  tau: jnp.ndarray, start: jnp.ndarray,
+                  every_steps: int = 8) -> Callable:
+    """Returns alloc_fn(remaining, active, t_sec, flows, rate_cap).
+
+    Scheduled: each receiver grants its downlink to its ``overcommit``
+    shortest-remaining active flows. Unscheduled: flows younger than one base
+    RTT blind-transmit at line rate (RTTBytes worth of unscheduled data).
+    """
+    recv = jnp.asarray(receiver, jnp.int32)
+    nrecv = int(np.max(receiver)) + 1 if len(receiver) else 1
+
+    def alloc(remaining, active, t_sec, flows, rate_cap):
+        key = jnp.where(active, remaining, jnp.inf)
+        order = jnp.lexsort((key, recv))
+        pos = jnp.arange(key.shape[0])
+        recv_sorted = recv[order]
+        group_start = jax.ops.segment_min(pos, recv_sorted,
+                                          num_segments=nrecv)
+        rank_sorted = pos - group_start[recv_sorted]
+        rank = jnp.zeros_like(pos).at[order].set(rank_sorted)
+        granted = active & (rank < overcommit) & jnp.isfinite(key)
+        unscheduled = active & (t_sec - start < tau)
+        cap = jnp.where(granted, downlink_bw, 0.0)
+        cap = jnp.where(unscheduled, flows.nic_rate, cap)
+        return cap.astype(jnp.float32)
+
+    return alloc

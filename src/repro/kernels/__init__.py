@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Kernels (each: <name>.py kernel + ref.py oracle + interpret-mode sweep in
+tests/test_kernels.py; ops.py is the jit'd TPU/CPU dispatch):
+  flash_attention  blockwise attention (causal / sliding-window / GQA)
+  rmsnorm          fused norm
+  powertcp_step    Algorithm 1 fused over a flow tile (the paper's hot path)
+  queue_arrivals   scatter-free fluid-queue update (MXU incidence matmul)
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .powertcp_step import powertcp_step
+from .queue_arrivals import queue_arrivals
+from .rmsnorm import rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention", "powertcp_step",
+           "queue_arrivals", "rmsnorm"]

@@ -1,0 +1,67 @@
+"""Jit'd dispatch layer: Pallas kernel on TPU, pure-jnp reference elsewhere.
+
+``use_pallas(True)`` forces the kernels (interpret mode off-TPU) — used by
+the kernel test sweeps and the perf benchmarks. Model code calls these ops
+so the TPU deployment picks kernels up transparently.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash
+from .powertcp_step import powertcp_step as _powertcp
+from .queue_arrivals import queue_arrivals as _queue
+from .rmsnorm import rmsnorm as _rmsnorm
+
+
+class _Flag(threading.local):
+    def __init__(self):
+        self.force = None      # None: auto (TPU->pallas), True/False: forced
+
+
+_FLAG = _Flag()
+
+
+@contextlib.contextmanager
+def use_pallas(enabled: bool = True):
+    prev = _FLAG.force
+    _FLAG.force = enabled
+    try:
+        yield
+    finally:
+        _FLAG.force = prev
+
+
+def _pallas_active() -> bool:
+    if _FLAG.force is not None:
+        return _FLAG.force
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    if _pallas_active():
+        return _flash(q, k, v, causal=causal, window=window, **kw)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def rmsnorm(x, scale, **kw):
+    if _pallas_active():
+        return _rmsnorm(x, scale, **kw)
+    return _ref.rmsnorm_ref(x, scale)
+
+
+def powertcp_step(*args, **kw):
+    if _pallas_active():
+        return _powertcp(*args, **kw)
+    return _ref.powertcp_step_ref(*args, **{k: v for k, v in kw.items()
+                                            if k in ("gamma", "w_min")})
+
+
+def queue_arrivals(lam_del, onehot, q, out_rate, caps, *, dt, **kw):
+    if _pallas_active():
+        return _queue(lam_del, onehot, q, out_rate, caps, dt=dt, **kw)
+    return _ref.queue_arrivals_ref(lam_del, onehot, q, out_rate, caps, dt)

@@ -1,0 +1,70 @@
+"""Fluid-queue update kernel: scatter-free arrivals via MXU matmul.
+
+The simulator's inner loop scatters delayed per-hop flow rates into queue
+arrival sums (``zeros.at[path].add(lam)``). Scatters serialize badly on
+TPU; the TPU-native adaptation (DESIGN.md section 2) is a dense incidence
+form: per hop h, ``arr += lam_del[h] @ onehot[h]`` — an [1,F] x [F,Q]
+matmul on the MXU — followed by the fused elementwise queue integration
+``q' = clip(q + (arr - out) dt, 0, caps)``.
+
+Grid tiles the queue axis; all H hops accumulate within one grid step, so
+arrivals and the queue update leave VMEM exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+
+
+def _kernel(lam_ref, onehot_ref, q_ref, out_ref, caps_ref, arr_ref,
+            qnew_ref, *, dt, hops):
+    acc = jnp.zeros((1, arr_ref.shape[-1]), jnp.float32)
+    for h in range(hops):
+        lam = lam_ref[h][None, :]                    # [1, F]
+        m = onehot_ref[h]                            # [F, BQ]
+        acc = acc + jax.lax.dot(lam, m, preferred_element_type=jnp.float32)
+    arr = acc[0]
+    arr_ref[...] = arr
+    qnew_ref[...] = jnp.clip(q_ref[...] + (arr - out_ref[...]) * dt,
+                             0.0, caps_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "bq", "interpret"))
+def queue_arrivals(lam_del, onehot, q, out_rate, caps, *, dt, bq=128,
+                   interpret=None):
+    """lam_del: [H,F]; onehot: [H,F,Q]; q/out_rate/caps: [Q] ->
+    (arrivals [Q], q_new [Q])."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    H, F, Q = onehot.shape
+    bq_ = min(bq, Q)
+    pad = (-Q) % bq_
+    if pad:
+        onehot = jnp.pad(onehot, ((0, 0), (0, 0), (0, pad)))
+        q = jnp.pad(q, (0, pad))
+        out_rate = jnp.pad(out_rate, (0, pad))
+        caps = jnp.pad(caps, (0, pad))
+    Qp = Q + pad
+    arr, qnew = pl.pallas_call(
+        functools.partial(_kernel, dt=dt, hops=H),
+        grid=(Qp // bq_,),
+        in_specs=[
+            pl.BlockSpec((H, F), lambda i: (0, 0)),
+            pl.BlockSpec((H, F, bq_), lambda i: (0, 0, i)),
+            pl.BlockSpec((bq_,), lambda i: (i,)),
+            pl.BlockSpec((bq_,), lambda i: (i,)),
+            pl.BlockSpec((bq_,), lambda i: (i,)),
+        ],
+        out_specs=(pl.BlockSpec((bq_,), lambda i: (i,)),
+                   pl.BlockSpec((bq_,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((Qp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Qp,), jnp.float32)),
+        interpret=interpret,
+    )(lam_del.astype(jnp.float32), onehot.astype(jnp.float32),
+      q.astype(jnp.float32), out_rate.astype(jnp.float32),
+      caps.astype(jnp.float32))
+    return arr[:Q], qnew[:Q]

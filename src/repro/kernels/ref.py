@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth for the interpret-mode sweeps in
+tests/test_kernels.py. They are intentionally written in the most obvious
+way (no blocking, no fused accumulators).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [B,H,T,D]; k,v: [B,KV,S,D]; GQA via H % KV == 0. fp32 softmax."""
+    B, H, T, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qi = jnp.arange(T)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        off = S - T          # queries are the last T positions of S
+        mask &= kj <= qi + off
+        if window > 0:
+            mask &= kj > qi + off - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def powertcp_step_ref(q, qdot, mu, b, valid, tau, w, w_old, gs_prev,
+                      dt_obs, upd, beta, gamma=0.9, w_min=1000.0):
+    """Algorithm 1 (NORMPOWER + smoothing + UPDATEWINDOW), vectorized over
+    flows. Per-hop arrays [F,H]; per-flow vectors [F]. Returns (w, gs)."""
+    tau2 = tau[:, None]
+    current = qdot + mu
+    voltage = q + b * tau2
+    base = jnp.square(b) * tau2
+    gnorm = jnp.where(valid, current * voltage / jnp.maximum(base, 1.0), 0.0)
+    gmax = jnp.max(gnorm, axis=1)
+    d = jnp.clip(dt_obs, 0.0, tau)
+    gs = (gs_prev * (tau - d) + gmax * d) / jnp.maximum(tau, 1e-12)
+    gs_out = jnp.where(upd, gs, gs_prev)
+    target = w_old / jnp.maximum(gs_out, 1e-9) + beta
+    w_new = gamma * target + (1.0 - gamma) * w
+    w_out = jnp.where(upd, jnp.maximum(w_new, w_min), w)
+    return w_out, gs_out
+
+
+def queue_arrivals_ref(lam_del, onehot, q, out_rate, caps, dt):
+    """Scatter-free fluid-queue update (TPU adaptation: the flow->queue
+    scatter-add becomes an MXU matmul against the incidence one-hot).
+
+    lam_del: [H,F] delayed per-hop send rates; onehot: [H,F,Q];
+    q/out_rate/caps: [Q]. Returns (arrivals [Q], q_new [Q])."""
+    arr = jnp.einsum("hf,hfq->q", lam_del, onehot)
+    q_new = jnp.clip(q + (arr - out_rate) * dt, 0.0, caps)
+    return arr, q_new

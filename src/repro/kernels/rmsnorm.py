@@ -1,0 +1,46 @@
+"""Fused RMSNorm kernel (rows tiled into VMEM, fp32 statistics).
+
+x: [N, D] (callers flatten leading dims), scale: [D]. One grid step
+normalizes a [BN, D] tile: mean-square reduce, rsqrt, scale — one HBM
+round-trip instead of XLA's separate square/reduce/mul chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "eps", "interpret"))
+def rmsnorm(x, scale, *, bn=256, eps=1e-6, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    orig_shape = x.shape
+    D = x.shape[-1]
+    x2 = x.reshape(-1, D)
+    N = x2.shape[0]
+    bn_ = min(bn, N)
+    pad = (-N) % bn_
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=((N + pad) // bn_,),
+        in_specs=[pl.BlockSpec((bn_, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bn_, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + pad, D), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out[:N].reshape(orig_shape)

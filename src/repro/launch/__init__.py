@@ -1,0 +1,6 @@
+"""Launchers: production meshes, multi-pod dry-run, roofline analysis."""
+from .mesh import (DCN_BW, HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS, make_mesh,
+                   make_production_mesh)
+
+__all__ = ["DCN_BW", "HBM_BW", "HBM_BYTES", "ICI_BW", "PEAK_FLOPS",
+           "make_mesh", "make_production_mesh"]

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. derives parameter/optimizer/input shardings from the logical-axis rules,
+  3. ``jax.jit(step).lower(...).compile()`` with ShapeDtypeStructs only — no
+     array is ever allocated for the full configs,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` + the HLO-parsed
+     collective bytes (while-loop trip-count corrected) for §Roofline.
+
+Run a single cell:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b \
+      --shape train_4k --mesh multi                       [--save-hlo out.txt]
+Run everything (the table driver shells out per cell for isolation):
+  PYTHONPATH=src python -m benchmarks.dryrun_table
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+from ..configs import SHAPES, arch_shapes, canon, get_config
+from ..configs.inputs import input_specs
+from ..models.lm import lm_specs
+from ..models.spec import shape_structs
+from ..sharding.axes import sharding_for_shape, use_rules
+from ..sharding.trees import tree_shardings
+from ..train.optim import opt_specs
+from ..train.step import make_train_step
+from ..serve.engine import make_forward, make_serve_step
+from .mesh import make_production_mesh
+from .presets import train_preset
+from .hlo_analysis import analyze_hlo
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat=None,
+               microbatch=None, cfg=None, shape=None, tcfg=None,
+               moe_impl=None, tp_reduce=None):
+    """Returns (cfg, jitted_fn, example_args) ready for .lower().
+
+    ``cfg``/``shape``/``tcfg`` overrides let tests drive the same machinery
+    with reduced configs and small meshes.
+    """
+    import dataclasses
+    cfg = cfg or get_config(arch)
+    shape = shape or SHAPES[shape_name]
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if tp_reduce:
+        cfg = dataclasses.replace(cfg, tp_reduce=tp_reduce)
+    tcfg = tcfg or train_preset(arch)
+    if remat is not None:
+        tcfg = dataclasses.replace(tcfg, remat=remat)
+    if microbatch is not None:
+        tcfg = dataclasses.replace(tcfg, microbatch=microbatch)
+
+    pspecs = lm_specs(cfg)
+    p_shard = tree_shardings(pspecs, mesh)
+    p_structs = shape_structs(pspecs, p_shard)
+    kind, dspecs = input_specs(cfg, shape)
+    d_shard = tree_shardings(dspecs, mesh)
+    d_structs = shape_structs(dspecs, d_shard)
+
+    if kind == "train":
+        ospecs = opt_specs(pspecs, tcfg)
+        o_shard = tree_shardings(ospecs, mesh)
+        o_structs = shape_structs(ospecs, o_shard)
+        step = make_train_step(cfg, tcfg)
+
+        def fn(params, opt, batch):
+            with use_rules(mesh):
+                return step(params, opt, batch)
+
+        from ..train.optim import OptState
+        rep = sharding_for_shape((), (), mesh)
+        out_shardings = (p_shard, OptState(rep, o_shard.mu, o_shard.nu),
+                         {"loss": rep, "lr": rep, "grad_norm": rep})
+        jitted = jax.jit(fn, out_shardings=out_shardings,
+                         donate_argnums=(0, 1))
+        args = (p_structs, o_structs, d_structs["batch"])
+    elif kind == "prefill":
+        fwd = make_forward(cfg)
+
+        def fn(params, batch):
+            with use_rules(mesh):
+                return fwd(params, batch)
+
+        B, S = shape.global_batch, shape.seq_len
+        lo = sharding_for_shape((B, S, cfg.vocab_size),
+                                ("batch", None, "vocab"), mesh)
+        jitted = jax.jit(fn, out_shardings=lo)
+        args = (p_structs, d_structs["batch"])
+    else:                       # decode
+        sstep = make_serve_step(cfg)
+
+        def fn(params, token, cache, index):
+            with use_rules(mesh):
+                return sstep(params, token, cache, index)
+
+        B = shape.global_batch
+        lo = sharding_for_shape((B, 1, cfg.vocab_size),
+                                ("batch", None, "vocab"), mesh)
+        jitted = jax.jit(fn, out_shardings=(lo, d_shard["cache"]),
+                         donate_argnums=(2,))
+        args = (p_structs, d_structs["token"], d_structs["cache"],
+                d_structs["index"])
+    return cfg, jitted, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save_hlo: str = "", skip_collectives: bool = False,
+             microbatch=None, remat=None, moe_impl=None,
+             tp_reduce=None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    cfg, jitted, args = build_cell(arch, shape_name, mesh,
+                                   microbatch=microbatch, remat=remat,
+                                   moe_impl=moe_impl, tp_reduce=tp_reduce)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "devices": int(mesh.devices.size),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    if not skip_collectives:
+        hlo = compiled.as_text()
+        res["hlo_analysis"] = analyze_hlo(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--json", default="", help="write result JSON here")
+    ap.add_argument("--skip-collectives", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--tp-reduce", default=None)
+    a = ap.parse_args()
+    arch = canon(a.arch)
+    ok_shapes = [s.name for s in arch_shapes(arch)]
+    if a.shape not in ok_shapes:
+        print(f"SKIP {arch} x {a.shape}: documented skip "
+              f"(allowed: {ok_shapes})")
+        return 0
+    res = run_cell(arch, a.shape, a.mesh, save_hlo=a.save_hlo,
+                   skip_collectives=a.skip_collectives,
+                   microbatch=a.microbatch, remat=a.remat,
+                   moe_impl=a.moe_impl, tp_reduce=a.tp_reduce)
+    out = json.dumps(res, indent=2)
+    print(out)
+    if a.json:
+        with open(a.json, "w") as f:
+            f.write(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,248 @@
+"""Post-SPMD HLO analysis: collective bytes + dot FLOPs with while-loop
+trip-count correction.
+
+Why this exists: ``compiled.cost_analysis()`` on this JAX build counts every
+``while`` body ONCE (verified empirically — a 6-step scanned matmul reports
+1 iteration of FLOPs), and collective ops don't appear in it at all. Since
+every layer stack and microbatch loop is a scan, naive numbers are off by
+~layers x microbatches. This parser:
+
+  1. splits the HLO module into computations and builds a symbol table
+     (op name -> shape) per module,
+  2. walks the call graph from ENTRY, multiplying by each while op's
+     ``backend_config known_trip_count`` (fallback: the largest integer
+     constant compared against in the condition computation),
+  3. accumulates per-device collective bytes (by kind and by group size)
+     and dot FLOPs, trip-corrected.
+
+Byte conventions (per device):
+  operand_bytes  sum of input-shard sizes (the brief's definition)
+  wire_bytes     ring-algorithm bytes actually crossing links:
+                 all-reduce 2(g-1)/g * n | all-gather/all-to-all (g-1)/g * n_full
+                 reduce-scatter (g-1)/g * n_full | permute n
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(tok: str) -> int:
+    """Bytes of one 'dtype[a,b]{layout}' token (tuples: sum of members)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(tok):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(tok: str) -> int:
+    m = _SHAPE_RE.search(tok)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+class Comp:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.symbols: Dict[str, str] = {}      # op name -> result shape token
+        self.collectives: List[dict] = []
+        self.dots: List[dict] = []
+        self.whiles: List[Tuple[str, int]] = []  # (body comp, trip count)
+        self.calls: List[str] = []
+        self.result_bytes_top = 0              # sum of top-level op results
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry = None
+    cur: Optional[Comp] = None
+    for raw in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(raw)
+            if m:
+                cur = Comp(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        cur.lines.append(raw)
+    for comp in comps.values():
+        _parse_comp(comp, comps)
+    return comps, entry
+
+
+def _trip_count(line: str, comps: Dict[str, Comp]) -> int:
+    m = re.search(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)',
+                  line)
+    if m:
+        return int(m.group(1))
+    # fallback: biggest integer constant in the condition computation
+    m = re.search(r"condition=%?([\w\.\-]+)", line)
+    if m and m.group(1) in comps:
+        best = 1
+        for ln in comps[m.group(1)].lines:
+            for c in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(c.group(1)))
+        return best
+    return 1
+
+
+def _parse_comp(comp: Comp, comps: Dict[str, Comp]):
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_tok, opcode = m.groups()
+        comp.symbols[name] = shape_tok
+        if opcode not in ("get-tuple-element", "tuple", "parameter",
+                          "constant", "bitcast", "after-all"):
+            rb = shape_bytes(shape_tok)
+            # in-place updates (dynamic-update-slice, or fusions rooted in
+            # one — XLA names fusions after their root) alias the big buffer:
+            # traffic is the update slice, not the whole buffer. Count the
+            # operands minus the largest (the aliased buffer).
+            if "dynamic-update-slice" in opcode or \
+                    "dynamic-update-slice" in name:
+                ops = [shape_bytes(comp.symbols.get(o, ""))
+                       for o in re.findall(r"%([\w\.\-]+)", line[m.end():])]
+                ops = [o for o in ops if o > 0]
+                if ops:
+                    rb = sum(ops) - max(ops)
+            comp.result_bytes_top += rb
+        if opcode in _COLLECTIVES:
+            g = _group_size(line)
+            rb = shape_bytes(shape_tok)
+            if opcode == "all-gather":
+                operand = rb // max(g, 1)
+                wire = rb * (g - 1) // max(g, 1)
+            elif opcode == "reduce-scatter":
+                operand = rb * g
+                wire = rb * (g - 1)
+            elif opcode == "all-reduce":
+                operand = rb
+                wire = 2 * rb * (g - 1) // max(g, 1)
+            elif opcode == "all-to-all":
+                operand = rb
+                wire = rb * (g - 1) // max(g, 1)
+            else:                   # collective-permute
+                operand = rb
+                wire = rb
+            comp.collectives.append(
+                {"kind": opcode, "result_bytes": rb, "group": g,
+                 "operand_bytes": operand, "wire_bytes": wire})
+        elif opcode == "dot":
+            comp.dots.append({"line": line, "shape": shape_tok})
+        elif opcode == "while":
+            b = re.search(r"body=%?([\w\.\-]+)", line)
+            if b:
+                comp.whiles.append((b.group(1), _trip_count(line, comps)))
+        elif opcode in ("fusion", "call", "custom-call"):
+            c = re.search(r"calls=%?([\w\.\-]+)", line)
+            if c:
+                comp.calls.append(c.group(1))
+
+
+def _dot_flops(d: dict, comp: Comp) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    line = d["line"]
+    out_elems = shape_elems(d["shape"])
+    m = re.search(r"dot\(%?([\w\.\-]+)[,)]", line)
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if m and cdims and m.group(1) in comp.symbols:
+        lhs_tok = comp.symbols[m.group(1)]
+        sm = _SHAPE_RE.search(lhs_tok)
+        if sm and sm.group(2):
+            dims = [int(x) for x in sm.group(2).split(",")]
+            for ci in cdims.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return {"error": "no entry computation"}
+
+    agg = {
+        "collective_operand_bytes": 0.0,
+        "collective_wire_bytes": 0.0,
+        "dot_flops": 0.0,
+        "hbm_bytes_proxy": 0.0,
+        "by_kind": defaultdict(float),
+        "by_group": defaultdict(float),
+        "while_trips": [],
+    }
+    seen_stack = []
+
+    def walk(name: str, mult: float, count_bytes: bool = True):
+        if name not in comps or name in seen_stack:
+            return
+        comp = comps[name]
+        seen_stack.append(name)
+        if count_bytes:
+            # writes of every top-level op result; reads ~= producer writes,
+            # so HBM traffic ~= 2x this (documented proxy, fusion internals
+            # excluded because `calls=` recursion passes count_bytes=False)
+            agg["hbm_bytes_proxy"] += comp.result_bytes_top * mult
+        for c in comp.collectives:
+            agg["collective_operand_bytes"] += c["operand_bytes"] * mult
+            agg["collective_wire_bytes"] += c["wire_bytes"] * mult
+            agg["by_kind"][c["kind"]] += c["wire_bytes"] * mult
+            agg["by_group"][str(c["group"])] += c["wire_bytes"] * mult
+        for d in comp.dots:
+            agg["dot_flops"] += _dot_flops(d, comp) * mult
+        for callee in comp.calls:
+            walk(callee, mult, count_bytes=False)
+        for body, trips in comp.whiles:
+            agg["while_trips"].append({"body": body, "n": trips})
+            walk(body, mult * trips, count_bytes=count_bytes)
+        seen_stack.pop()
+
+    walk(entry, 1.0)
+    agg["by_kind"] = dict(agg["by_kind"])
+    agg["by_group"] = dict(agg["by_group"])
+    return agg

@@ -1,0 +1,107 @@
+"""Roofline terms per (arch x shape x mesh) cell from dry-run artifacts.
+
+Terms (seconds, per step, per the brief; v5e-like constants in mesh.py):
+  compute    = HLO_dot_FLOPs_per_device / 197e12      (trip-corrected)
+  memory     = HBM_traffic_per_device   / 819e9       (2x top-level result
+               bytes proxy, trip-corrected — see hlo_analysis)
+  collective = wire_bytes_per_device    / 50e9        (ring-equivalent)
+
+Also reported:
+  MODEL_FLOPS       6*N*D (train) / 2*N*D (prefill/decode), N_active for MoE
+  useful_ratio      MODEL_FLOPS / (HLO_dot_FLOPs x chips) — catches remat
+                    and redundant-compute waste (1/1.33 ~ 0.75 is the
+                    expected full-remat train ratio; decode ~1)
+  bottleneck        argmax of the three terms
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.lm import lm_specs
+from ..models.spec import ParamSpec, tree_map_specs
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def param_counts(cfg: ModelConfig):
+    """(total params N, active-per-token params N_active)."""
+    specs = lm_specs(cfg)
+    total = 0
+    active = 0
+    k_over_e = (cfg.experts_per_token / cfg.num_experts
+                if cfg.num_experts else 1.0)
+
+    def walk(prefix, node):
+        nonlocal total, active
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}.{k}", v)
+            return
+        n = int(np.prod(node.shape))
+        total += n
+        # expert weights: only top-k of E are touched per token
+        frac = k_over_e if (".mlp.w" in prefix and "_moe" in prefix) else 1.0
+        active += n * frac
+
+    walk("", specs)
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Global useful FLOPs per step (6ND convention; attention quadratic
+    terms excluded by convention — the useful_ratio column absorbs them)."""
+    _, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # decode: 1 tok/seq
+
+
+def roofline_terms(cell: Dict) -> Dict:
+    """cell: one JSON dict produced by launch.dryrun (with hlo_analysis)."""
+    h = cell.get("hlo_analysis", {})
+    chips = cell["devices"]
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+
+    compute_s = h.get("dot_flops", 0.0) / PEAK_FLOPS
+    memory_s = 2.0 * h.get("hbm_bytes_proxy", 0.0) / HBM_BW
+    coll_s = h.get("collective_wire_bytes", 0.0) / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    hlo_total = h.get("dot_flops", 0.0) * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    step_time = max(terms.values())
+    mfu = (mf / chips / max(step_time, 1e-12)) / PEAK_FLOPS \
+        if step_time else 0.0
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": min(compute_s / max(step_time, 1e-12), 1.0),
+        "mfu_bound": mfu,
+        "by_group": h.get("by_group", {}),
+    }
+
+
+def render_row(cell: Dict) -> str:
+    r = roofline_terms(cell)
+    return (f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu_bound']*100:.1f}% |")
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bottleneck | useful | MFU-bound |\n"
+          "|---|---|---|---|---|---|---|---|---|")

@@ -1,0 +1,12 @@
+"""Model zoo: spec-declared params, decoder-only + enc-dec LMs."""
+from .spec import (ParamSpec, fan_in_normal, init_params, is_spec, num_bytes,
+                   num_params, shape_structs, tree_map_specs)
+from .lm import lm_decode_step, lm_forward, lm_prefill, lm_specs
+from . import layers, rglru, ssm
+
+__all__ = [
+    "ParamSpec", "fan_in_normal", "init_params", "is_spec", "num_bytes",
+    "num_params", "shape_structs", "tree_map_specs",
+    "lm_decode_step", "lm_forward", "lm_prefill", "lm_specs",
+    "layers", "rglru", "ssm",
+]

@@ -1,0 +1,100 @@
+"""Parameter-spec system.
+
+Every model declares its parameters once, as a pytree of ``ParamSpec`` leaves
+(shape + dtype + logical axes + init recipe). From that single declaration we
+derive:
+
+  * ``init_params``    — materialized arrays (CPU tests, examples)
+  * ``shape_structs``  — ``jax.ShapeDtypeStruct`` stand-ins (multi-pod dry-run;
+                         no allocation ever happens for the full configs)
+  * ``tree_shardings`` — ``NamedSharding`` per leaf from logical-axis rules
+
+Logical axes used across the framework (see sharding/axes.py for the
+physical mapping):
+
+  layers   scan-stacked layer-group dim            -> never sharded
+  vocab    embedding rows / logits                 -> model (TP)
+  embed    the d_model dim of any weight           -> data  (FSDP / ZeRO-3)
+  heads    attention query heads                   -> model (TP)
+  kv       attention kv heads                      -> model when divisible
+  mlp      ffn hidden dim                          -> model (TP)
+  experts  MoE expert dim                          -> model (EP)
+  rnn      RG-LRU width                            -> model
+  inner    mamba2 inner channels / conv channels   -> model
+  qkv/head_dim/state/conv/pattern-local dims       -> unsharded
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"       # normal | zeros | ones | constant
+    scale: float = 1.0         # stddev (normal) or value (constant)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=is_spec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def fan_in_normal(shape, fan_axis: int = 0, dtype="float32", axes=(),
+                  gain: float = 1.0) -> ParamSpec:
+    """Truncated-normal-ish init with 1/sqrt(fan_in) scale."""
+    fan = shape[fan_axis] if shape else 1
+    return ParamSpec(tuple(shape), dtype, tuple(axes), "normal",
+                     gain / float(np.sqrt(max(fan, 1))))
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(spec: ParamSpec, k):
+        dt = jnp.dtype(spec.dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init == "constant":
+            return jnp.full(spec.shape, spec.scale, dt)
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * spec.scale).astype(dt)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in
+                                        zip(leaves, keys)])
+
+
+def shape_structs(specs, sharding_tree=None):
+    """ShapeDtypeStructs (optionally with shardings attached) for .lower()."""
+    if sharding_tree is None:
+        return tree_map_specs(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), specs)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype),
+                                           sharding=sh),
+        specs, sharding_tree, is_leaf=is_spec)
+
+
+def num_params(specs) -> int:
+    return int(sum(int(np.prod(s.shape)) for s in _leaves(specs)))
+
+
+def num_bytes(specs) -> int:
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in _leaves(specs)))

@@ -1,0 +1,205 @@
+"""Mamba2 mixer via SSD (state-space duality), arXiv:2405.21060.
+
+Forward (training/prefill) uses the chunked SSD algorithm: quadratic
+attention-like blocks within chunks of length ``CHUNK`` plus a linear
+inter-chunk state recurrence (``lax.scan`` over chunks). Decode is the O(1)
+recurrent update on a per-head state of shape [P, N].
+
+Layout (mamba2-130m): d_model=768, expand=2 -> d_inner=1536, headdim P=64
+-> H=24 heads, state N=128, groups G=1, conv width 4 over the (x|B|C)
+channels. in_proj emits [z | x | B | C | dt].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.axes import constrain
+from .spec import ParamSpec, fan_in_normal
+
+CHUNK = 256
+NGROUPS = 1
+
+
+def mamba_dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * NGROUPS * N
+    d_proj = 2 * d_in + 2 * NGROUPS * N + H
+    return d_in, H, N, conv_ch, d_proj
+
+
+def mamba_specs(cfg):
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_in, H, N, conv_ch, d_proj = mamba_dims(cfg)
+    return {
+        "in_proj": fan_in_normal((d, d_proj), 0, dt, ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), dt, (None, "inner"),
+                            "normal", 1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_b": ParamSpec((conv_ch,), dt, ("inner",), "zeros"),
+        "a_log": ParamSpec((H,), "float32", (None,), "constant", 0.5),
+        "dt_bias": ParamSpec((H,), "float32", (None,), "zeros"),
+        "d_skip": ParamSpec((H,), "float32", (None,), "ones"),
+        "norm": ParamSpec((d_in,), dt, ("inner",), "ones"),
+        "out_proj": fan_in_normal((d_in, d), 0, dt, ("inner", "embed")),
+    }
+
+
+def _segsum(a):
+    """a: [..., L] -> [..., L, L] lower-tri cumulative sums (log decays)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, B, C, chunk: int = CHUNK, h0=None):
+    """Chunked SSD scan.
+
+    x: [b, s, h, p]; dt: [b, s, h] (>0); a: [h] (<0); B, C: [b, s, g, n].
+    Returns y: [b, s, h, p] and final state [b, h, p, n].
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sc = x.shape[1]
+    c = sc // chunk
+    rep = h // g
+
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, c, chunk, g, n), rep, axis=3)  # [b,c,l,h,n]
+    Cc = jnp.repeat(C.reshape(b, c, chunk, g, n), rep, axis=3)
+    ac = dtc * a[None, None, None, :]                  # [b,c,l,h] log decay
+    acs = jnp.cumsum(ac, axis=2)                       # within-chunk cumsum
+    xdt = xc * dtc[..., None]                          # fold dt into x
+
+    # -- intra-chunk (quadratic within chunk) --------------------------------
+    Lmat = jnp.exp(_segsum(jnp.swapaxes(ac, 2, 3)))    # [b,c,h,l,l]
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp",
+                        scores, Lmat.astype(scores.dtype), xdt)
+
+    # -- chunk states + inter-chunk recurrence -------------------------------
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)    # [b,c,l,h]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc,
+                        decay_states.astype(Bc.dtype), xdt)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])            # [b,c,h]
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                  # [b,h,p,n], [b,h]
+        prev = carry
+        new = prev * dec[..., None, None].astype(prev.dtype) + st
+        return new, prev
+
+    init = (jnp.zeros((b, h, p, n), x.dtype) if h0 is None
+            else h0.astype(x.dtype))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # [b,c,h,p,n]
+
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, prev_states,
+                       jnp.exp(acs).astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, sc, h, p)[:, :s]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, a, B, C):
+    """state: [b,h,p,n]; x: [b,h,p]; dt: [b,h]; a: [h]; B,C: [b,g,n]."""
+    h = x.shape[1]
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                    # [b,h,n]
+    Ch = jnp.repeat(C, rep, axis=1)
+    dec = jnp.exp(dt * a[None, :])                     # [b,h]
+    new = (state * dec[..., None, None].astype(state.dtype)
+           + jnp.einsum("bhp,bhn,bh->bhpn", x, Bh.astype(x.dtype),
+                        dt.astype(x.dtype)))
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch.astype(new.dtype))
+    return y, new
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, H, N, _, _ = mamba_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * NGROUPS * N]
+    dt_raw = zxbcdt[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _conv_forward(xbc, w, bias, state=None):
+    """Causal depthwise conv over time. xbc: [b,s,ch]; w: [k,ch]."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i][None, None].astype(xbc.dtype)
+              for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else pad[:, :0]
+    return jax.nn.silu(out + bias.astype(xbc.dtype)), new_state
+
+
+def mamba_forward(p, x, cfg, state=None, conv_state=None,
+                  return_state: bool = False):
+    """Full-sequence mixer. x: [b, s, d_model]."""
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    d_in, H, N, conv_ch, _ = mamba_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_out = _conv_forward(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :d_in].reshape(b, s, H, -1)
+    B = xbc[..., d_in:d_in + NGROUPS * N].reshape(b, s, NGROUPS, N)
+    C = xbc[..., d_in + NGROUPS * N:].reshape(b, s, NGROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None]).astype(cd)
+    a = -jnp.exp(p["a_log"])                            # A < 0
+    y, final = ssd_chunked(xs, dt, a.astype(cd), B, C, h0=state)
+    y = y + xs * p["d_skip"].astype(cd)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = _rmsnorm_gated(y, z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    out = constrain(out, "batch", None, None)
+    if return_state:
+        return out, final, conv_out
+    return out
+
+
+def mamba_decode(p, x, cfg, state, conv_state):
+    """One-token step. x: [b, 1, d]; state: [b,h,p,n]; conv: [b,k-1,ch]."""
+    b = x.shape[0]
+    cd = cfg.compute_dtype
+    d_in, H, N, conv_ch, _ = mamba_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x.astype(cd), p["in_proj"].astype(cd))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _conv_forward(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[:, 0, :d_in].reshape(b, H, -1)
+    B = xbc[:, 0, d_in:d_in + NGROUPS * N].reshape(b, NGROUPS, N)
+    C = xbc[:, 0, d_in + NGROUPS * N:].reshape(b, NGROUPS, N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None]).astype(cd)
+    a = -jnp.exp(p["a_log"]).astype(cd)
+    y, state = ssd_decode_step(state, xs, dt, a, B, C)
+    y = y + xs * p["d_skip"].astype(cd)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = _rmsnorm_gated(y, z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, state, conv_state
+
+
+def _rmsnorm_gated(y, z, scale, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(y.dtype)

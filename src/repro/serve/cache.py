@@ -1,0 +1,90 @@
+"""Decode-cache declarations (ParamSpec trees, mirroring lm_decode_step).
+
+Cache kinds per block:
+  attn/moe/dec  full KV cache        [G, B, cache_len, KV, Dh]   (+xk/xv)
+  local         ring-buffer KV       [G, B, window,   KV, Dh]
+  rec           RG-LRU hidden (fp32) [G, B, d_rnn] + conv tail
+  ssm           SSD state            [G, B, H, P, N] + conv tail
+
+The O(1)-state kinds (rec/ssm) are what make the ``long_500k`` cell feasible
+for the sub-quadratic archs — cache size is context-independent.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.spec import ParamSpec, init_params, tree_map_specs
+from ..models.ssm import mamba_dims
+
+CACHE_DTYPE = "bfloat16"
+
+# Production TP width. KV caches prefer head (kv) sharding; when the arch's
+# kv-head count doesn't divide the model axis (GQA kv=8/4/1 on a 16-way TP),
+# the cache shards its *sequence* dim instead — sequence-sharded KV decode.
+# Without this, a 126-layer/32k/batch-128 cache would replicate over TP
+# (135 GB/chip for llama3-405b). GSPMD turns the seq-sharded softmax into a
+# partial-max/partial-sum + all-reduce pair.
+PRODUCTION_TP = 16
+
+
+def _kv_axes(kv_heads: int, seq: int):
+    if kv_heads % PRODUCTION_TP == 0:
+        return ("layers", "batch", None, "kv", None)
+    if seq % PRODUCTION_TP == 0:
+        return ("layers", "batch", "seq", None, None)
+    return ("layers", "batch", None, None, None)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    G = cfg.pattern_groups
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    B = batch
+    c = {}
+    for j, kind in enumerate(cfg.pattern):
+        key = f"b{j}_{kind}"
+        if kind in ("attn", "moe", "dec"):
+            kv = ParamSpec((G, B, cache_len, KV, Dh), CACHE_DTYPE,
+                           _kv_axes(KV, cache_len), "zeros")
+            c[key] = {"k": kv, "v": kv}
+            if kind == "dec":
+                xkv = ParamSpec((G, B, cfg.enc_seq, KV, Dh), CACHE_DTYPE,
+                                _kv_axes(KV, cfg.enc_seq), "zeros")
+                c[key]["xk"] = xkv
+                c[key]["xv"] = xkv
+        elif kind == "local":
+            win = min(cfg.window, cache_len) or cache_len
+            kv = ParamSpec((G, B, win, KV, Dh), CACHE_DTYPE,
+                           _kv_axes(KV, win), "zeros")
+            c[key] = {"k": kv, "v": kv}
+        elif kind == "rec":
+            dr = cfg.d_rnn_eff
+            c[key] = {
+                "h": ParamSpec((G, B, dr), "float32",
+                               ("layers", "batch", "rnn"), "zeros"),
+                "conv": ParamSpec((G, B, cfg.rglru_conv - 1, dr),
+                                  CACHE_DTYPE,
+                                  ("layers", "batch", None, "rnn"), "zeros"),
+            }
+        elif kind == "ssm":
+            d_in, H, N, conv_ch, _ = mamba_dims(cfg)
+            c[key] = {
+                "state": ParamSpec((G, B, H, d_in // H, N), CACHE_DTYPE,
+                                   ("layers", "batch", None, None, None),
+                                   "zeros"),
+                "conv": ParamSpec((G, B, cfg.ssm_conv - 1, conv_ch),
+                                  CACHE_DTYPE,
+                                  ("layers", "batch", None, "inner"),
+                                  "zeros"),
+            }
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    import jax
+    return init_params(cache_specs(cfg, batch, cache_len), jax.random.key(0))
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> int:
+    from ..models.spec import num_bytes
+    return num_bytes(cache_specs(cfg, batch, cache_len))

@@ -1,0 +1,68 @@
+"""Serving step builders + a small batched-decode driver.
+
+``make_serve_step`` produces the function lowered by the decode dry-run
+cells: one new token for every sequence in the batch against a shared-shape
+KV/state cache. ``decode_loop`` is the runnable driver used by the examples
+(greedy or temperature sampling, scan over steps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.lm import lm_decode_step, lm_forward, lm_prefill
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return lm_prefill(params, batch, cfg, cache_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, cache, index):
+        return lm_decode_step(params, token, cache, index, cfg)
+    return serve_step
+
+
+def make_forward(cfg: ModelConfig, remat: str = "none"):
+    """Plain forward (prefill_32k cells lower this when no cache is kept)."""
+    def fwd(params, batch):
+        return lm_forward(params, batch, cfg, remat=remat)
+    return fwd
+
+
+def decode_loop(params, cfg: ModelConfig, prompt, steps: int,
+                cache_len: Optional[int] = None, temperature: float = 0.0,
+                rng: Optional[jax.Array] = None, extras: Optional[dict] = None):
+    """Greedy/sampled generation. prompt: [B, P] int32. Returns [B, steps]."""
+    B, P = prompt.shape
+    cache_len = cache_len or (P + steps)
+    batch = {"tokens": prompt, **(extras or {})}
+    logits, cache = lm_prefill(params, batch, cfg, cache_len)
+    rng = rng if rng is not None else jax.random.key(0)
+
+    def pick(lg, key):
+        lg = lg[:, 0]
+        tv = cfg.true_vocab or cfg.vocab_size
+        lg = lg[:, :tv]
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / temperature).astype(jnp.int32)
+
+    @jax.jit
+    def step(carry, i):
+        cache, tok, key = carry
+        key, sub = jax.random.split(key)
+        lg, cache = lm_decode_step(params, tok[:, None], cache, P + i, cfg)
+        nxt = pick(lg, sub)
+        return (cache, nxt, key), nxt
+
+    tok0 = pick(logits, rng)
+    (_, _, _), toks = jax.lax.scan(
+        step, (cache, tok0, rng), jnp.arange(steps - 1))
+    return jnp.concatenate([tok0[:, None], toks.T], axis=1)

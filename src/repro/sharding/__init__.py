@@ -1,0 +1,10 @@
+"""Sharding: logical-axis rules, mesh translation, tree shardings."""
+from .axes import (DEFAULT_RULES, axes_to_pspec, batch_axes, constrain,
+                   named_sharding, sharding_for_shape, use_rules)
+from .trees import input_sharding, tree_shardings
+
+__all__ = [
+    "DEFAULT_RULES", "axes_to_pspec", "batch_axes", "constrain",
+    "named_sharding", "sharding_for_shape", "use_rules",
+    "input_sharding", "tree_shardings",
+]

@@ -1,0 +1,141 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+A single rules table maps the logical axes declared by ``models/spec.py`` to
+physical mesh axes. Meshes: single-pod ``(data=16, model=16)`` and multi-pod
+``(pod=2, data=16, model=16)``. The ``pod`` axis carries only the batch
+(pure data parallelism across the DCN; gradient reduction over ``pod`` is the
+PowerTCP-scheduled collective, see repro/commsched).
+
+Activations use the same table via ``constrain(x, axes)`` which becomes a
+no-op outside a ``use_rules`` context (CPU unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicated). "batch" expands to all
+# data-parallel axes present in the mesh.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": "model",
+    "inner": "model",
+    "embed": "data",        # FSDP / ZeRO-3: weight's non-TP dim over data
+    "seq": "model",         # sequence parallelism (activations opt-in)
+    "layers": None,
+    "head_dim": None,
+    "qk": None,
+    "state": None,
+    "conv": None,
+    None: None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+def axes_to_pspec(axes: Sequence[Optional[str]], mesh: Mesh,
+                  rules: Optional[dict] = None) -> P:
+    """Translate logical axes to a PartitionSpec valid on ``mesh``."""
+    rules = rules or DEFAULT_RULES
+    mesh_axes = set(mesh.axis_names)
+    out = []
+    for a in axes:
+        m = rules.get(a, None)
+        if m is None:
+            out.append(None)
+            continue
+        if isinstance(m, str):
+            m = (m,)
+        picked = tuple(ax for ax in m if ax in mesh_axes)
+        out.append(picked if len(picked) > 1 else
+                   (picked[0] if picked else None))
+    # PartitionSpec must not reuse a mesh axis twice; later uses replicate.
+    seen, dedup = set(), []
+    for entry in out:
+        es = entry if isinstance(entry, tuple) else ((entry,) if entry else ())
+        if any(e in seen for e in es):
+            dedup.append(None)
+        else:
+            seen.update(es)
+            dedup.append(entry)
+    return P(*dedup)
+
+
+def named_sharding(axes: Sequence[Optional[str]], mesh: Mesh,
+                   rules: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, axes_to_pspec(axes, mesh, rules))
+
+
+def _fit_spec_to_shape(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the dim (e.g. 10 heads on a 16-way
+    model axis, 1 kv head, batch=1 decode): GSPMD-safe replication fallback."""
+    sizes = dict(mesh.shape)   # works for Mesh and AbstractMesh
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            out.append(None)
+            continue
+        axs = entry if isinstance(entry, tuple) else (entry,)
+        kept, prod = [], 1
+        for ax in axs:
+            if dim % (prod * sizes[ax]) == 0:
+                kept.append(ax)
+                prod *= sizes[ax]
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+def sharding_for_shape(shape: Sequence[int], axes: Sequence[Optional[str]],
+                       mesh: Mesh, rules: Optional[dict] = None
+                       ) -> NamedSharding:
+    spec = axes_to_pspec(axes, mesh, rules)
+    return NamedSharding(mesh, _fit_spec_to_shape(spec, shape, mesh))
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[dict] = None):
+    """Enable ``constrain`` inside step functions being lowered for ``mesh``."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, (rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint against the active rules; no-op outside a
+    ``use_rules`` context. Shape-aware: axes that don't divide the dim are
+    dropped (replicated) rather than erroring."""
+    if _CTX.mesh is None:
+        return x
+    spec = axes_to_pspec(axes, _CTX.mesh, _CTX.rules)
+    spec = _fit_spec_to_shape(spec, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh of the enclosing ``use_rules`` context (None in unit tests)."""
+    return _CTX.mesh

@@ -1,0 +1,20 @@
+"""Pytree-level sharding derivation from ParamSpec trees."""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh, NamedSharding
+
+from ..models.spec import ParamSpec, tree_map_specs
+from .axes import sharding_for_shape
+
+
+def tree_shardings(specs, mesh: Mesh, rules: Optional[dict] = None):
+    """NamedSharding per ParamSpec leaf (divisibility-safe)."""
+    return tree_map_specs(
+        lambda s: sharding_for_shape(s.shape, s.axes, mesh, rules), specs)
+
+
+def input_sharding(shape, axes, mesh: Mesh,
+                   rules: Optional[dict] = None) -> NamedSharding:
+    return sharding_for_shape(shape, axes, mesh, rules)

@@ -1,0 +1,88 @@
+"""AdamW with dtype-configurable moments, warmup+cosine LR, global-norm clip.
+
+Moment tensors inherit the parameter sharding (ZeRO: optimizer state is
+FSDP-sharded exactly like the weights). ``moments_dtype="bfloat16"`` halves
+optimizer memory — required headroom for llama3-405b on 16 GiB chips.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.spec import ParamSpec, tree_map_specs
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray           # int32 scalar
+    mu: dict                    # first moment (pytree like params)
+    nu: dict                    # second moment
+
+
+def opt_specs(param_specs, cfg):
+    """ParamSpec tree for the optimizer state (for dry-run/sharding)."""
+    dt = cfg.moments_dtype
+
+    def mom(s: ParamSpec):
+        return ParamSpec(s.shape, dt, s.axes, "zeros")
+
+    return OptState(
+        step=ParamSpec((), "int32", (), "zeros"),
+        mu=tree_map_specs(mom, param_specs),
+        nu=tree_map_specs(mom, param_specs),
+    )
+
+
+def init_opt(params, cfg) -> OptState:
+    dt = jnp.dtype(cfg.moments_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def lr_schedule(step, cfg):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * (step + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt: OptState, cfg):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt.step + 1
+    lr = lr_schedule(opt.step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    b1, b2 = cfg.adam_b1, cfg.adam_b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step_ = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt.mu, opt.nu)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, OptState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}

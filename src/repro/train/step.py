@@ -1,0 +1,92 @@
+"""Train-step builder: loss, microbatch gradient accumulation, optimizer.
+
+The returned ``train_step(params, opt, batch)`` is a pure function suitable
+for ``jax.jit`` with in/out shardings. Microbatch accumulation is a
+``lax.scan`` over batch slices — activation memory scales with the
+microbatch, and XLA overlaps the FSDP all-gathers of layer weights with the
+previous microbatch's compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..models.lm import lm_forward, lm_specs
+from ..models.spec import is_spec
+from ..sharding.axes import constrain
+from .optim import adamw_update
+
+
+def xent_loss(logits, labels, cfg: ModelConfig):
+    """Mean token cross-entropy; masks label==-1 and padded vocab columns."""
+    tv = cfg.true_vocab or cfg.vocab_size
+    if tv < cfg.vocab_size:
+        pad = jnp.full((cfg.vocab_size - tv,), -1e30, logits.dtype)
+        logits = logits.at[..., tv:].set(pad)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ll = (gold - logz) * mask
+    return -jnp.sum(ll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    accum_dtype = jnp.dtype(getattr(tcfg, "accum_dtype", "float32"))
+    specs = lm_specs(cfg)
+
+    def _shard_like_params(grads):
+        """Constrain each gradient leaf to its parameter's logical axes.
+
+        Without this the microbatch accumulation carry is REPLICATED across
+        the FSDP axis and XLA all-reduces the full gradient every microbatch
+        (measured: 1.2e13 B/dev on llama3-405b). With it, each microbatch's
+        gradient is reduce-scattered into ZeRO shards (~16x fewer DCN/ICI
+        bytes). §Perf iteration 1.
+        """
+        spec_leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+        g_leaves, treedef = jax.tree.flatten(grads)
+        out = [constrain(g, *s.axes)
+               for g, s in zip(g_leaves, spec_leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def loss_fn(params, mb):
+        logits = lm_forward(params, mb, cfg, remat=tcfg.remat)
+        return xent_loss(logits, mb["labels"], cfg)
+
+    def train_step(params, opt, batch):
+        k = max(tcfg.microbatch, 1)
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = _shard_like_params(g)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g)
+                gsum = _shard_like_params(gsum)
+                return (gsum, lsum + l), None
+
+            g0 = _shard_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: (g / k), gsum)
+            loss = lsum / k
+        params, opt, metrics = adamw_update(params, grads, opt, tcfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, remat: str = "none"):
+    def eval_step(params, batch):
+        logits = lm_forward(params, batch, cfg, remat=remat)
+        return xent_loss(logits, batch["labels"], cfg)
+    return eval_step

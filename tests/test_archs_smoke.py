@@ -1,0 +1,117 @@
+"""Per-arch smoke tests: reduced same-family config, one forward + one
+train step + prefill/decode parity on CPU; asserts shapes and no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig, reduced_config
+from repro.models import init_params, lm_specs
+from repro.models.lm import lm_decode_step, lm_forward, lm_prefill
+from repro.train import init_opt, make_train_step
+
+
+def _batch(cfg, B=2, T=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tv = cfg.true_vocab or cfg.vocab_size
+    b = {"tokens": jnp.asarray(rng.integers(0, tv, (B, T)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, tv, (B, T)), jnp.int32)}
+    if cfg.enc_layers:
+        b["enc_feats"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    if cfg.num_image_tokens:
+        b["img_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    specs = lm_specs(cfg)
+    params = init_params(specs, jax.random.key(0))
+    batch = _batch(cfg)
+
+    logits = lm_forward(params, batch, cfg, remat="none")
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    tcfg = TrainConfig(microbatch=2, remat="full", lr=1e-3,
+                       warmup_steps=1, total_steps=10)
+    step = make_train_step(cfg, tcfg)
+    opt = init_opt(params, tcfg)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "recurrentgemma_2b",
+                                  "mamba2_130m", "whisper_large_v3",
+                                  "gemma_7b", "stablelm_3b"])
+def test_prefill_decode_parity(arch):
+    """Teacher-forced decode must reproduce the full forward logits."""
+    cfg = reduced_config(arch)
+    params = init_params(lm_specs(cfg), jax.random.key(0))
+    B, T, P = 2, 12, 9
+    batch = _batch(cfg, B, T, seed=3)
+    full = lm_forward(params, batch, cfg, remat="none")
+
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :P]
+    logits, cache = lm_prefill(params, pb, cfg, cache_len=T + 2)
+    errs = [float(jnp.max(jnp.abs(logits[:, 0] - full[:, P - 1])))]
+    for i in range(P, T):
+        logits, cache = lm_decode_step(
+            params, batch["tokens"][:, i:i + 1], cache, jnp.int32(i), cfg)
+        errs.append(float(jnp.max(jnp.abs(logits[:, 0] - full[:, i]))))
+    assert max(errs) < 0.05, errs
+
+
+def test_moe_parity_without_drops():
+    """MoE decode == forward when capacity is large enough (no drops)."""
+    cfg = dataclasses.replace(reduced_config("qwen3_moe_30b_a3b"),
+                              moe_capacity=8.0)
+    params = init_params(lm_specs(cfg), jax.random.key(0))
+    batch = _batch(cfg, 2, 12, seed=5)
+    full = lm_forward(params, batch, cfg, remat="none")
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, :9]
+    logits, cache = lm_prefill(params, pb, cfg, cache_len=14)
+    assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, 8]))) < 1e-3
+
+
+def test_remat_equivalence():
+    """full / nested / none remat produce identical losses."""
+    cfg = dataclasses.replace(reduced_config("qwen3_14b"), num_layers=4)
+    params = init_params(lm_specs(cfg), jax.random.key(0))
+    batch = _batch(cfg)
+    from repro.train.step import xent_loss
+    out = {}
+    for remat in ("none", "full", "nested", "dots"):
+        logits = lm_forward(params, batch, cfg, remat=remat)
+        out[remat] = float(xent_loss(logits, batch["labels"], cfg))
+    base = out["none"]
+    for k, v in out.items():
+        assert abs(v - base) < 1e-5, out
+
+
+def test_long_context_state_is_context_independent():
+    """rec/ssm archs: decode cache bytes don't grow with context length."""
+    from repro.serve import cache_bytes
+    for arch in ("recurrentgemma_2b", "mamba2_130m"):
+        cfg = reduced_config(arch)
+        b1 = cache_bytes(cfg, 1, 4096)
+        b2 = cache_bytes(cfg, 1, 524288)
+        assert b2 <= b1 * 1.01, (arch, b1, b2)
+    # and a full-attention arch DOES grow (sanity of the metric)
+    cfg = reduced_config("qwen3_14b")
+    assert cache_bytes(cfg, 1, 8192) > 3 * cache_bytes(cfg, 1, 2048)

@@ -1,0 +1,81 @@
+"""Fault tolerance: crash/restart determinism, elastic restore, async save."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig, reduced_config
+from repro.train import (Checkpointer, CrashInjected, DataConfig,
+                         SyntheticData, train_driver)
+
+
+CFG = reduced_config("qwen3_14b")
+TCFG = TrainConfig(microbatch=2, remat="none", lr=1e-2, warmup_steps=2,
+                   total_steps=20)
+DCFG = DataConfig(batch=8, seq=32)
+
+
+def test_crash_restart_bitwise(tmp_path):
+    ref = train_driver(CFG, TCFG, DCFG, steps=10)
+    with pytest.raises(CrashInjected):
+        train_driver(CFG, TCFG, DCFG, steps=10, ckpt_dir=str(tmp_path),
+                     ckpt_every=3, crash_at=5)
+    resumed = train_driver(CFG, TCFG, DCFG, steps=10,
+                           ckpt_dir=str(tmp_path), ckpt_every=3)
+    assert resumed["start_step"] > 0
+    # bitwise identical trailing losses (deterministic data + update)
+    np.testing.assert_array_equal(
+        np.asarray(ref["losses"][resumed["start_step"]:]),
+        np.asarray(resumed["losses"]))
+    # and bitwise identical final params
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_seekable():
+    d = SyntheticData(CFG, DCFG)
+    b5 = d.batch_at(5)
+    # reading out of order / repeatedly yields identical bytes
+    _ = [d.batch_at(k) for k in (9, 1, 7)]
+    again = d.batch_at(5)
+    for k in b5:
+        np.testing.assert_array_equal(b5[k], again[k])
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Checkpoint written under one layout restores onto another mesh."""
+    from repro.models import init_params, lm_specs
+    from repro.sharding import tree_shardings
+    params = init_params(lm_specs(CFG), jax.random.key(1))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, params, blocking=True)
+
+    mesh = jax.make_mesh((1,), ("model",))   # the 1-device "new fleet"
+    shard = tree_shardings(lm_specs(CFG), mesh)
+    step, restored = ck.restore(params, shardings=shard)
+    assert step == 0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(8.0)}
+    for s in range(5):
+        ck.save(s, {"w": jnp.arange(8.0) + s})
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+    _, r = ck.restore(tree, step=4)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.arange(8.0) + 4)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """No step_ dir exists until fully written (tmp dir then replace)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, {"w": jnp.ones((4,))}, blocking=True)
+    names = os.listdir(tmp_path)
+    assert "step_7" in names
+    assert not any(n.startswith(".tmp") for n in names)

@@ -1,0 +1,124 @@
+"""Theorem-level validation of the control laws against the paper.
+
+Theorem 1: unique equilibrium (w_e, q_e) = (b*tau + beta_hat, beta_hat).
+Theorem 2: exponential convergence with time constant delta_t / gamma.
+Theorem 3: beta_i-weighted proportional fairness.
+Property 1: power equals bandwidth-window product at the bottleneck.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, LawConfig, SimConfig, default_law_config,
+                        make_flows_single, simulate, single_bottleneck)
+from repro.core import analysis
+
+B = 100 * GBPS
+TAU = 20 * US
+BDP = B * TAU
+
+
+def run_long_lived(law, n=4, steps=6000, gamma=0.9, expected_flows=None,
+                   betas=None, nic_mult=4.0):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(n, tau=TAU, nic=nic_mult * B, sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    lcfg = default_law_config(flows, gamma=gamma,
+                              expected_flows=expected_flows or float(n))
+    if betas is not None:
+        lcfg = lcfg._replace(beta=jnp.asarray(betas, jnp.float32))
+    st, rec = simulate(topo, flows, law, lcfg, cfg)
+    return st, rec, lcfg
+
+
+@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp", "swift"])
+def test_unique_equilibrium(law):
+    st, rec, lcfg = run_long_lived(law)
+    beta_hat = float(jnp.sum(lcfg.beta))
+    # average out the per-RTT update ripple around the fixed point
+    w_sum = float(np.asarray(rec.w_sum)[-1500:].mean())
+    q = float(np.asarray(rec.q[:, 0])[-1500:].mean())
+    assert w_sum == pytest.approx(BDP + beta_hat, rel=0.03)
+    assert q == pytest.approx(beta_hat, rel=0.05)
+    # full throughput at equilibrium
+    thru = np.asarray(rec.thru[:, 0])[-1000:].mean()
+    assert thru == pytest.approx(B, rel=0.01)
+
+
+def test_equilibrium_independent_of_start(seed=0):
+    """Theorem 1 (uniqueness): different initial windows (nic multipliers set
+    cwnd_init = nic*tau), same fixed point — with beta held constant."""
+    finals = []
+    betas = [BDP / 4.0] * 4
+    for nic_mult in (1.0, 2.0, 8.0):
+        _, rec, _ = run_long_lived("powertcp", nic_mult=nic_mult, betas=betas)
+        finals.append(float(np.asarray(rec.q[:, 0])[-1500:].mean()))
+    spread = (max(finals) - min(finals)) / BDP
+    assert spread < 0.02
+
+
+def test_current_based_has_no_unique_equilibrium():
+    """Paper section 2.2 / Fig. 3b via the ODE model."""
+    cfg = analysis.ODEConfig()
+    spread_current = analysis.endpoint_spread("current", cfg)
+    spread_power = analysis.endpoint_spread("power", cfg)
+    spread_voltage = analysis.endpoint_spread("voltage_q", cfg)
+    assert spread_current > 10 * max(spread_power, 1e-6)
+    assert spread_power < 0.05
+    assert spread_voltage < 0.2
+
+
+def test_convergence_time_constant():
+    """Theorem 2 on the ODE: w(t) - w_e decays as exp(-gamma_r t)."""
+    cfg = analysis.ODEConfig()
+    w_e, q_e = analysis.equilibrium_powertcp(cfg)
+    path = np.asarray(analysis.trajectory("power", w0=2 * w_e, q0=q_e, cfg=cfg))
+    t_idx = int(round((1.0 / cfg.gamma_r) / cfg.dt))
+    err0 = 2 * w_e - w_e
+    err_t = path[t_idx, 1] - w_e
+    assert err_t / err0 == pytest.approx(np.exp(-1.0), rel=0.08)
+    # 99.3% convergence within 5 time constants (paper's statement)
+    t5 = int(round((5.0 / cfg.gamma_r) / cfg.dt))
+    assert abs(path[t5, 1] - w_e) / err0 < 0.012
+
+
+def test_weighted_proportional_fairness():
+    """Theorem 3: w_i proportional to beta_i at equilibrium."""
+    beta_unit = BDP / 8.0
+    betas = [beta_unit, 2 * beta_unit, 2 * beta_unit, 3 * beta_unit]
+    st, _, _ = run_long_lived("powertcp", n=4, betas=betas, steps=8000)
+    w = np.asarray(st.w)
+    ratios = w / w[0]
+    assert np.allclose(ratios, [1.0, 2.0, 2.0, 3.0], rtol=0.05)
+
+
+def test_power_is_bandwidth_window_product():
+    """Property 1: Gamma(t) = b * w(t - t_f) at the bottleneck (equilibrium)."""
+    st, rec, _ = run_long_lived("powertcp")
+    q = float(st.q[0])
+    mu = float(st.out_rate[0])
+    lam = float(rec.lam[-1])
+    voltage = q + B * TAU
+    current = lam   # at equilibrium qdot=0 so current = mu = lam
+    gamma_power = voltage * current
+    w_sum = float(jnp.sum(st.w))
+    assert gamma_power == pytest.approx(B * w_sum, rel=0.03)
+    assert mu == pytest.approx(lam, rel=0.01)
+
+
+def test_eigenvalues_negative():
+    cfg = analysis.ODEConfig()
+    e1, e2 = analysis.eigenvalues_powertcp(cfg)
+    assert e1 < 0 and e2 < 0
+
+
+@pytest.mark.parametrize("law", ["hpcc", "timely", "dcqcn"])
+def test_baselines_sane(law):
+    """Baselines reach healthy utilization without NaNs (fluid approx).
+    DCQCN's ~70% here mirrors its known sawtooth under-utilization with few
+    flows and per-50us CNP cuts; the paper likewise reports DCQCN trailing."""
+    st, rec, _ = run_long_lived(law, steps=8000)
+    thru = np.asarray(rec.thru[:, 0])[-2000:].mean()
+    assert thru > (0.62 if law == "dcqcn" else 0.75) * B
+    assert np.isfinite(np.asarray(st.w)).all()
+    assert float(st.q[0]) >= 0.0

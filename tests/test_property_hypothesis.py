@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) on simulator + control-law invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GBPS, US, SimConfig, default_law_config,
+                        make_flows_single, simulate, single_bottleneck)
+from repro.core.laws import LawConfig
+from repro.core import analysis
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    b_gbps=st.sampled_from([25.0, 40.0, 100.0, 200.0]),
+    tau_us=st.sampled_from([8.0, 16.0, 24.0]),
+    n=st.integers(min_value=1, max_value=12),
+    gamma=st.floats(min_value=0.4, max_value=0.95),
+)
+def test_powertcp_equilibrium_property(b_gbps, tau_us, n, gamma):
+    """For any (b, tau, n, gamma): PowerTCP reaches w_e = BDP + beta_hat and
+    q_e = beta_hat with full utilization, no NaNs and q >= 0 throughout."""
+    b = b_gbps * GBPS
+    tau = tau_us * US
+    topo = single_bottleneck(bandwidth=b, buffer=64e6)
+    flows = make_flows_single(n, tau=tau, nic=4 * b, sim_dt=1e-6)
+    # ~400 RTTs is plenty (convergence is ~5 update intervals)
+    steps = int(400 * tau_us)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=max(int(4 * tau_us) + 8, 64))
+    lcfg = default_law_config(flows, gamma=gamma, expected_flows=float(n))
+    stf, rec = simulate(topo, flows, "powertcp", lcfg, cfg)
+    beta_hat = float(jnp.sum(lcfg.beta))
+    q = np.asarray(rec.q[:, 0])
+    assert np.isfinite(np.asarray(stf.w)).all()
+    assert (q >= 0).all()
+    assert float(jnp.sum(stf.w)) == pytest.approx(b * tau + beta_hat, rel=0.05)
+    assert float(stf.q[0]) == pytest.approx(beta_hat, rel=0.12)
+    assert np.asarray(rec.thru[:, 0])[-50:].mean() == pytest.approx(b, rel=0.02)
+
+
+@settings(**SETTINGS)
+@given(
+    kind=st.sampled_from(["voltage_q", "voltage_delay", "power"]),
+    w_mult=st.floats(min_value=0.3, max_value=3.0),
+    q_mult=st.floats(min_value=0.0, max_value=3.0),
+)
+def test_ode_trajectories_bounded_and_converge(kind, w_mult, q_mult):
+    """Voltage/power-class ODEs converge to a finite fixed point from any
+    initial condition, with w and q staying finite and nonnegative."""
+    cfg = analysis.ODEConfig(steps=6000)
+    bdp = cfg.b * cfg.tau
+    path = np.asarray(analysis.trajectory(kind, w_mult * bdp, q_mult * bdp,
+                                          cfg))
+    assert np.isfinite(path).all()
+    assert (path[:, 0] >= 0).all()
+    # late-time drift is tiny relative to BDP
+    drift = abs(path[-1, 1] - path[-500, 1]) / bdp
+    assert drift < 0.02
+
+
+@settings(**SETTINGS)
+@given(
+    betas=st.lists(st.floats(min_value=0.2, max_value=4.0),
+                   min_size=2, max_size=6),
+)
+def test_fairness_property(betas):
+    """Theorem 3 holds for arbitrary positive beta vectors."""
+    b = 100 * GBPS
+    tau = 16 * US
+    unit = b * tau / 8.0
+    topo = single_bottleneck(bandwidth=b, buffer=64e6)
+    flows = make_flows_single(len(betas), tau=tau, nic=4 * b, sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=8000, hist=128)
+    lcfg = default_law_config(flows, expected_flows=1.0)
+    lcfg = lcfg._replace(beta=jnp.asarray([x * unit for x in betas],
+                                          jnp.float32))
+    stf, _ = simulate(topo, flows, "powertcp", lcfg, cfg)
+    w = np.asarray(stf.w, dtype=np.float64)
+    ww = w / w.sum()
+    bb = np.asarray(betas) / np.sum(betas)
+    assert np.allclose(ww, bb, atol=0.02)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    law=st.sampled_from(["powertcp", "theta_powertcp", "swift", "hpcc"]),
+    buffer_mb=st.floats(min_value=0.5, max_value=8.0),
+)
+def test_no_law_overflows_shallow_buffers(law, buffer_mb):
+    b = 100 * GBPS
+    tau = 16 * US
+    topo = single_bottleneck(bandwidth=b, buffer=buffer_mb * 1e6)
+    flows = make_flows_single(16, tau=tau, nic=b, sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=3000, hist=128)
+    stf, rec = simulate(topo, flows, law,
+                        default_law_config(flows, expected_flows=16.0), cfg)
+    q = np.asarray(rec.q[:, 0])
+    assert np.isfinite(q).all() and (q >= 0).all()
+    assert q.max() <= buffer_mb * 1e6 + 1e3

@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) on model-layer invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# -------------------------------------------------------------------------
+# RG-LRU: the associative scan must equal the sequential recurrence
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    B=st.integers(1, 3), S=st.integers(1, 24), D=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_rglru_scan_equals_sequential(B, S, D, seed):
+    from repro.models.rglru import rglru_scan
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.0, 1.0, (B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    got = rglru_scan(a, b)
+    h = np.zeros((B, D), np.float32)
+    want = []
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        want.append(h.copy())
+    np.testing.assert_allclose(np.asarray(got),
+                               np.stack(want, axis=1), rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------------------
+# SSD: chunked scan == chunk-size-independent == tiny-chunk recurrence
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    S=st.sampled_from([7, 16, 33, 64]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_ssd_chunk_size_invariance(S, chunk, seed):
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(seed)
+    B, H, Pd, N, G = 2, 2, 4, 3, 1
+    x = jnp.asarray(rng.standard_normal((B, S, H, Pd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.1, 1.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    y1, s1 = ssd_chunked(x, dt, a, Bm, Cm, chunk=chunk)
+    y2, s2 = ssd_chunked(x, dt, a, Bm, Cm, chunk=1)    # pure recurrence
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------------------------------
+# MoE dispatch: token conservation + gate-weight preservation
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(4, 64), E=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 3), seed=st.integers(0, 2**16),
+)
+def test_moe_dispatch_conservation(n, E, k, seed):
+    """With ample capacity, dispatch->identity-expert->combine returns
+    exactly sum_k(gate_k) * x (gates renormalize to 1 => identity)."""
+    from repro.models.layers import _moe_dispatch, _moe_combine
+    rng = np.random.default_rng(seed)
+    d = 8
+    xf = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    eid = jnp.asarray(rng.integers(0, E, (n, k)), jnp.int32)
+    gate = jnp.asarray(rng.uniform(0.1, 1.0, (n, k)), jnp.float32)
+    gate = gate / gate.sum(axis=1, keepdims=True)
+    C = n * k            # ample capacity: no drops possible
+    buf, st_, keep, dest, sg = _moe_dispatch(xf, eid, gate, E, k, C,
+                                             jnp.float32)
+    assert bool(keep.all())
+    out = _moe_combine(buf.reshape(E * C, d), st_, keep, dest, sg, n, d,
+                       jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xf),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(8, 64), seed=st.integers(0, 2**16))
+def test_moe_dispatch_capacity_drops_monotone(n, seed):
+    """Kept-token count never exceeds capacity per expert and is monotone
+    in capacity."""
+    from repro.models.layers import _moe_dispatch
+    rng = np.random.default_rng(seed)
+    E, k, d = 4, 2, 4
+    xf = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    eid = jnp.asarray(rng.integers(0, E, (n, k)), jnp.int32)
+    gate = jnp.full((n, k), 0.5, jnp.float32)
+    kept_prev = -1
+    for C in (1, 2, 4, n * k):
+        _, _, keep, dest, _ = _moe_dispatch(xf, eid, gate, E, k, C,
+                                            jnp.float32)
+        kept = int(keep.sum())
+        assert kept >= kept_prev
+        # no slot receives two tokens
+        used = np.asarray(dest)[np.asarray(keep)]
+        assert len(np.unique(used)) == len(used)
+        kept_prev = kept
+
+
+# -------------------------------------------------------------------------
+# int8 + error feedback: quantization error is bounded and EF-corrected
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.01, 100.0))
+def test_int8_ef_error_bounded_and_compensated(seed, scale):
+    from repro.commsched.outer import quantize_int8, dequantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    ef = jnp.zeros_like(x)
+    q, s, ef1 = quantize_int8(x, ef)
+    deq = dequantize_int8(q, s)
+    # single-shot error bounded by half a quantization step
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(deq - x))) <= 0.51 * step
+    # EF: repeated transmission of the SAME value converges (error feedback
+    # accumulates the residual so the time-average is unbiased)
+    total = deq
+    e = ef1
+    for _ in range(16):
+        q, s, e = quantize_int8(x, e)
+        total = total + dequantize_int8(q, s)
+    avg = total / 17.0
+    assert float(jnp.max(jnp.abs(avg - x))) <= 0.1 * step + 1e-6
+
+
+# -------------------------------------------------------------------------
+# xent loss: padded vocab columns must not change the loss
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), pad=st.integers(0, 64))
+def test_xent_vocab_pad_invariance(seed, pad):
+    import dataclasses
+    from repro.configs import reduced_config
+    from repro.train.step import xent_loss
+    rng = np.random.default_rng(seed)
+    cfg = reduced_config("qwen3_14b")
+    tv = 128
+    B, T = 2, 8
+    logits = jnp.asarray(rng.standard_normal((B, T, tv + pad)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, tv, (B, T)), jnp.int32)
+    cfg1 = dataclasses.replace(cfg, vocab_size=tv + pad, true_vocab=tv)
+    cfg0 = dataclasses.replace(cfg, vocab_size=tv, true_vocab=0)
+    l1 = float(xent_loss(logits, labels, cfg1))
+    l0 = float(xent_loss(logits[..., :tv], labels, cfg0))
+    assert abs(l1 - l0) < 1e-5

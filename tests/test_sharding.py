@@ -1,0 +1,92 @@
+"""Sharding rules: logical->physical translation, divisibility fallback,
+spec coverage of every arch's parameter tree."""
+import jax
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models import lm_specs, is_spec
+from repro.models.spec import tree_map_specs
+from repro.sharding import axes_to_pspec, sharding_for_shape, tree_shardings
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_axes_translation(mesh):
+    assert axes_to_pspec(("batch", None, "heads"), mesh) == \
+        P("data", None, "model")
+    # duplicate mesh axis use replicates the later occurrence
+    assert axes_to_pspec(("mlp", "experts"), mesh) == P("model", None)
+
+
+def test_divisibility_fallback():
+    """Production-mesh divisibility on an AbstractMesh(16,16): dims that
+    don't divide the axis replicate instead of erroring."""
+    from jax.sharding import AbstractMesh
+    from repro.sharding.axes import _fit_spec_to_shape
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    # kv=1 can't shard over the 16-way model axis -> replicated
+    got = _fit_spec_to_shape(P("data", "model", None), (128, 1, 64), mesh)
+    assert got == P("data", None, None)
+    # 10 heads (recurrentgemma) don't divide 16 -> replicated
+    got = _fit_spec_to_shape(P("data", "model", None), (2560, 10, 256), mesh)
+    assert got == P("data", None, None)
+    # 40 experts don't divide 16 either (granite) -> replicated
+    got = _fit_spec_to_shape(P("model", None, "data"), (40, 512, 1536), mesh)
+    assert got == P(None, None, "data")
+    # batch=1 (long_500k decode) can't take ("pod","data")
+    pm = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    got = _fit_spec_to_shape(P(("pod", "data"), None), (1, 32), pm)
+    assert got == P(None, None)
+    # batch=256 takes both pod and data (2*16 divides)
+    got = _fit_spec_to_shape(P(("pod", "data"), None), (256, 32), pm)
+    assert got == P(("pod", "data"), None)
+
+
+def test_all_arch_param_axes_match_shapes():
+    """Every ParamSpec's axes tuple must match its rank — full configs."""
+    for arch in ARCHS:
+        specs = lm_specs(get_config(arch))
+        bad = []
+
+        def check(s, _bad=bad):
+            if len(s.axes) != len(s.shape):
+                _bad.append(s)
+            return s
+        tree_map_specs(check, specs)
+        assert not bad, (arch, bad[:3])
+
+
+def test_full_config_shardings_derivable(mesh):
+    """tree_shardings must succeed for every full arch on a 2-axis mesh."""
+    for arch in ARCHS:
+        specs = lm_specs(get_config(arch))
+        sh = tree_shardings(specs, mesh)
+        assert len(jax.tree.leaves(sh)) == len(
+            jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def test_model_axis_sharding_on_16way():
+    """On a 16-way model axis, TP dims that divide 16 shard; others don't."""
+    import os
+    # simulate with a 1x1 mesh (can't make 16 devices here) — check pspec
+    # translation only: the divisibility logic is mesh-size aware.
+    mesh16 = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("recurrentgemma_2b")      # 10 heads, kv=1
+    specs = lm_specs(cfg)
+    sh = tree_shardings(specs, mesh16)
+    # with axis size 1 everything divides; deeper check happens in the
+    # dry-run integration test (tests/test_dryrun_small.py)
+    assert sh is not None
+
+
+def test_constrain_noop_outside_context():
+    from repro.sharding import constrain
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
