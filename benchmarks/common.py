@@ -1,14 +1,23 @@
-"""Shared benchmark utilities: FCT bookkeeping, law runners, pretty tables."""
+"""Shared benchmark utilities: FCT bookkeeping, law runners, pretty tables.
+
+``run_law`` accepts either one scenario (a ``Flows``) or a list of
+scenarios; a list is padded + stacked (``stack_flows``) and executed through
+``core.simulate_batch`` as ONE jitted program — the whole sweep (seeds,
+loads, fan-ins) compiles once and runs with a leading batch axis, instead
+of one compile + one serial scan per point.
+"""
 from __future__ import annotations
 
 import sys
 import time
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
-from repro.core import (LeafSpine, SimConfig, default_law_config,
-                        homa_alloc_fn, simulate)
+from repro.core import (Flows, LeafSpine, SimConfig, default_law_config,
+                        homa_alloc_fn, pad_flows, simulate, simulate_batch,
+                        stack_flows)
 
 SHORT = 10e3            # <10 KB   (paper Fig. 6 buckets)
 MEDIUM_LO = 100e3
@@ -16,8 +25,12 @@ MEDIUM_HI = 1e6
 
 
 def fct_stats(st, flows, percentile=99.9) -> Dict[str, float]:
-    fct = np.asarray(st.fct)
-    size = np.asarray(flows.size)
+    """FCT percentiles by flow-size bucket. ``st`` is a final SimState (or a
+    raw fct array), possibly batched (leading axis) — padded flows carry
+    ``size = inf`` and are excluded by the finite-size mask, so batched
+    results aggregate across scenarios."""
+    fct = np.asarray(getattr(st, "fct", st)).ravel()
+    size = np.asarray(flows.size).ravel()
     done = np.isfinite(fct) & np.isfinite(size)
     out = {}
     buckets = {
@@ -39,28 +52,55 @@ def fct_stats(st, flows, percentile=99.9) -> Dict[str, float]:
     return out
 
 
+def _tree_index(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
 def run_law(topo, flows, law: str, cfg: SimConfig, fabric: Optional[LeafSpine]
             = None, expected_flows: float = 4.0, record: bool = True,
-            homa_overcommit: int = 0):
-    """One simulation; law='homa' uses the receiver-driven allocator."""
-    alloc_fn = None
-    sim_law = law
-    lcfg = default_law_config(flows, expected_flows=expected_flows)
-    if law == "homa":
-        sim_law = "reno"        # window non-binding; grants cap the rate
-        recv = _receiver_ids(flows, fabric)
-        alloc_fn = homa_alloc_fn(recv, fabric.host_bw,
-                                 max(homa_overcommit, 1), flows.tau,
-                                 flows.start)
+            homa_overcommit: int = 0, backend: str = "reference"):
+    """Run one law over one scenario (``Flows``) or a sweep (list of
+    ``Flows``). Lists return results with a leading batch axis.
+
+    Window/rate laws run through ``simulate_batch`` (one compile for the
+    whole sweep). ``law='homa'`` uses the receiver-driven allocator whose
+    grant bookkeeping is tied to concrete per-scenario receiver ids, so it
+    loops serially — over flows padded to a common size so the results still
+    stack into the same batched shape."""
+    # NB: Flows is itself a NamedTuple — a bare isinstance(tuple) would
+    # misread a single scenario as a sweep of its fields.
+    batched = isinstance(flows, (list, tuple)) and not isinstance(flows,
+                                                                  Flows)
+    scenarios: List = list(flows) if batched else [flows]
     t0 = time.time()
-    st, rec = simulate(topo, flows, sim_law, lcfg, cfg, alloc_fn=alloc_fn,
-                       record=record)
+
+    if law == "homa":
+        n = max(int(f.tau.shape[0]) for f in scenarios)
+        outs = []
+        for fl in scenarios:
+            fl = pad_flows(fl, n, topo.num_queues)
+            recv = _receiver_ids(fl, fabric)
+            alloc_fn = homa_alloc_fn(recv, fabric.host_bw,
+                                     max(homa_overcommit, 1), fl.tau,
+                                     fl.start)
+            lcfg = default_law_config(fl, expected_flows=expected_flows)
+            # window non-binding; grants cap the rate
+            outs.append(simulate(topo, fl, "reno", lcfg, cfg,
+                                 alloc_fn=alloc_fn, record=record))
+        st, rec = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *outs)
+    else:
+        fb = stack_flows(scenarios, topo.num_queues)
+        st, rec = simulate_batch(topo, fb, law, cfg=cfg, record=record,
+                                 backend=backend,
+                                 expected_flows=expected_flows)
+    if not batched:
+        st, rec = _tree_index(st, 0), (None if rec is None else
+                                       _tree_index(rec, 0))
     return st, rec, time.time() - t0
 
 
 def _receiver_ids(flows, fabric: LeafSpine):
     """Recover receiver host id from the last real hop (host downlink)."""
-    import numpy as np
     path = np.asarray(flows.path)
     R, S, H = fabric.racks, fabric.spines, fabric.hosts_per_rack
     base = 2 * R * S

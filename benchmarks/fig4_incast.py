@@ -3,7 +3,8 @@
 Setup mirrors the paper: a victim already receiving a long-lived flow is
 hit by a synchronized fan-in of query responses (10:1 and 63:1 — our
 64-host fabric's analogue of the paper's 255:1 at 256 hosts; scale note in
-DESIGN.md section 9). Reported per law:
+DESIGN.md section 9). Both fan-ins run as ONE batched program per law
+(padded + stacked through common.run_law). Reported per law:
   peak buffer occupancy, standing queue after mitigation, drain time,
   and the post-incast throughput dip on the victim link (voltage-CC
   overreaction shows up here: the window was cut too deep and recovers
@@ -13,64 +14,68 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GBPS, US, LeafSpine, SimConfig, incast_flows
+from repro.core import LeafSpine, SimConfig, incast_flows
 from .common import emit, run_law, table
 
 LAWS = ["powertcp", "theta_powertcp", "hpcc", "timely", "dcqcn", "homa"]
 
 
-def _one(fan_in: int, quick: bool, laws=None):
+def _metrics(law, flows, st_fct, q, th, steps, dt, bdp):
+    roll = np.convolve(th, np.ones(100) / 100, mode="valid")
+    fct = np.asarray(st_fct)[:int(flows.tau.shape[0])]
+    fin = np.isfinite(np.asarray(flows.size)) & np.isfinite(fct)
+    done_t = fct[fin].max() if fin.any() else np.nan
+    di = int(min(done_t / dt, steps - 400)) if np.isfinite(done_t) \
+        else steps - 400
+    dip = 1.0 - float(roll[di:di + 2000].min())   # recovery window
+    pk = int(q.argmax())
+    near0 = q < 1.5 * bdp
+    drain = (np.argmax(near0[pk:]) + pk) if near0[pk:].any() else steps
+    return {
+        "law": law,
+        "peak_q_MB": q.max() / 1e6,
+        "end_q_KB": q[-1] / 1e3,
+        "drain_us": float(drain - pk) * dt * 1e6,
+        "dip_after": dip,
+    }
+
+
+def run(quick: bool = False):
     fab = LeafSpine()
     dt = 1e-6
-    flows, bq = incast_flows(fab, fan_in, req_bytes=500e3, sim_dt=dt)
+    fl10, bq = incast_flows(fab, 10, req_bytes=500e3, sim_dt=dt)
+    fl63, _ = incast_flows(fab, 63, req_bytes=500e3, sim_dt=dt)
     steps = 3000 if quick else 8000
     cfg = SimConfig(dt=dt, steps=steps, hist=512, update_period=2e-6)
     rtt = 4 * (2 * fab.d_host + 2 * fab.d_fabric)
     bdp = fab.host_bw * rtt
-    rows = []
-    for law in (laws or LAWS):
-        st, rec, wall = run_law(fab.topology(), flows, law, cfg, fabric=fab,
-                                expected_flows=16.0)
-        q = np.asarray(rec.q[:, bq])
-        th = np.asarray(rec.thru[:, bq]) / fab.host_bw
-        roll = np.convolve(th, np.ones(100) / 100, mode="valid")
-        fct = np.asarray(st.fct)
-        fin = np.isfinite(np.asarray(flows.size)) & np.isfinite(fct)
-        done_t = fct[fin].max() if fin.any() else np.nan
-        di = int(min(done_t / dt, steps - 400)) if np.isfinite(done_t) \
-            else steps - 400
-        dip = 1.0 - float(roll[di:di + 2000].min())   # recovery window
-        pk = int(q.argmax())
-        near0 = q < 1.5 * bdp
-        drain = (np.argmax(near0[pk:]) + pk) if near0[pk:].any() else steps
-        rows.append({
-            "law": law,
-            "peak_q_MB": q.max() / 1e6,
-            "end_q_KB": q[-1] / 1e3,
-            "drain_us": float(drain - pk) * dt * 1e6,
-            "dip_after": dip,
-            "wall_s": wall,
-        })
-        emit(f"fig4.{fan_in}to1.{law}.peak_q_MB",
-             f"{rows[-1]['peak_q_MB']:.3f}")
-        emit(f"fig4.{fan_in}to1.{law}.dip_after", f"{dip:.3f}")
-        emit(f"fig4.{fan_in}to1.{law}.end_q_KB",
-             f"{rows[-1]['end_q_KB']:.1f}")
-    print(table(rows, ["law", "peak_q_MB", "end_q_KB", "drain_us",
-                       "dip_after", "wall_s"],
-                f"Fig. 4 — {fan_in}:1 incast (victim downlink)"))
-    return {r["law"]: r for r in rows}
+    results = {10: {}, 63: {}}
+    for law in LAWS:
+        # quick mode: the heavyweight laws only run the small fan-in
+        fans = [10] if (quick and law in ("dcqcn", "homa")) else [10, 63]
+        scen = {10: fl10, 63: fl63}
+        st, rec, wall = run_law(fab.topology(), [scen[f] for f in fans], law,
+                                cfg, fabric=fab, expected_flows=16.0)
+        emit(f"fig4.{law}.sweep_wall_s", f"{wall:.1f}")
+        for i, fan in enumerate(fans):
+            q = np.asarray(rec.q[i][:, bq])
+            th = np.asarray(rec.thru[i][:, bq]) / fab.host_bw
+            row = _metrics(law, scen[fan], st.fct[i], q, th, steps, dt, bdp)
+            results[fan][law] = row
+            emit(f"fig4.{fan}to1.{law}.peak_q_MB", f"{row['peak_q_MB']:.3f}")
+            emit(f"fig4.{fan}to1.{law}.dip_after", f"{row['dip_after']:.3f}")
+            emit(f"fig4.{fan}to1.{law}.end_q_KB", f"{row['end_q_KB']:.1f}")
+    for fan in (10, 63):
+        rows = list(results[fan].values())
+        print(table(rows, ["law", "peak_q_MB", "end_q_KB", "drain_us",
+                           "dip_after"],
+                    f"Fig. 4 — {fan}:1 incast (victim downlink)"))
 
-
-def run(quick: bool = False):
-    small = _one(10, quick)
-    big = _one(63, quick, laws=["powertcp", "theta_powertcp", "hpcc",
-                                "timely"] if quick else LAWS)
+    small, big = results[10], results[63]
     p, h, d = small["powertcp"], small["hpcc"], small["dcqcn"]
     # Theorem 1 standing queue: q_e = beta_hat = sum_i HostBw*tau/N
-    fab = LeafSpine()
-    rtt = 2 * (2 * fab.d_host + 2 * fab.d_fabric)   # cross-rack base RTT
-    beta_hat_63 = 64 * fab.host_bw * rtt / 16.0 / 1e3      # KB
+    rtt2 = 2 * (2 * fab.d_host + 2 * fab.d_fabric)   # cross-rack base RTT
+    beta_hat_63 = 64 * fab.host_bw * rtt2 / 16.0 / 1e3      # KB
     ok = (p["end_q_KB"] < 150.0                       # near-zero standing q
           and p["dip_after"] <= h["dip_after"] + 0.02  # no recovery loss
           and d["peak_q_MB"] > 4 * p["peak_q_MB"]      # DCQCN overflows

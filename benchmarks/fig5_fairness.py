@@ -5,17 +5,25 @@ leaving in reverse order. Per phase we report each flow's share of the
 bottleneck and Jain's fairness index over the active set — Theorem 3 says
 shares converge to equal (beta-weighted) splits, and stability means no
 oscillation between phases.
+
+The scenario runs as a batched EWMA-gamma sweep through ``simulate_batch``
+(stacked ``LawConfig`` leaves, one compile): the paper-default gamma=0.9
+row feeds the Fig. 5 table/claims, and the sweep additionally checks that
+fair-share convergence is robust across gamma (paper section 3.4 states
+the equilibrium is gamma-independent; gamma only sets convergence speed).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import (GBPS, US, SimConfig, default_law_config,
-                        make_flows_single, simulate, single_bottleneck)
+                        make_flows_single, simulate_batch, single_bottleneck,
+                        stack_flows, stack_law_configs)
 from .common import emit, table
 
 B = 100 * GBPS
 TAU = 20 * US
+GAMMAS = [0.7, 0.8, 0.9, 0.95]          # 0.9 == paper default
 
 
 def jain(x):
@@ -23,19 +31,7 @@ def jain(x):
     return float(x.sum() ** 2 / (len(x) * (x ** 2).sum() + 1e-12))
 
 
-def run(quick: bool = False):
-    ph = 5e-3 if quick else 10e-3            # phase length
-    n = 4
-    starts = [i * ph for i in range(n)]
-    stops = [(2 * n - 1 - i) * ph for i in range(n)]
-    flows = make_flows_single(n, tau=TAU, nic=B,
-                              starts=starts, stops=stops, sim_dt=1e-6)
-    steps = int((2 * n) * ph / 1e-6)
-    cfg = SimConfig(dt=1e-6, steps=steps, hist=256, update_period=0.0)
-    lcfg = default_law_config(flows, expected_flows=float(n))
-    _, rec = simulate(single_bottleneck(bandwidth=B, buffer=32e6), flows,
-                      "powertcp", lcfg, cfg)
-    lam = np.asarray(rec.lam_f)              # [steps, n]
+def _phase_stats(lam, n, ph, starts, stops):
     rows, jains, utils = [], [], []
     for phase in range(2 * n - 1):
         active = [i for i in range(n)
@@ -50,12 +46,43 @@ def run(quick: bool = False):
         rows.append({"phase": phase, "active": len(active), "jain": j,
                      "util": u,
                      **{f"f{i}": float(shares[i]) for i in range(n)}})
+    return rows, jains, utils
+
+
+def run(quick: bool = False):
+    ph = 5e-3 if quick else 10e-3            # phase length
+    n = 4
+    gammas = GAMMAS[-2:] if quick else GAMMAS
+    starts = [i * ph for i in range(n)]
+    stops = [(2 * n - 1 - i) * ph for i in range(n)]
+    flows = make_flows_single(n, tau=TAU, nic=B,
+                              starts=starts, stops=stops, sim_dt=1e-6)
+    steps = int((2 * n) * ph / 1e-6)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256, update_period=0.0)
+    topo = single_bottleneck(bandwidth=B, buffer=32e6)
+    lcfgs = [default_law_config(flows, gamma=g, expected_flows=float(n))
+             for g in gammas]
+    fb = stack_flows([flows] * len(gammas), topo.num_queues)
+    _, rec = simulate_batch(topo, fb, "powertcp", stack_law_configs(lcfgs),
+                            cfg)
+    gi = gammas.index(0.9) if 0.9 in gammas else len(gammas) - 1
+
+    stats = {g: _phase_stats(lam_g, n, ph, starts, stops)
+             for g, lam_g in zip(gammas, np.asarray(rec.lam_f))}
+    min_jain_all = {g: min(s[1]) for g, s in stats.items()}
+    rows, jains, utils = stats[gammas[gi]]
     print(table(rows, ["phase", "active", "jain", "util"] +
                 [f"f{i}" for i in range(n)],
-                "Fig. 5 — PowerTCP fair-share convergence per phase"))
+                "Fig. 5 — PowerTCP fair-share convergence per phase "
+                f"(gamma={gammas[gi]})"))
     emit("fig5.min_jain", f"{min(jains):.4f}")
     emit("fig5.min_util", f"{min(utils):.3f}")
-    ok = min(jains) > 0.95 and min(utils) > 0.9
+    for g in gammas:
+        emit(f"fig5.gamma{g}.min_jain", f"{min_jain_all[g]:.4f}")
+    # default-gamma claims as before; gamma robustness: equilibrium fairness
+    # survives the whole sweep (convergence speed may differ)
+    ok = (min(jains) > 0.95 and min(utils) > 0.9
+          and all(v > 0.9 for v in min_jain_all.values()))
     emit("fig5.claims_hold", ok)
     return ok
 

@@ -1,6 +1,11 @@
 """Paper Fig. 6 (claim C4): p99.9 FCT by flow-size bucket, web-search
 workload on the 4:1-oversubscribed leaf-spine fabric.
 
+Seeds run as a batch dimension: the per-seed scenarios are padded + stacked
+and vmapped through ``simulate_batch`` (common.run_law), one compile per
+law for the whole seed sweep; FCT percentiles aggregate over all seeds
+(padded flows carry size=inf and drop out of the buckets).
+
 Scale note (DESIGN.md section 9): 64 hosts / fluid model vs the paper's 256
 hosts / NS3 packets — validation targets are the *relative* orderings:
 PowerTCP <= HPCC << TIMELY/DCQCN for short flows; theta-PowerTCP good for
@@ -10,26 +15,29 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import LeafSpine, SimConfig, poisson_websearch
+from repro.core import LeafSpine, SimConfig, poisson_websearch, stack_flows
 from .common import emit, fct_stats, run_law, table
 
 LAWS = ["powertcp", "theta_powertcp", "hpcc", "timely", "dcqcn", "homa"]
+SEEDS = (1, 2)
 
 
-def run_load(load: float, quick: bool = False, laws=None, seed: int = 1):
+def run_load(load: float, quick: bool = False, laws=None, seeds=SEEDS):
     fab = LeafSpine()
     dt = 1e-6
     duration = 0.01 if quick else 0.03
-    flows = poisson_websearch(fab, load, duration, dt, seed=seed)
-    n = int(flows.tau.shape[0])
+    scenarios = [poisson_websearch(fab, load, duration, dt, seed=s)
+                 for s in seeds]
+    stacked = stack_flows(scenarios, fab.num_queues)
+    n = sum(int(f.tau.shape[0]) for f in scenarios)
     steps = int((duration + (0.01 if quick else 0.04)) / dt)
     cfg = SimConfig(dt=dt, steps=steps, hist=512, update_period=2e-6)
     rows = []
     for law in (laws or LAWS):
-        st, rec, wall = run_law(fab.topology(), flows, law, cfg, fabric=fab,
-                                expected_flows=8.0, record=False,
+        st, rec, wall = run_law(fab.topology(), scenarios, law, cfg,
+                                fabric=fab, expected_flows=8.0, record=False,
                                 homa_overcommit=1)
-        s = fct_stats(st, flows)
+        s = fct_stats(st, stacked)
         rows.append({"law": law, "n_flows": n,
                      "short_p999_us": s["short_p"] * 1e6,
                      "med_p999_us": s["medium_p"] * 1e6,
@@ -40,7 +48,8 @@ def run_load(load: float, quick: bool = False, laws=None, seed: int = 1):
                  f"{rows[-1][f'{b}_p999_us']:.1f}")
     print(table(rows, ["law", "short_p999_us", "med_p999_us", "long_p999_us",
                        "done", "n_flows", "wall_s"],
-                f"Fig. 6 — p99.9 FCT, web-search @ {int(load*100)}% load"))
+                f"Fig. 6 — p99.9 FCT, web-search @ {int(load*100)}% load "
+                f"({len(seeds)} seeds batched)"))
     return {r["law"]: r for r in rows}
 
 

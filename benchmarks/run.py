@@ -1,11 +1,16 @@
 """Benchmark driver — one module per paper table/figure + framework tables.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,fig8]
+  PYTHONPATH=src python -m benchmarks.run --smoke      # scenario-engine perf
 
 Emits ``BENCH,name,value,unit`` lines (machine-parseable) plus pretty
-tables, and finishes with a claims scoreboard. The dry-run/roofline sweep
-(benchmarks.dryrun_table) is orchestrated separately because each cell runs
-in a subprocess; its persisted results are summarized here when present.
+tables, and finishes with a claims scoreboard. ``--smoke`` times the
+batched scenario engine against the serial per-point loop on an 8-seed
+sweep and writes ``BENCH_sweep.json`` (points/sec for both paths) to the
+repo root — the seed of the perf trajectory for later scaling PRs. The
+dry-run/roofline sweep (benchmarks.dryrun_table) is orchestrated separately
+because each cell runs in a subprocess; its persisted results are
+summarized here when present.
 """
 from __future__ import annotations
 
@@ -44,11 +49,84 @@ def _dryrun_summary():
     return len(ok)
 
 
+def smoke_sweep(points: int = 8, steps: int = 2000,
+                out_name: str = "BENCH_sweep.json") -> dict:
+    """Serial-vs-batched scenario engine microbenchmark.
+
+    ``points`` seed scenarios with *distinct* flow counts (as in the real
+    load/seed sweeps), so the serial loop recompiles per point while
+    ``simulate_batch`` pads + stacks and compiles once. Writes points/sec
+    for both paths to ``BENCH_sweep.json``.
+    """
+    import numpy as np
+
+    from repro.core import (GBPS, SimConfig, default_law_config,
+                            make_flows_single, simulate, simulate_batch,
+                            single_bottleneck, stack_flows)
+
+    B = 100 * GBPS
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    scenarios = []
+    for s in range(points):
+        rng = np.random.default_rng(s)
+        nf = 8 + s              # distinct flow counts => serial recompiles
+        scenarios.append(make_flows_single(
+            nf, tau=20e-6, nic=B, sizes=rng.uniform(2e5, 8e5, nf),
+            starts=rng.uniform(0.0, 2e-4, nf), sim_dt=1e-6))
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+
+    t0 = time.time()
+    serial_fcts = []
+    for fl in scenarios:
+        st, _ = simulate(topo, fl, "powertcp",
+                         default_law_config(fl, expected_flows=8.0), cfg,
+                         record=False)
+        serial_fcts.append(np.asarray(st.fct))
+    serial_s = time.time() - t0
+
+    fb = stack_flows(scenarios, topo.num_queues)
+    t0 = time.time()
+    stb, _ = simulate_batch(topo, fb, "powertcp", cfg=cfg, record=False,
+                            expected_flows=8.0)
+    stb.fct.block_until_ready()
+    batched_s = time.time() - t0
+
+    # consistency: the batched sweep must reproduce the serial points
+    max_err = max(
+        float(np.nanmax(np.abs(np.asarray(stb.fct[i][:len(f)]) - f)))
+        for i, f in enumerate(serial_fcts))
+    data = {
+        "points": points,
+        "steps_per_point": steps,
+        "serial_s": round(serial_s, 3),
+        "batched_s": round(batched_s, 3),
+        "serial_points_per_s": round(points / serial_s, 3),
+        "batched_points_per_s": round(points / batched_s, 3),
+        "speedup": round(serial_s / batched_s, 2),
+        "fct_max_abs_err_s": max_err,
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", out_name)
+    with open(out, "w") as f:
+        json.dump(data, f, indent=2)
+    for k, v in data.items():
+        print(f"BENCH,sweep.{k},{v},")
+    print(f"wrote {os.path.abspath(out)}")
+    return data
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serial-vs-batched sweep microbenchmark only; "
+                         "writes BENCH_sweep.json")
     a = ap.parse_args()
+
+    if a.smoke:
+        data = smoke_sweep()
+        return 0 if (data["speedup"] > 1.0 and
+                     data["fct_max_abs_err_s"] < 1e-6) else 1
 
     from . import (fig3_phase, fig4_incast, fig5_fairness, fig6_fct,
                    fig7_load_sweep, fig8_rdcn, tab_commsched)
@@ -62,6 +140,10 @@ def main():
         "commsched": tab_commsched.run,
     }
     only = set(a.only.split(",")) if a.only else set(suite)
+    unknown = only - set(suite)
+    if unknown:
+        ap.error(f"unknown --only targets {sorted(unknown)}; "
+                 f"have {sorted(suite)}")
     scoreboard = {}
     for name, fn in suite.items():
         if name not in only:

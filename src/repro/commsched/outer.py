@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..sharding.compat import shard_map
+
 
 # -------------------------------------------------------------------------
 # Bucketizer: group pytree leaves into ~equal-byte buckets (for grads-level
@@ -116,10 +118,10 @@ def make_outer_sync(mesh: Mesh, shardings, compress: str = "int8_ef",
             xg = jax.lax.all_gather(d_blk, "pod", axis=0, tiled=True)
             return jnp.mean(xg, axis=0, keepdims=True), e_blk
 
-        return jax.shard_map(inner, mesh=mesh,
-                             in_specs=(pod_spec, pod_spec),
-                             out_specs=(pod_spec, pod_spec),
-                             check_vma=False)
+        return shard_map(inner, mesh=mesh,
+                         in_specs=(pod_spec, pod_spec),
+                         out_specs=(pod_spec, pod_spec),
+                         check_vma=False)
 
     def outer_sync(anchor, local_params, ef, mom):
         deltas = jax.tree.map(

@@ -1,9 +1,12 @@
 """PowerTCP core: control laws, power computation, fluid-model simulator."""
 from .types import (Flows, PathObs, Record, SimConfig, SimState, Topology,
                     GBPS, KB, MB, MTU, US)
-from .laws import (LAWS, Law, LawConfig, get_law, norm_power_int,
-                   norm_power_theta)
-from .fluid import FluidSim, default_law_config, init_state, simulate, step
+from .laws import (LAWS, Law, LawConfig, get_law, law_backends,
+                   norm_power_int, norm_power_theta, register_backend)
+from .fluid import (FluidSim, build_incidence, default_law_config,
+                    init_state, pad_flows, simulate, simulate_batch,
+                    stack_flows, stack_law_configs, step)
+from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from .network import LeafSpine, make_flows_single, single_bottleneck
 from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
                        poisson_websearch, synthetic_incast_workload,
@@ -15,9 +18,11 @@ from . import analysis
 __all__ = [
     "Flows", "PathObs", "Record", "SimConfig", "SimState", "Topology",
     "GBPS", "KB", "MB", "MTU", "US",
-    "LAWS", "Law", "LawConfig", "get_law", "norm_power_int",
-    "norm_power_theta",
-    "FluidSim", "default_law_config", "init_state", "simulate", "step",
+    "LAWS", "Law", "LawConfig", "get_law", "law_backends",
+    "norm_power_int", "norm_power_theta", "register_backend",
+    "FluidSim", "build_incidence", "default_law_config", "init_state",
+    "pad_flows", "simulate", "simulate_batch", "stack_flows",
+    "stack_law_configs", "step",
     "LeafSpine", "make_flows_single", "single_bottleneck",
     "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "poisson_websearch",
     "synthetic_incast_workload", "websearch_mean", "websearch_sample",

@@ -13,6 +13,20 @@ RTT). Telemetry is taken from ring-buffer histories, exactly the INT metadata
 of Algorithm 1 (qlen, its gradient, txRate, bandwidth) plus the RTT sample
 used by the theta variant.
 
+Backends (DESIGN.md section 10): every simulation runs either on the
+``"reference"`` backend (pure jnp: scatter-add queue update, jnp laws) or
+the ``"fused"`` backend, which routes the two hot spots through the Pallas
+kernels — the per-tick control update through ``kernels/powertcp_step.py``
+(laws with a registered fused backend) and the queue-arrival scatter through
+``kernels/queue_arrivals.py`` (incidence matmul). Both backends are
+numerically equivalent; tests/test_backends.py asserts full-trajectory
+agreement.
+
+Batched sweeps: ``simulate_batch`` vmaps a whole axis of scenarios (shared
+topology, stacked ``Flows``/``LawConfig`` leaves) through one ``lax.scan``,
+so an entire benchmark sweep (seeds, loads, law hyperparameters) compiles
+once and runs as a single program instead of once per point.
+
 Deviations from a packet simulator are documented in DESIGN.md section 9:
 no per-packet loss/retransmit (losses appear as capped queues), store-and-
 forward shaping across hops is not modelled, and ECN feedback uses the
@@ -20,11 +34,12 @@ expected marking fraction.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.queue_arrivals import queue_arrivals
 from .laws import Law, LawConfig, get_law
 from .types import (MTU, Flows, PathObs, Record, SimConfig, SimState,
                     Topology)
@@ -48,11 +63,32 @@ def _marking(q: jnp.ndarray, buf: jnp.ndarray, cfg: LawConfig) -> jnp.ndarray:
 
 
 class FluidSim(NamedTuple):
+    """One scenario bound to a backend.
+
+    ``backend`` selects the implementation of the two hot spots in ``step``
+    (law update + queue-arrival update); ``incidence`` is the precomputed
+    [H, F, Q+1] one-hot path incidence used by the fused queue kernel
+    (``build_incidence``; None on the reference backend).
+    """
     topo: Topology
     flows: Flows
     law: Law
     law_cfg: LawConfig
     cfg: SimConfig
+    backend: str = "reference"
+    incidence: Optional[jnp.ndarray] = None
+
+
+def build_incidence(flows: Flows, num_queues: int) -> jnp.ndarray:
+    """[H, F, Q+1] one-hot path incidence for the fused queue update.
+
+    Invalid (padded) hops become all-zero rows, so the incidence matmul
+    reproduces exactly the masked scatter-add of the reference backend.
+    """
+    valid = flows.path < num_queues
+    oh = jax.nn.one_hot(flows.path, num_queues + 1, dtype=jnp.float32)
+    oh = oh * valid[..., None].astype(jnp.float32)
+    return jnp.swapaxes(oh, 0, 1)
 
 
 def init_state(sim: FluidSim) -> SimState:
@@ -99,6 +135,29 @@ def _buffer_caps(topo: Topology, q: jnp.ndarray) -> jnp.ndarray:
     return thr
 
 
+def _queue_update(sim: FluidSim, state: SimState, lam_del, valid, bw):
+    """Queue-arrival accumulation + integration: (arrivals, out, q_new).
+
+    Reference backend: masked scatter-add. Fused backend: incidence matmul
+    through ``kernels/queue_arrivals`` (passing ``out_rate=bw`` to the kernel
+    is exact — when q == 0 and arr < bw the clip at 0 reproduces
+    ``out = min(arr, bw)``; the recorded ``out`` is still computed from the
+    returned arrivals).
+    """
+    caps = _buffer_caps(sim.topo, state.q)
+    dt = sim.cfg.dt
+    if sim.backend == "fused" and sim.incidence is not None:
+        arr, q_new = queue_arrivals(jnp.swapaxes(lam_del, 0, 1),
+                                    sim.incidence, state.q, bw, caps, dt=dt)
+    else:
+        contrib = jnp.where(valid, lam_del, 0.0)
+        arr = jnp.zeros_like(state.q).at[sim.flows.path].add(contrib)
+        q_new = jnp.clip(state.q + (arr - bw) * dt, 0.0, caps)
+    out = jnp.where(state.q > 0.0, bw, jnp.minimum(arr, bw))
+    q_new = q_new.at[-1].set(0.0)
+    return arr, out, q_new
+
+
 def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     topo, flows, cfg, law_cfg = sim.topo, sim.flows, sim.cfg, sim.law_cfg
     D = cfg.hist
@@ -128,12 +187,7 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # -- queue update ------------------------------------------------------
     hop_delay_idx = jnp.mod(ptr - flows.tf_steps, D)          # [F,H]
     lam_del = hist_lam[hop_delay_idx, jnp.arange(F)[:, None]]  # [F,H]
-    contrib = jnp.where(valid, lam_del, 0.0)
-    arr = jnp.zeros_like(state.q).at[flows.path].add(contrib)
-    out = jnp.where(state.q > 0.0, bw, jnp.minimum(arr, bw))
-    caps = _buffer_caps(topo, state.q)
-    q_new = jnp.clip(state.q + (arr - out) * dt, 0.0, caps)
-    q_new = q_new.at[-1].set(0.0)
+    arr, out, q_new = _queue_update(sim, state, lam_del, valid, bw)
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
@@ -169,6 +223,7 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
                   valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
                   ecn_frac=ecn)
 
+    # -- control-law update (dispatches through the law's bound backend) ---
     law_state, w, rate_cap = sim.law.update(
         state.law, obs, state.w, state.rate_cap, upd, law_cfg, t_sec)
     w = jnp.clip(w, MTU, 8.0 * flows.nic_rate * flows.tau +
@@ -196,31 +251,152 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     return new_state, rec
 
 
-def simulate(topo: Topology, flows: Flows, law_name: str,
-             law_cfg: Optional[LawConfig] = None,
-             cfg: Optional[SimConfig] = None,
-             bw_fn: Optional[Callable] = None,
-             alloc_fn: Optional[Callable] = None,
-             record: bool = True):
-    """Run a scenario to completion. Returns (final_state, Record pytree).
+def _make_sim(topo: Topology, flows: Flows, law: Law, law_cfg: LawConfig,
+              cfg: SimConfig, backend: str) -> FluidSim:
+    incidence = (build_incidence(flows, topo.num_queues)
+                 if backend == "fused" else None)
+    return FluidSim(topo, flows, law, law_cfg, cfg, backend, incidence)
 
-    The whole scenario (topology, flows, law) is closed over and jitted as a
-    unit; hist buffers live in the carried state so the scan is O(1) memory.
-    """
-    cfg = cfg or SimConfig()
-    law = get_law(law_name)
-    law_cfg = law_cfg or default_law_config(flows)
-    sim = FluidSim(topo, flows, law, law_cfg, cfg)
-    state = init_state(sim)
+
+def _scan_scenario(sim: FluidSim, state: SimState, bw_fn, alloc_fn,
+                   record: bool):
+    """lax.scan over cfg.steps; honours cfg.record_every by scanning chunks
+    (one record per chunk, the chunk's last step) so the recording memory
+    shrinks by the subsample factor. steps must divide by record_every."""
+    cfg = sim.cfg
+    k = max(int(cfg.record_every), 1) if record else 1
 
     def body(st, _):
         st, rec = step(sim, st, bw_fn=bw_fn, alloc_fn=alloc_fn)
         return st, (rec if record else None)
 
+    if k <= 1:
+        return jax.lax.scan(body, state, None, length=cfg.steps)
+
+    if cfg.steps % k:
+        raise ValueError(f"steps ({cfg.steps}) must be divisible by "
+                         f"record_every ({k})")
+
+    def chunk(st, _):
+        st = jax.lax.fori_loop(
+            0, k - 1, lambda _, s: step(sim, s, bw_fn=bw_fn,
+                                        alloc_fn=alloc_fn)[0], st)
+        return body(st, None)
+
+    return jax.lax.scan(chunk, state, None, length=cfg.steps // k)
+
+
+def simulate(topo: Topology, flows: Flows, law_name: str,
+             law_cfg: Optional[LawConfig] = None,
+             cfg: Optional[SimConfig] = None,
+             bw_fn: Optional[Callable] = None,
+             alloc_fn: Optional[Callable] = None,
+             record: bool = True,
+             backend: str = "reference"):
+    """Run a scenario to completion. Returns (final_state, Record pytree).
+
+    The whole scenario (topology, flows, law) is closed over and jitted as a
+    unit; hist buffers live in the carried state so the scan is O(1) memory.
+    ``backend="fused"`` dispatches the law update and the queue-arrival
+    scatter through the Pallas kernels (see module docstring).
+    """
+    cfg = cfg or SimConfig()
+    law = get_law(law_name, backend)
+    law_cfg = law_cfg or default_law_config(flows)
+    sim = _make_sim(topo, flows, law, law_cfg, cfg, backend)
+    state = init_state(sim)
+
     @jax.jit
     def run(st):
-        return jax.lax.scan(body, st, None, length=cfg.steps)
+        return _scan_scenario(sim, st, bw_fn, alloc_fn, record)
 
     final, recs = run(state)
     return final, recs
 
+
+# --------------------------------------------------------------------------
+# Batched scenario engine
+# --------------------------------------------------------------------------
+
+def pad_flows(flows: Flows, n: int, pad_queue: int) -> Flows:
+    """Pad a Flows batch to ``n`` flows with inert entries.
+
+    Padded flows never activate (``start = inf``), traverse only the sentinel
+    queue ``pad_queue`` (== topo.num_queues), and carry ``size = inf`` so FCT
+    accounting (which keys on finite sizes) ignores them.
+    """
+    F = int(flows.tau.shape[0])
+    add = n - F
+    if add < 0:
+        raise ValueError(f"cannot pad {F} flows down to {n}")
+    if add == 0:
+        return flows
+
+    def cat(x, fill, dtype):
+        pad = jnp.full((add,) + tuple(x.shape[1:]), fill, dtype)
+        return jnp.concatenate([jnp.asarray(x, dtype), pad])
+
+    return Flows(
+        path=cat(flows.path, pad_queue, jnp.int32),
+        tf_steps=cat(flows.tf_steps, 1, jnp.int32),
+        rtt_steps=cat(flows.rtt_steps, 1, jnp.int32),
+        tau=cat(flows.tau, 20e-6, jnp.float32),
+        nic_rate=cat(flows.nic_rate, 1e9, jnp.float32),
+        size=cat(flows.size, jnp.inf, jnp.float32),
+        start=cat(flows.start, jnp.inf, jnp.float32),
+        stop=cat(flows.stop, jnp.inf, jnp.float32),
+        weight=cat(flows.weight, 1.0, jnp.float32),
+    )
+
+
+def stack_flows(flows_list: List[Flows], pad_queue: int) -> Flows:
+    """Stack scenarios along a new leading batch axis, padding each to the
+    largest flow count with inert flows (``pad_flows``)."""
+    n = max(int(f.tau.shape[0]) for f in flows_list)
+    padded = [pad_flows(f, n, pad_queue) for f in flows_list]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def stack_law_configs(cfgs: List[LawConfig]) -> LawConfig:
+    """Stack per-scenario LawConfigs along a new leading axis (scalars become
+    [B] vectors; None leaves must be None everywhere)."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *cfgs)
+
+
+def simulate_batch(topo: Topology, flows: Flows, law_name: str,
+                   law_cfg: Optional[LawConfig] = None,
+                   cfg: Optional[SimConfig] = None,
+                   bw_fn: Optional[Callable] = None,
+                   alloc_fn: Optional[Callable] = None,
+                   record: bool = True,
+                   backend: str = "reference",
+                   expected_flows: float = 1.0):
+    """Run a whole sweep of scenarios as ONE jitted, vmapped program.
+
+    ``flows`` carries a leading batch axis B on every leaf (build it with
+    ``stack_flows``); ``law_cfg`` likewise (``stack_law_configs``), or None
+    to derive the paper-default config per scenario with ``expected_flows``.
+    Topology, SimConfig and the law are shared across the batch — the whole
+    sweep compiles once and every scenario advances in lockstep through one
+    ``lax.scan``, instead of one compile + one serial scan per point.
+
+    Returns (final_states, records) with a leading batch axis.
+    """
+    cfg = cfg or SimConfig()
+    law = get_law(law_name, backend)
+
+    def _one(flows_i, lcfg_i):
+        lcfg = (lcfg_i if lcfg_i is not None else
+                default_law_config(flows_i, expected_flows=expected_flows))
+        sim = _make_sim(topo, flows_i, law, lcfg, cfg, backend)
+        return _scan_scenario(sim, init_state(sim), bw_fn, alloc_fn, record)
+
+    flows_axes = jax.tree_util.tree_map(lambda _: 0, flows)
+    if law_cfg is None:
+        run = jax.jit(jax.vmap(lambda f: _one(f, None),
+                               in_axes=(flows_axes,)))
+        return run(flows)
+    lcfg_axes = jax.tree_util.tree_map(lambda _: 0, law_cfg)
+    run = jax.jit(jax.vmap(_one, in_axes=(flows_axes, lcfg_axes)))
+    return run(flows, law_cfg)

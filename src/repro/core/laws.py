@@ -337,20 +337,29 @@ def reno_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     # signalled by the simulator via ecn_frac >= 1 (hard mark).
     loss = obs.ecn_frac >= 1.0
     can_cut = upd_mask & loss & (t - state.last_cut > obs.theta)
-    w_cut = w * cfg.reno_md
-    w_ai = w + jnp.where(upd_mask, MTU * cfg.beta / jnp.maximum(cfg.beta, 1e-9), 0.0)
-    w_new = jnp.where(can_cut, w_cut, jnp.where(upd_mask, w + MTU, w))
-    del w_ai
+    # MD on loss (at most once per RTT), else AI of one MTU per update tick.
+    w_new = jnp.where(can_cut, w * cfg.reno_md,
+                      jnp.where(upd_mask, w + MTU, w))
     w_new = jnp.maximum(w_new, MTU)
     last = jnp.where(can_cut, t, state.last_cut)
     return RenoState(last), w_new, rate_cap
 
 
 class Law(NamedTuple):
+    """A congestion-control law bound to one concrete backend.
+
+    ``init(nflows, cfg) -> state`` and
+    ``update(state, obs, w, rate_cap, upd_mask, cfg, t) -> (state, w, rate_cap)``
+    form the uniform state/obs contract every backend must honour: same state
+    pytree, same ``PathObs`` fields, same masking semantics. ``backend`` names
+    the implementation currently bound to ``update`` (``"reference"`` pure-jnp
+    or ``"fused"`` Pallas; see ``register_backend``/``get_law``).
+    """
     name: str
     init: Callable
     update: Callable
     rate_based: bool = False
+    backend: str = "reference"
 
 
 LAWS = {
@@ -366,7 +375,36 @@ LAWS = {
 }
 
 
-def get_law(name: str) -> Law:
+# Backend registry: law name -> {backend name -> update callable}. Every law
+# ships a "reference" (pure-jnp) backend; fused Pallas backends are registered
+# on import of ``core.backends`` (kept separate so laws.py stays kernel-free).
+LAW_BACKENDS: dict = {name: {"reference": law.update}
+                      for name, law in LAWS.items()}
+
+
+def register_backend(law_name: str, backend: str, update: Callable) -> None:
+    """Register an alternative ``update`` implementation for a law.
+
+    The implementation must obey the Law contract exactly (same state pytree,
+    same ``PathObs`` consumption, identical masking semantics) — backend choice
+    may change *where* the law runs, never *what* it computes.
+    """
+    if law_name not in LAWS:
+        raise KeyError(f"unknown law '{law_name}'; have {sorted(LAWS)}")
+    LAW_BACKENDS.setdefault(law_name, {})[backend] = update
+
+
+def law_backends(name: str) -> list:
+    """Names of the backends available for ``name``."""
+    return sorted(LAW_BACKENDS.get(name, {}))
+
+
+def get_law(name: str, backend: str = "reference") -> Law:
+    """Single dispatch point: resolve a law bound to a concrete backend."""
     if name not in LAWS:
         raise KeyError(f"unknown law '{name}'; have {sorted(LAWS)}")
-    return LAWS[name]
+    impls = LAW_BACKENDS[name]
+    if backend not in impls:
+        raise KeyError(f"law '{name}' has no backend '{backend}'; "
+                       f"have {sorted(impls)}")
+    return LAWS[name]._replace(update=impls[backend], backend=backend)

@@ -5,13 +5,18 @@ tests/test_kernels.py; ops.py is the jit'd TPU/CPU dispatch):
   flash_attention  blockwise attention (causal / sliding-window / GQA)
   rmsnorm          fused norm
   powertcp_step    Algorithm 1 fused over a flow tile (the paper's hot path)
+  theta_powertcp_step  Algorithm 2 fused (RTT + RTT-gradient only)
   queue_arrivals   scatter-free fluid-queue update (MXU incidence matmul)
+
+The simulator selects these via the law-backend registry
+(``core.backends`` registers them as the ``"fused"`` backend; see
+DESIGN.md section 10).
 """
 from . import ops, ref
 from .flash_attention import flash_attention
-from .powertcp_step import powertcp_step
+from .powertcp_step import powertcp_step, theta_powertcp_step
 from .queue_arrivals import queue_arrivals
 from .rmsnorm import rmsnorm
 
 __all__ = ["ops", "ref", "flash_attention", "powertcp_step",
-           "queue_arrivals", "rmsnorm"]
+           "theta_powertcp_step", "queue_arrivals", "rmsnorm"]

@@ -74,3 +74,52 @@ def powertcp_step(q, qdot, mu, b, valid, tau, w, w_old, gs_prev, dt_obs,
       flow(gs_prev), flow(dt_obs), flow(upd.astype(jnp.float32)),
       flow(beta))
     return wout[:F], gsout[:F]
+
+
+def _theta_kernel(theta_ref, prev_ref, tau_ref, w_ref, wold_ref, gs_ref,
+                  dt_ref, upd_ref, beta_ref, wout_ref, gsout_ref,
+                  prevout_ref, *, gamma, w_min):
+    tau = tau_ref[...]
+    theta = theta_ref[...]
+    prev = prev_ref[...]
+    # Algorithm 2 NORMPOWER: Gamma_norm = (thetadot + 1) * theta / tau
+    thetadot = (theta - prev) / jnp.maximum(dt_ref[...], 1e-12)
+    gnorm = (thetadot + 1.0) * theta / jnp.maximum(tau, 1e-12)
+    d = jnp.clip(dt_ref[...], 0.0, tau)
+    gs = (gs_ref[...] * (tau - d) + gnorm * d) / jnp.maximum(tau, 1e-12)
+    upd = upd_ref[...] != 0
+    gs_out = jnp.where(upd, gs, gs_ref[...])
+    target = wold_ref[...] / jnp.maximum(gs_out, 1e-9) + beta_ref[...]
+    w_new = gamma * target + (1.0 - gamma) * w_ref[...]
+    wout_ref[...] = jnp.where(upd, jnp.maximum(w_new, w_min), w_ref[...])
+    gsout_ref[...] = gs_out
+    prevout_ref[...] = jnp.where(upd, theta, prev)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "w_min", "bf",
+                                             "interpret"))
+def theta_powertcp_step(theta, prev_theta, tau, w, w_old, gs_prev, dt_obs,
+                        upd, beta, *, gamma=0.9, w_min=1000.0, bf=256,
+                        interpret=None):
+    """Fused theta-PowerTCP control step (Algorithm 2): RTT + RTT-gradient
+    only, no per-hop INT. All inputs are per-flow vectors [F]; returns
+    (w, gs, prev_theta) — purely elementwise, one VPU pass per flow tile."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    (F,) = theta.shape
+    bf_ = min(bf, F)
+    pad = (-F) % bf_
+    flow = lambda x: jnp.pad(x.astype(jnp.float32), (0, pad))
+    flow_spec = pl.BlockSpec((bf_,), lambda i: (i,))
+    shape = jax.ShapeDtypeStruct((F + pad,), jnp.float32)
+    wout, gsout, prevout = pl.pallas_call(
+        functools.partial(_theta_kernel, gamma=gamma, w_min=w_min),
+        grid=((F + pad) // bf_,),
+        in_specs=[flow_spec] * 9,
+        out_specs=(flow_spec, flow_spec, flow_spec),
+        out_shape=(shape, shape, shape),
+        interpret=interpret,
+    )(flow(theta), flow(prev_theta), flow(tau), flow(w), flow(w_old),
+      flow(gs_prev), flow(dt_obs), flow(upd.astype(jnp.float32)),
+      flow(beta))
+    return wout[:F], gsout[:F], prevout[:F]

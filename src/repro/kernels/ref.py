@@ -61,6 +61,22 @@ def powertcp_step_ref(q, qdot, mu, b, valid, tau, w, w_old, gs_prev,
     return w_out, gs_out
 
 
+def theta_powertcp_step_ref(theta, prev_theta, tau, w, w_old, gs_prev,
+                            dt_obs, upd, beta, gamma=0.9, w_min=1000.0):
+    """Algorithm 2 (theta-PowerTCP): RTT-only power + smoothing +
+    UPDATEWINDOW. All per-flow vectors [F]. Returns (w, gs, prev_theta)."""
+    thetadot = (theta - prev_theta) / jnp.maximum(dt_obs, 1e-12)
+    gnorm = (thetadot + 1.0) * theta / jnp.maximum(tau, 1e-12)
+    d = jnp.clip(dt_obs, 0.0, tau)
+    gs = (gs_prev * (tau - d) + gnorm * d) / jnp.maximum(tau, 1e-12)
+    gs_out = jnp.where(upd, gs, gs_prev)
+    target = w_old / jnp.maximum(gs_out, 1e-9) + beta
+    w_new = gamma * target + (1.0 - gamma) * w
+    w_out = jnp.where(upd, jnp.maximum(w_new, w_min), w)
+    prev_out = jnp.where(upd, theta, prev_theta)
+    return w_out, gs_out, prev_out
+
+
 def queue_arrivals_ref(lam_del, onehot, q, out_rate, caps, dt):
     """Scatter-free fluid-queue update (TPU adaptation: the flow->queue
     scatter-add becomes an MXU matmul against the incidence one-hot).

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..sharding.axes import active_mesh, constrain
+from ..sharding.compat import shard_map
 from .spec import ParamSpec, fan_in_normal
 
 from jax.sharding import PartitionSpec as P
@@ -101,7 +102,7 @@ def tp_proj_out(h, w, cfg):
         return _ag_bf16_model(ys.astype(jnp.bfloat16))
 
     bspec = bdims if len(bdims) > 1 else bdims[0]
-    out = jax.shard_map(
+    out = shard_map(
         mm, mesh=mesh,
         in_specs=(P(bspec, None, "model"), P("model", None)),
         out_specs=P(bspec, None, None),
@@ -437,7 +438,7 @@ def moe_apply(p, x, cfg):
     def dispatch(xf_blk, eid_blk, gate_blk):
         return _moe_dispatch(xf_blk, eid_blk, gate_blk, E, k, C, cd)
 
-    buf, st, keep, dest, sg = jax.shard_map(
+    buf, st, keep, dest, sg = shard_map(
         dispatch, mesh=mesh,
         in_specs=(P(*tok_spec, None), P(*tok_spec, None),
                   P(*tok_spec, None)),
@@ -452,7 +453,7 @@ def moe_apply(p, x, cfg):
         return _moe_combine(y_blk.reshape(E * C, d), st_blk, keep_blk,
                             dest_blk, sg_blk, n_loc, d, cd)
 
-    out = jax.shard_map(
+    out = shard_map(
         combine, mesh=mesh,
         in_specs=(P(None, *tok_spec, None), tok_spec, tok_spec, tok_spec,
                   tok_spec),

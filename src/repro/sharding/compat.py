@@ -1,0 +1,25 @@
+"""jax API compatibility shims.
+
+``jax.shard_map`` (with ``axis_names``/``check_vma``) only exists on newer
+jax; 0.4.x ships ``jax.experimental.shard_map.shard_map`` with the inverse
+``auto`` set and ``check_rep``. Call sites use the new-style signature and
+this shim translates when needed.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    manual = set(axis_names) if axis_names is not None else set(mesh.axis_names)
+    auto = frozenset(set(mesh.axis_names) - manual)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

@@ -1,0 +1,137 @@
+"""Backend dispatch + batched scenario engine.
+
+The fused (Pallas) backend must reproduce the reference trajectories
+(w, q, fct) for full simulations, and ``simulate_batch`` must match the
+serial per-point loop exactly — backends and batching change where the
+simulation runs, never what it computes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, LeafSpine, SimConfig, default_law_config,
+                        get_law, incast_flows, law_backends,
+                        make_flows_single, simulate, simulate_batch,
+                        single_bottleneck, stack_flows, stack_law_configs)
+
+B = 100 * GBPS
+TAU = 20 * US
+
+
+def _scenario(n=8, steps=1500):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(n, tau=TAU, nic=B, sizes=[5e5] * n,
+                              sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, flows, cfg
+
+
+# -------------------------------------------------------------------------
+# registry / dispatch
+# -------------------------------------------------------------------------
+
+def test_backend_registry():
+    assert law_backends("powertcp") == ["fused", "reference"]
+    assert law_backends("theta_powertcp") == ["fused", "reference"]
+    assert law_backends("reno") == ["reference"]
+    assert get_law("powertcp").backend == "reference"
+    assert get_law("powertcp", "fused").backend == "fused"
+    with pytest.raises(KeyError):
+        get_law("swift", "fused")
+    with pytest.raises(KeyError):
+        get_law("nope")
+
+
+# -------------------------------------------------------------------------
+# fused == reference, full trajectories
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp"])
+def test_fused_matches_reference_single_bottleneck(law):
+    topo, flows, cfg = _scenario()
+    lcfg = default_law_config(flows, expected_flows=8.0)
+    st_r, rec_r = simulate(topo, flows, law, lcfg, cfg)
+    st_f, rec_f = simulate(topo, flows, law, lcfg, cfg, backend="fused")
+    np.testing.assert_allclose(st_f.w, st_r.w, rtol=1e-5)
+    np.testing.assert_allclose(st_f.fct, st_r.fct, rtol=1e-5, atol=2e-6)
+    # whole trajectories: queue trace (bytes) and per-flow send rates
+    np.testing.assert_allclose(rec_f.q, rec_r.q, rtol=1e-5, atol=1.0)
+    np.testing.assert_allclose(rec_f.lam_f, rec_r.lam_f, rtol=1e-4,
+                               atol=1.0)
+
+
+@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp"])
+def test_fused_matches_reference_multihop(law):
+    """Leaf-spine incast: exercises the H=3 hop loop of the fused law
+    kernel and the padded-hop rows of the incidence matmul."""
+    fab = LeafSpine(racks=2, hosts_per_rack=4, spines=1)
+    flows, bq = incast_flows(fab, fan_in=4, req_bytes=5e5, sim_dt=1e-6)
+    topo = fab.topology()
+    cfg = SimConfig(dt=1e-6, steps=2500, hist=512)
+    lcfg = default_law_config(flows, expected_flows=4.0)
+    st_r, rec_r = simulate(topo, flows, law, lcfg, cfg)
+    st_f, rec_f = simulate(topo, flows, law, lcfg, cfg, backend="fused")
+    np.testing.assert_allclose(st_f.w, st_r.w, rtol=1e-4)
+    np.testing.assert_allclose(st_f.fct, st_r.fct, rtol=1e-4, atol=2e-6)
+    np.testing.assert_allclose(rec_f.q[:, bq], rec_r.q[:, bq], rtol=1e-4,
+                               atol=10.0)
+
+
+# -------------------------------------------------------------------------
+# simulate_batch == serial loop
+# -------------------------------------------------------------------------
+
+def test_simulate_batch_matches_serial_loop():
+    """An 8-point sweep with distinct flow counts, one jitted program; every
+    point must equal its serial run (padded tail flows stay inert)."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    cfg = SimConfig(dt=1e-6, steps=1200, hist=256)
+    scenarios = []
+    for s in range(8):
+        rng = np.random.default_rng(s)
+        nf = 4 + s
+        scenarios.append(make_flows_single(
+            nf, tau=TAU, nic=B, sizes=rng.uniform(2e5, 6e5, nf),
+            starts=rng.uniform(0.0, 1e-4, nf), sim_dt=1e-6))
+    fb = stack_flows(scenarios, topo.num_queues)
+    stb, recb = simulate_batch(topo, fb, "powertcp", cfg=cfg,
+                               expected_flows=4.0)
+    assert stb.fct.shape[0] == 8
+    for i, fl in enumerate(scenarios):
+        n = int(fl.tau.shape[0])
+        st, rec = simulate(topo, fl, "powertcp",
+                           default_law_config(fl, expected_flows=4.0), cfg)
+        np.testing.assert_allclose(stb.fct[i][:n], st.fct, rtol=1e-6)
+        np.testing.assert_allclose(stb.w[i][:n], st.w, rtol=1e-6)
+        np.testing.assert_allclose(recb.q[i], rec.q, rtol=1e-5, atol=0.1)
+        # padded flows never activate
+        assert not np.isfinite(np.asarray(stb.fct[i][n:])).any()
+
+
+def test_simulate_batch_law_hyperparameter_sweep():
+    """Stacked LawConfig leaves (EWMA gamma) vmap through one program and
+    match per-gamma serial runs."""
+    topo, flows, cfg = _scenario(n=4, steps=1000)
+    gammas = [0.6, 0.75, 0.9]
+    lcfgs = [default_law_config(flows, gamma=g, expected_flows=4.0)
+             for g in gammas]
+    fb = stack_flows([flows] * len(gammas), topo.num_queues)
+    stb, _ = simulate_batch(topo, fb, "powertcp", stack_law_configs(lcfgs),
+                            cfg)
+    for i, g in enumerate(gammas):
+        st, _ = simulate(topo, flows, "powertcp", lcfgs[i], cfg)
+        np.testing.assert_allclose(stb.w[i], st.w, rtol=1e-6)
+        np.testing.assert_allclose(stb.fct[i], st.fct, rtol=1e-6)
+
+
+def test_simulate_batch_record_every_subsamples():
+    topo, flows, cfg = _scenario(n=4, steps=1000)
+    cfg = cfg._replace(record_every=10)
+    st_full, rec_full = simulate(topo, flows, "powertcp",
+                                 default_law_config(flows), cfg._replace(
+                                     record_every=0))
+    st_sub, rec_sub = simulate(topo, flows, "powertcp",
+                               default_law_config(flows), cfg)
+    assert rec_sub.q.shape[0] == 100
+    np.testing.assert_allclose(st_sub.fct, st_full.fct, rtol=1e-6)
+    # chunked record = every k-th step of the full trace (chunk's last step)
+    np.testing.assert_allclose(rec_sub.q, rec_full.q[9::10], rtol=1e-6)

@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.powertcp_step import powertcp_step
+from repro.kernels.powertcp_step import powertcp_step, theta_powertcp_step
 from repro.kernels.queue_arrivals import queue_arrivals
 from repro.kernels.rmsnorm import rmsnorm
 
@@ -122,6 +122,52 @@ def test_powertcp_step_negative_power_matches_law():
     wk, gk = powertcp_step(**kw, interpret=True)
     wr, gr = ref.powertcp_step_ref(**kw)
     np.testing.assert_allclose(wk, wr, rtol=1e-5)
+
+
+# -------------------------------------------------------------------------
+# theta_powertcp_step (Algorithm 2 fused)
+# -------------------------------------------------------------------------
+
+def _theta_inputs(F):
+    tau = jnp.full((F,), 20e-6, jnp.float32)
+    theta = tau * (1.0 + jnp.abs(_randn((F,))) * 0.5)
+    prev = tau * (1.0 + jnp.abs(_randn((F,))) * 0.5)
+    w = jnp.abs(_randn((F,))) * 1e5 + 1e4
+    return dict(theta=theta, prev_theta=prev, tau=tau, w=w, w_old=w * 0.9,
+                gs_prev=jnp.ones((F,), jnp.float32),
+                dt_obs=jnp.full((F,), 1e-6, jnp.float32),
+                upd=jnp.asarray(RNG.random((F,)) > 0.5),
+                beta=jnp.full((F,), 25e3, jnp.float32))
+
+
+@pytest.mark.parametrize("F", [16, 256, 1000])
+def test_theta_powertcp_step(F):
+    kw = _theta_inputs(F)
+    wk, gk, pk = theta_powertcp_step(**kw, interpret=True)
+    wr, gr, pr = ref.theta_powertcp_step_ref(**kw)
+    np.testing.assert_allclose(wk, wr, rtol=1e-5)
+    np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(pk, pr, rtol=1e-6)
+
+
+def test_theta_powertcp_step_matches_law():
+    """Kernel == laws.theta_powertcp_update on identical state/obs."""
+    from repro.core.laws import (LawConfig, ThetaPowerTCPState,
+                                 theta_powertcp_update)
+    from repro.core.types import PathObs
+    F = 64
+    kw = _theta_inputs(F)
+    wk, gk, pk = theta_powertcp_step(**kw, interpret=True)
+    cfg = LawConfig(gamma=0.9, beta=kw["beta"], tau=kw["tau"])
+    obs = PathObs(q=None, qdot=None, mu=None, b=None, valid=None,
+                  theta=kw["theta"], w_old=kw["w_old"], dt_obs=kw["dt_obs"],
+                  ecn_frac=None)
+    st = ThetaPowerTCPState(kw["gs_prev"], kw["prev_theta"])
+    st2, wl, _ = theta_powertcp_update(st, obs, kw["w"], None, kw["upd"],
+                                       cfg, 0.0)
+    np.testing.assert_allclose(wk, wl, rtol=1e-5)
+    np.testing.assert_allclose(gk, st2.gamma_smooth, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(pk, st2.prev_theta, rtol=1e-6)
 
 
 # -------------------------------------------------------------------------

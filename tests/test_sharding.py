@@ -24,12 +24,21 @@ def test_axes_translation(mesh):
     assert axes_to_pspec(("mlp", "experts"), mesh) == P("model", None)
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: 0.4.x takes ((name, size), ...),
+    newer takes (sizes, names)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def test_divisibility_fallback():
     """Production-mesh divisibility on an AbstractMesh(16,16): dims that
     don't divide the axis replicate instead of erroring."""
-    from jax.sharding import AbstractMesh
     from repro.sharding.axes import _fit_spec_to_shape
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = _abstract_mesh((16, 16), ("data", "model"))
     # kv=1 can't shard over the 16-way model axis -> replicated
     got = _fit_spec_to_shape(P("data", "model", None), (128, 1, 64), mesh)
     assert got == P("data", None, None)
@@ -40,7 +49,7 @@ def test_divisibility_fallback():
     got = _fit_spec_to_shape(P("model", None, "data"), (40, 512, 1536), mesh)
     assert got == P(None, None, "data")
     # batch=1 (long_500k decode) can't take ("pod","data")
-    pm = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    pm = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     got = _fit_spec_to_shape(P(("pod", "data"), None), (1, 32), pm)
     assert got == P(None, None)
     # batch=256 takes both pod and data (2*16 divides)
