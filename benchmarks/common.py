@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import (Flows, LeafSpine, SimConfig, default_law_config,
                         homa_alloc_fn, pad_flows, simulate, simulate_batch,
                         stack_flows)
+from repro.core.sweep import tree_index as _tree_index
 
 SHORT = 10e3            # <10 KB   (paper Fig. 6 buckets)
 MEDIUM_LO = 100e3
@@ -52,15 +53,13 @@ def fct_stats(st, flows, percentile=99.9) -> Dict[str, float]:
     return out
 
 
-def _tree_index(tree, i):
-    return jax.tree_util.tree_map(lambda x: x[i], tree)
-
-
 def run_law(topo, flows, law: str, cfg: SimConfig, fabric: Optional[LeafSpine]
             = None, expected_flows: float = 4.0, record: bool = True,
-            homa_overcommit: int = 0, backend: str = "reference"):
+            homa_overcommit: int = 0, backend: str = "reference",
+            devices=None):
     """Run one law over one scenario (``Flows``) or a sweep (list of
-    ``Flows``). Lists return results with a leading batch axis.
+    ``Flows``). Lists return results with a leading batch axis; ``devices``
+    shards the batch axis across the device mesh (DESIGN.md section 11).
 
     Window/rate laws run through ``simulate_batch`` (one compile for the
     whole sweep). ``law='homa'`` uses the receiver-driven allocator whose
@@ -92,7 +91,8 @@ def run_law(topo, flows, law: str, cfg: SimConfig, fabric: Optional[LeafSpine]
         fb = stack_flows(scenarios, topo.num_queues)
         st, rec = simulate_batch(topo, fb, law, cfg=cfg, record=record,
                                  backend=backend,
-                                 expected_flows=expected_flows)
+                                 expected_flows=expected_flows,
+                                 devices=devices)
     if not batched:
         st, rec = _tree_index(st, 0), (None if rec is None else
                                        _tree_index(rec, 0))

@@ -40,7 +40,7 @@ def _metrics(law, flows, st_fct, q, th, steps, dt, bdp):
     }
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, devices=None):
     fab = LeafSpine()
     dt = 1e-6
     fl10, bq = incast_flows(fab, 10, req_bytes=500e3, sim_dt=dt)
@@ -55,7 +55,8 @@ def run(quick: bool = False):
         fans = [10] if (quick and law in ("dcqcn", "homa")) else [10, 63]
         scen = {10: fl10, 63: fl63}
         st, rec, wall = run_law(fab.topology(), [scen[f] for f in fans], law,
-                                cfg, fabric=fab, expected_flows=16.0)
+                                cfg, fabric=fab, expected_flows=16.0,
+                                devices=devices)
         emit(f"fig4.{law}.sweep_wall_s", f"{wall:.1f}")
         for i, fan in enumerate(fans):
             q = np.asarray(rec.q[i][:, bq])

@@ -49,7 +49,7 @@ def _phase_stats(lam, n, ph, starts, stops):
     return rows, jains, utils
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, devices=None):
     ph = 5e-3 if quick else 10e-3            # phase length
     n = 4
     gammas = GAMMAS[-2:] if quick else GAMMAS
@@ -64,7 +64,7 @@ def run(quick: bool = False):
              for g in gammas]
     fb = stack_flows([flows] * len(gammas), topo.num_queues)
     _, rec = simulate_batch(topo, fb, "powertcp", stack_law_configs(lcfgs),
-                            cfg)
+                            cfg, devices=devices)
     gi = gammas.index(0.9) if 0.9 in gammas else len(gammas) - 1
 
     stats = {g: _phase_stats(lam_g, n, ph, starts, stops)

@@ -22,7 +22,8 @@ LAWS = ["powertcp", "theta_powertcp", "hpcc", "timely", "dcqcn", "homa"]
 SEEDS = (1, 2)
 
 
-def run_load(load: float, quick: bool = False, laws=None, seeds=SEEDS):
+def run_load(load: float, quick: bool = False, laws=None, seeds=SEEDS,
+             devices=None):
     fab = LeafSpine()
     dt = 1e-6
     duration = 0.01 if quick else 0.03
@@ -36,7 +37,7 @@ def run_load(load: float, quick: bool = False, laws=None, seeds=SEEDS):
     for law in (laws or LAWS):
         st, rec, wall = run_law(fab.topology(), scenarios, law, cfg,
                                 fabric=fab, expected_flows=8.0, record=False,
-                                homa_overcommit=1)
+                                homa_overcommit=1, devices=devices)
         s = fct_stats(st, stacked)
         rows.append({"law": law, "n_flows": n,
                      "short_p999_us": s["short_p"] * 1e6,
@@ -53,9 +54,9 @@ def run_load(load: float, quick: bool = False, laws=None, seeds=SEEDS):
     return {r["law"]: r for r in rows}
 
 
-def run(quick: bool = False):
-    r20 = run_load(0.2, quick)
-    r60 = run_load(0.6, quick)
+def run(quick: bool = False, devices=None):
+    r20 = run_load(0.2, quick, devices=devices)
+    r60 = run_load(0.6, quick, devices=devices)
     # fluid-model caveat: at 20% load all laws are indistinguishable (no
     # packet effects); orderings are asserted where contention exists (60%).
     ok = True

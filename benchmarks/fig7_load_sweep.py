@@ -23,7 +23,7 @@ LAWS = ["powertcp", "theta_powertcp", "hpcc", "timely", "dcqcn"]
 RECORD_EVERY = 8
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, devices=None):
     fab = LeafSpine()
     dt = 1e-6
     duration = 0.01 if quick else 0.03
@@ -37,7 +37,8 @@ def run(quick: bool = False):
     buf_p99 = {}
     for law in LAWS:
         st, rec, wall = run_law(fab.topology(), scenarios, law, cfg,
-                                fabric=fab, expected_flows=8.0, record=True)
+                                fabric=fab, expected_flows=8.0, record=True,
+                                devices=devices)
         emit(f"fig7.{law}.sweep_wall_s", f"{wall:.1f}")
         for i, load in enumerate(loads):
             n = int(scenarios[i].tau.shape[0])

@@ -8,63 +8,102 @@ long-lived transfer runs under each law; reported:
 Claims: PowerTCP reaches 80-85%+ circuit utilization at near-zero queues;
 reTCP fills the circuit only by prebuffering (latency 2-5x worse); HPCC
 (voltage-only, and window-capped per RTT) underfills the circuit.
+
+Execution: the whole figure runs on the batched sweep engine
+(``core.sweep.run_sweep``, DESIGN.md section 11) — one compiled program per
+law covering every (schedule x prebuffer) grid point, with the window laws
+and both reTCP prebuffers expressed as ``SweepSpec`` axes. The grid itself
+(``rdcn_specs``) and the per-point metrics (``point_metrics``) are shared
+with the ``--smoke`` serial-vs-batched consistency gate in
+``benchmarks.run``. The reported rows are the canonical slot-0 schedule
+(identical setup to the old serial path); extra schedule slots ride along
+in the same compile and are emitted as ``fig8.<law>.util_slotmean``
+robustness lines. ``devices`` shards the batch axis
+(``benchmarks.run --devices``).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (CircuitSchedule, SimConfig, circuit_utilization,
-                        default_law_config, make_flows_single,
-                        make_retcp_law, queuing_latency_percentile,
-                        simulate, voq_topology)
-from repro.core.laws import LAWS as LAW_TABLE
+from repro.core import (CircuitSchedule, SimConfig, SweepSpec,
+                        circuit_utilization, make_flows_single,
+                        queuing_latency_percentile, run_sweep, voq_topology)
 from .common import emit, table
 
+RETCP_PREBUFFERS = (1800e-6, 600e-6)
 
-def run(quick: bool = False):
-    sched = CircuitSchedule()
-    topo = voq_topology(sched)
-    tau = 24e-6
+
+def rdcn_setup(weeks: float, slots=(0, 6)):
+    """The fig8 scenario — (topo, flows, cfg, scheds) — shared with the
+    smoke consistency gate so scenario constants cannot drift either.
+
+    8 servers at 25G feed the ToR-pair VOQ (aggregate 200G >= circuit
+    100G); slot 0 is the canonical reported schedule, extra slots are
+    phase-shifted robustness points batched into the same compile.
+    """
+    scheds = [CircuitSchedule(slot=s) for s in slots]
+    topo = voq_topology(scheds[0])
     dt = 1e-6
-    weeks = 2 if quick else 4
-    steps = int(weeks * sched.week / dt)
-    # 8 servers at 25G feed the ToR-pair VOQ (aggregate 200G >= circuit 100G)
-    flows = make_flows_single(8, tau=tau, nic=25 * 12.5e8, sim_dt=dt)
-    cfg = SimConfig(dt=dt, steps=steps, hist=256, update_period=0.0)
+    flows = make_flows_single(8, tau=24e-6, nic=25 * 12.5e8, sim_dt=dt)
+    cfg = SimConfig(dt=dt, steps=int(weeks * scheds[0].week / dt), hist=256,
+                    update_period=0.0)
+    return topo, flows, cfg, scheds
 
-    rows = []
-    results = {}
-    cases = [("powertcp", None), ("theta_powertcp", None), ("hpcc", None),
-             ("retcp_1800us", 1800e-6), ("retcp_600us", 600e-6)]
-    for name, prebuf in cases:
-        if prebuf is None:
-            law = name
-            lcfg = default_law_config(flows, expected_flows=32.0)
-            st, rec = simulate(topo, flows, law, lcfg, cfg,
-                               bw_fn=sched.bw_fn())
-        else:
-            retcp = make_retcp_law(sched, prebuffer=prebuf)
-            lcfg = default_law_config(flows, expected_flows=32.0)
-            from repro.core.fluid import FluidSim, init_state, step as fstep
-            import jax
-            sim = FluidSim(topo, flows, retcp, lcfg, cfg)
-            state = init_state(sim)
 
-            def body(st, _):
-                s2, rec = fstep(sim, st, bw_fn=sched.bw_fn())
-                return s2, rec
-            st, rec = jax.jit(
-                lambda s: jax.lax.scan(body, s, None, length=cfg.steps)
-            )(state)
-        t = np.asarray(rec.t)
-        util = circuit_utilization(rec.t, rec.thru[:, 0], sched)
-        p99 = queuing_latency_percentile(rec.q[:, 0], rec.t, sched, 99.0)
-        rows.append({"law": name, "circuit_util": util,
-                     "p99_qlat_us": p99 * 1e6,
-                     "mean_q_KB": float(np.asarray(rec.q[:, 0]).mean()) / 1e3})
-        results[name] = rows[-1]
-        emit(f"fig8.{name}.circuit_util", f"{util:.3f}")
-        emit(f"fig8.{name}.p99_qlat_us", f"{p99*1e6:.2f}")
+def rdcn_specs(flows, scheds, expected_flows: float = 32.0):
+    """The fig8 grid — shared by the figure and the smoke consistency gate
+    so the two can never drift apart."""
+    return [
+        SweepSpec(laws=["powertcp", "theta_powertcp", "hpcc"],
+                  flows=[flows], schedules=scheds,
+                  expected_flows=expected_flows),
+        SweepSpec(laws=["retcp"], flows=[flows], schedules=scheds,
+                  law_cfg_overrides=tuple({"retcp_prebuffer": pb}
+                                          for pb in RETCP_PREBUFFERS),
+                  expected_flows=expected_flows),
+    ]
+
+
+def point_name(spec: SweepSpec, p) -> str:
+    """Row label for a sweep point (reTCP rows carry their prebuffer)."""
+    if p.law != "retcp":
+        return p.law
+    pb = spec.law_cfg_overrides[p.override_idx]["retcp_prebuffer"]
+    return f"retcp_{int(round(pb * 1e6))}us"
+
+
+def point_metrics(rec, sch: CircuitSchedule):
+    """(circuit utilization, p99 queuing latency) for one point's record."""
+    util = circuit_utilization(rec.t, rec.thru[:, 0], sch)
+    p99 = queuing_latency_percentile(rec.q[:, 0], rec.t, sch, 99.0)
+    return util, p99
+
+
+def run(quick: bool = False, devices=None):
+    topo, flows, cfg, scheds = rdcn_setup(weeks=2 if quick else 4,
+                                          slots=(0,) if quick else (0, 6))
+    rows, results, slotutil = [], {}, {}
+    for spec in rdcn_specs(flows, scheds):
+        res = run_sweep(spec, topo, cfg, devices=devices)
+        for p in res.points:
+            rec = res.record(p.index)
+            util, p99 = point_metrics(rec, scheds[p.sched_idx])
+            name = point_name(spec, p)
+            slotutil.setdefault(name, []).append(util)
+            if p.sched_idx != 0:
+                continue
+            rows.append({"law": name, "circuit_util": util,
+                         "p99_qlat_us": p99 * 1e6,
+                         "mean_q_KB":
+                         float(np.asarray(rec.q[:, 0]).mean()) / 1e3})
+            results[name] = rows[-1]
+            emit(f"fig8.{name}.circuit_util", f"{util:.3f}")
+            emit(f"fig8.{name}.p99_qlat_us", f"{p99*1e6:.2f}")
+
+    for name, utils in slotutil.items():
+        if len(utils) > 1:
+            emit(f"fig8.{name}.util_slotmean", f"{np.mean(utils):.3f}")
+
     print(table(rows, ["law", "circuit_util", "p99_qlat_us", "mean_q_KB"],
                 "Fig. 8 — RDCN circuit utilization vs queuing latency"))
     p = results["powertcp"]

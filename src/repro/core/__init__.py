@@ -2,17 +2,21 @@
 from .types import (Flows, PathObs, Record, SimConfig, SimState, Topology,
                     GBPS, KB, MB, MTU, US)
 from .laws import (LAWS, Law, LawConfig, get_law, law_backends,
-                   norm_power_int, norm_power_theta, register_backend)
+                   norm_power_int, norm_power_theta, register_backend,
+                   register_law)
 from .fluid import (FluidSim, build_incidence, default_law_config,
-                    init_state, pad_flows, simulate, simulate_batch,
-                    stack_flows, stack_law_configs, step)
+                    init_state, pad_flows, resolve_devices, simulate,
+                    simulate_batch, stack_flows, stack_law_configs, step)
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from .network import LeafSpine, make_flows_single, single_bottleneck
 from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
                        poisson_websearch, synthetic_incast_workload,
                        websearch_mean, websearch_sample)
-from .rdcn import (CircuitSchedule, circuit_utilization, make_retcp_law,
-                   queuing_latency_percentile, voq_topology)
+from .rdcn import (CircuitSchedule, ScheduleParams, circuit_bw_at,
+                   circuit_up, circuit_utilization, make_retcp_law,
+                   queuing_latency_percentile, stack_schedules,
+                   voq_topology)
+from .sweep import SweepPoint, SweepResult, SweepSpec, expand, run_sweep
 from . import analysis
 
 __all__ = [
@@ -20,13 +24,16 @@ __all__ = [
     "GBPS", "KB", "MB", "MTU", "US",
     "LAWS", "Law", "LawConfig", "get_law", "law_backends",
     "norm_power_int", "norm_power_theta", "register_backend",
+    "register_law",
     "FluidSim", "build_incidence", "default_law_config", "init_state",
-    "pad_flows", "simulate", "simulate_batch", "stack_flows",
-    "stack_law_configs", "step",
+    "pad_flows", "resolve_devices", "simulate", "simulate_batch",
+    "stack_flows", "stack_law_configs", "step",
     "LeafSpine", "make_flows_single", "single_bottleneck",
     "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "poisson_websearch",
     "synthetic_incast_workload", "websearch_mean", "websearch_sample",
-    "CircuitSchedule", "circuit_utilization", "make_retcp_law",
-    "queuing_latency_percentile", "voq_topology",
+    "CircuitSchedule", "ScheduleParams", "circuit_bw_at", "circuit_up",
+    "circuit_utilization", "make_retcp_law", "queuing_latency_percentile",
+    "stack_schedules", "voq_topology",
+    "SweepPoint", "SweepResult", "SweepSpec", "expand", "run_sweep",
     "analysis",
 ]

@@ -23,9 +23,16 @@ numerically equivalent; tests/test_backends.py asserts full-trajectory
 agreement.
 
 Batched sweeps: ``simulate_batch`` vmaps a whole axis of scenarios (shared
-topology, stacked ``Flows``/``LawConfig`` leaves) through one ``lax.scan``,
-so an entire benchmark sweep (seeds, loads, law hyperparameters) compiles
-once and runs as a single program instead of once per point.
+topology, stacked ``Flows``/``LawConfig`` leaves, per-scenario ``bw_params``
+for time-varying bandwidth schedules) through one ``lax.scan``, so an
+entire benchmark sweep (seeds, loads, law hyperparameters, circuit
+schedules) compiles once and runs as a single program instead of once per
+point. With ``devices > 1`` the batch axis is sharded across the active
+device mesh via ``shard_map`` — each device scans its slice of scenarios —
+falling back bit-exactly to the single-device vmap when one device is
+present. Batch-axis layout, padding semantics and the sharding contract
+are specified in DESIGN.md section 11; the declarative grid front end is
+``core/sweep.py``.
 
 Deviations from a packet simulator are documented in DESIGN.md section 9:
 no per-packet loss/retransmit (losses appear as capped queues), store-and-
@@ -34,12 +41,14 @@ expected marking fraction.
 """
 from __future__ import annotations
 
-from typing import Callable, List, NamedTuple, Optional
+from typing import Callable, List, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.queue_arrivals import queue_arrivals
+from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
+from ..sharding.compat import shard_map
 from .laws import Law, LawConfig, get_law
 from .types import (MTU, Flows, PathObs, Record, SimConfig, SimState,
                     Topology)
@@ -286,7 +295,13 @@ def _scan_scenario(sim: FluidSim, state: SimState, bw_fn, alloc_fn,
     return jax.lax.scan(chunk, state, None, length=cfg.steps // k)
 
 
-def simulate(topo: Topology, flows: Flows, law_name: str,
+def _resolve_law(law: Union[str, Law], backend: str) -> Law:
+    """Accept a law name (resolved through the registry) or a prebuilt
+    ``Law`` (already bound to an implementation, e.g. a custom wrapper)."""
+    return law if isinstance(law, Law) else get_law(law, backend)
+
+
+def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
              law_cfg: Optional[LawConfig] = None,
              cfg: Optional[SimConfig] = None,
              bw_fn: Optional[Callable] = None,
@@ -298,10 +313,11 @@ def simulate(topo: Topology, flows: Flows, law_name: str,
     The whole scenario (topology, flows, law) is closed over and jitted as a
     unit; hist buffers live in the carried state so the scan is O(1) memory.
     ``backend="fused"`` dispatches the law update and the queue-arrival
-    scatter through the Pallas kernels (see module docstring).
+    scatter through the Pallas kernels (see module docstring). ``law_name``
+    may also be a prebuilt ``Law``.
     """
     cfg = cfg or SimConfig()
-    law = get_law(law_name, backend)
+    law = _resolve_law(law_name, backend)
     law_cfg = law_cfg or default_law_config(flows)
     sim = _make_sim(topo, flows, law, law_cfg, cfg, backend)
     state = init_state(sim)
@@ -364,14 +380,50 @@ def stack_law_configs(cfgs: List[LawConfig]) -> LawConfig:
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *cfgs)
 
 
-def simulate_batch(topo: Topology, flows: Flows, law_name: str,
+def resolve_devices(devices) -> int:
+    """Normalize the ``devices`` argument of ``simulate_batch``.
+
+    ``None``/``0``/``1`` -> 1 (single-device vmap path); ``"auto"`` -> all
+    local devices; an int is clamped to what is actually present, so specs
+    written for an 8-device host degrade gracefully on a laptop.
+    """
+    if devices is None:
+        return 1
+    n = jax.local_device_count() if devices == "auto" else int(devices)
+    return max(1, min(n, jax.local_device_count()))
+
+
+def _batch_mesh(ndev: int):
+    """(mesh, rules) carrying the scenario batch axis: the enclosing
+    ``use_rules`` mesh + rules when one is active (the mesh's own batch-axis
+    product then determines the shard count, not ``ndev``), else a fresh
+    1-D ``(data=ndev,)`` mesh over local devices with the default rules."""
+    mesh = active_mesh()
+    if mesh is not None:
+        return mesh, active_rules()
+    return jax.make_mesh((ndev,), ("data",)), None
+
+
+def _pad_batch(tree, pad: int):
+    """Repeat the last scenario ``pad`` times along the batch axis (filler
+    points are real simulations whose outputs are sliced off)."""
+    if pad == 0 or tree is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])]), tree)
+
+
+def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
                    law_cfg: Optional[LawConfig] = None,
                    cfg: Optional[SimConfig] = None,
                    bw_fn: Optional[Callable] = None,
+                   bw_params=None,
                    alloc_fn: Optional[Callable] = None,
                    record: bool = True,
                    backend: str = "reference",
-                   expected_flows: float = 1.0):
+                   expected_flows: float = 1.0,
+                   devices=None):
     """Run a whole sweep of scenarios as ONE jitted, vmapped program.
 
     ``flows`` carries a leading batch axis B on every leaf (build it with
@@ -381,22 +433,64 @@ def simulate_batch(topo: Topology, flows: Flows, law_name: str,
     sweep compiles once and every scenario advances in lockstep through one
     ``lax.scan``, instead of one compile + one serial scan per point.
 
+    Time-varying bandwidth: without ``bw_params``, ``bw_fn(t)`` is shared by
+    every scenario; with ``bw_params`` (a pytree whose leaves carry the same
+    leading batch axis, e.g. ``rdcn.stack_schedules``), scenario ``i`` sees
+    ``bw_fn(t, bw_params_i)`` — a whole axis of circuit schedules runs
+    inside the one compiled program.
+
+    Device sharding (DESIGN.md section 11): ``devices`` > 1 (or ``"auto"``)
+    splits the batch axis across a device mesh with ``shard_map`` — each
+    device runs the identical vmapped scan on its B/ndev slice, with no
+    cross-device communication. B is padded to a multiple of the shard
+    count by repeating the last scenario (outputs sliced back to B). The
+    mesh and rules come from the enclosing ``sharding.use_rules`` context
+    when active — the batch axis then maps through that context's
+    ``"batch"`` rule and the shard count is the product of those mesh
+    axes, overriding ``devices`` — else a 1-D ``(data=ndev,)`` mesh with
+    the default rules. ``devices=None`` is the bit-exact single-device
+    vmap path (no shard_map in the program).
+
     Returns (final_states, records) with a leading batch axis.
     """
     cfg = cfg or SimConfig()
-    law = get_law(law_name, backend)
+    law = _resolve_law(law_name, backend)
 
-    def _one(flows_i, lcfg_i):
+    def _one(flows_i, lcfg_i, bwp_i):
         lcfg = (lcfg_i if lcfg_i is not None else
                 default_law_config(flows_i, expected_flows=expected_flows))
+        bfn = bw_fn if bwp_i is None else (lambda t: bw_fn(t, bwp_i))
         sim = _make_sim(topo, flows_i, law, lcfg, cfg, backend)
-        return _scan_scenario(sim, init_state(sim), bw_fn, alloc_fn, record)
+        return _scan_scenario(sim, init_state(sim), bfn, alloc_fn, record)
 
-    flows_axes = jax.tree_util.tree_map(lambda _: 0, flows)
-    if law_cfg is None:
-        run = jax.jit(jax.vmap(lambda f: _one(f, None),
-                               in_axes=(flows_axes,)))
-        return run(flows)
-    lcfg_axes = jax.tree_util.tree_map(lambda _: 0, law_cfg)
-    run = jax.jit(jax.vmap(_one, in_axes=(flows_axes, lcfg_axes)))
-    return run(flows, law_cfg)
+    def axes(tree):
+        return (None if tree is None else
+                jax.tree_util.tree_map(lambda _: 0, tree))
+
+    run = jax.vmap(_one, in_axes=(axes(flows), axes(law_cfg),
+                                  axes(bw_params)))
+    ndev = resolve_devices(devices)
+    if ndev <= 1:
+        return jax.jit(run)(flows, law_cfg, bw_params)
+
+    mesh, rules = _batch_mesh(ndev)
+    spec = axes_to_pspec(("batch",), mesh, rules)
+    ax0 = spec[0] if len(spec) else None
+    ax0 = ax0 if isinstance(ax0, tuple) else ((ax0,) if ax0 else ())
+    sizes = dict(mesh.shape)
+    shards = 1
+    for a in ax0:
+        shards *= sizes[a]
+    if shards <= 1:
+        return jax.jit(run)(flows, law_cfg, bw_params)
+
+    B = int(flows.tau.shape[0])
+    pad = -B % shards
+    args = (_pad_batch(flows, pad), _pad_batch(law_cfg, pad),
+            _pad_batch(bw_params, pad))
+    sharded = shard_map(run, mesh=mesh, in_specs=(spec, spec, spec),
+                        out_specs=spec, check_vma=False)
+    out = jax.jit(sharded)(*args)
+    if pad:
+        out = jax.tree_util.tree_map(lambda x: x[:B], out)
+    return out

@@ -16,6 +16,7 @@ Implemented laws
   gradient_mimd   paper Eq. 27 (pure RTT-gradient MIMD; used for phase plots)
   dcqcn           DCQCN fluid approximation (ECN + alpha, RP increase stages)
   reno            NewReno-style AI/MD on loss (basis for reTCP in rdcn.py)
+  retcp           reno + circuit-state window scaling (registered by rdcn.py)
 
 The electrical analogy (Table 1 of the paper):
   current  lambda = qdot + mu          [bytes/s]
@@ -32,6 +33,10 @@ from .types import PathObs, MTU
 
 
 class LawConfig(NamedTuple):
+    """Law hyperparameters. Every field is either a scalar, a per-flow [F]
+    vector, or a pytree of scalars — so a whole config batches under
+    ``fluid.stack_law_configs`` (leaves gain a leading [B] axis) and sweeps
+    as one vmapped program (DESIGN.md section 10)."""
     # shared
     gamma: float = 0.9              # EWMA parameter (paper recommendation)
     beta: jnp.ndarray = None        # [F] additive increase (bytes) = HostBw*tau/N
@@ -57,6 +62,9 @@ class LawConfig(NamedTuple):
     dcqcn_f: int = 5                # fast-recovery stages
     # reno
     reno_md: float = 0.5
+    # retcp (rdcn.py): circuit schedule + prebuffer as batchable config data
+    sched: tuple = None             # ScheduleParams pytree (scalar leaves)
+    retcp_prebuffer: float = 0.0    # seconds of early window scale-up
 
 
 # --------------------------------------------------------------------------
@@ -375,11 +383,52 @@ LAWS = {
 }
 
 
-# Backend registry: law name -> {backend name -> update callable}. Every law
-# ships a "reference" (pure-jnp) backend; fused Pallas backends are registered
-# on import of ``core.backends`` (kept separate so laws.py stays kernel-free).
+# --------------------------------------------------------------------------
+# Law + backend registry (DESIGN.md section 10)
+#
+# ``LAWS`` maps law name -> the canonical ``Law`` (its "reference" pure-jnp
+# implementation). ``LAW_BACKENDS`` maps law name -> {backend name -> update
+# callable}; alternative backends (e.g. the fused Pallas kernels registered
+# on import of ``core.backends`` — kept separate so laws.py stays
+# kernel-free) are pure drop-in replacements for ``Law.update``.
+#
+# The contract, which every registered implementation must honour:
+#
+#   * ``init(nflows, cfg: LawConfig) -> state`` returns the law's state
+#     pytree with [F]-leading leaves; the SAME pytree structure for every
+#     backend of a law (state produced by one backend must be consumable by
+#     another — backends are interchangeable mid-contract, not mid-scan).
+#   * ``update(state, obs: PathObs, w, rate_cap, upd_mask, cfg: LawConfig,
+#     t) -> (state, w, rate_cap)`` is pure, per-flow vectorized, and applies
+#     its control action only where ``upd_mask`` is set — flows outside the
+#     mask must pass ``state``/``w``/``rate_cap`` through unchanged. A law
+#     modelling an out-of-band signal may deviate for that signal only if
+#     its docstring says so (sole case: retcp's circuit-state multiplier,
+#     rdcn.py).
+#   * Window-based laws return ``rate_cap`` untouched; rate-based laws
+#     (``Law.rate_based``) also return their rate as ``rate_cap`` and keep
+#     ``w ≈ rate * theta`` so FCT accounting stays uniform.
+#   * Backend choice may change *where* the law runs, never *what* it
+#     computes: full-trajectory equivalence with the reference backend is
+#     asserted in tests/test_backends.py.
+#
+# ``get_law(name, backend)`` is the single dispatch point the simulator
+# uses; nothing else should reach into ``LAW_BACKENDS`` directly.
+# --------------------------------------------------------------------------
+
 LAW_BACKENDS: dict = {name: {"reference": law.update}
                       for name, law in LAWS.items()}
+
+
+def register_law(law: Law) -> None:
+    """Add a new law to the registry (its ``update`` becomes the
+    ``"reference"`` backend). The law must obey the contract above; its
+    name becomes resolvable through ``get_law`` and listable backends.
+    Re-registering a name replaces the law AND resets its backends table —
+    alternative backends of the old law would otherwise stay resolvable
+    and silently pair the new law with the old implementation."""
+    LAWS[law.name] = law
+    LAW_BACKENDS[law.name] = {"reference": law.update}
 
 
 def register_backend(law_name: str, backend: str, update: Callable) -> None:
@@ -400,7 +449,12 @@ def law_backends(name: str) -> list:
 
 
 def get_law(name: str, backend: str = "reference") -> Law:
-    """Single dispatch point: resolve a law bound to a concrete backend."""
+    """Single dispatch point: resolve a law bound to a concrete backend.
+
+    Promises: the returned ``Law`` has ``update`` swapped for the chosen
+    backend's implementation and ``backend`` recording the choice; raises
+    ``KeyError`` (never silently falls back) for unknown laws or backends.
+    """
     if name not in LAWS:
         raise KeyError(f"unknown law '{name}'; have {sorted(LAWS)}")
     impls = LAW_BACKENDS[name]

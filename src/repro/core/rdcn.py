@@ -6,19 +6,68 @@ the optical-circuit schedule — ``circuit_bw`` (100G) during this pair's "day",
 225us, reconfiguration ("night") 20us, and each pair is connected once per
 "week" of 24 matchings.
 
+Batching (DESIGN.md section 11): ``CircuitSchedule`` is the static, python-
+level description; ``ScheduleParams`` (``CircuitSchedule.params()``) is its
+pytree-of-scalars twin that can carry a leading batch axis. The pure
+functions ``circuit_up(t, p)`` / ``circuit_bw_at(t, p)`` evaluate a schedule
+from params — ``circuit_bw_at`` is exactly the ``bw_fn(t, bw_params)``
+signature ``core.fluid.simulate_batch`` expects, so a whole axis of
+schedules (slots, day lengths, bandwidths) sweeps inside one vmapped
+program. ``CircuitSchedule.up_fn``/``bw_fn`` delegate to the same functions,
+so the serial and batched paths share every arithmetic op bit-for-bit.
+
 reTCP (Mukerjee et al., NSDI'20) is modelled as NewReno plus explicit
-circuit-state feedback: the effective window is scaled by ``ratio`` while the
-circuit is up, beginning ``prebuffer`` seconds early (their prebuffering).
+circuit-state feedback: the effective window is scaled by
+``circuit_bw / packet_bw`` while the circuit is up, beginning
+``prebuffer`` seconds early (their prebuffering). The law is registered in
+``laws.LAWS`` as ``"retcp"`` and is closure-free: it reads the schedule and
+the prebuffer from ``LawConfig.sched`` / ``LawConfig.retcp_prebuffer``, so
+prebuffer variants and schedules batch like any other law hyperparameter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, List, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
-from .laws import Law, LawConfig, reno_init, reno_update
+from .laws import (Law, LawConfig, register_law, reno_init, reno_update)
 from .types import GBPS, US, Topology
+
+
+class ScheduleParams(NamedTuple):
+    """Pytree-of-scalars form of a ``CircuitSchedule`` (batchable leaves)."""
+    day: jnp.ndarray                 # seconds the circuit serves this pair
+    night: jnp.ndarray               # reconfiguration gap (seconds)
+    week: jnp.ndarray                # full rotation period (seconds)
+    t0: jnp.ndarray                  # this pair's day start offset (seconds)
+    circuit_bw: jnp.ndarray          # bytes/s while the circuit is up
+    packet_bw: jnp.ndarray           # bytes/s through the packet fabric
+
+
+# Schedule boundaries (multiples of day/night) coincide exactly with
+# simulator ticks, so ``mod(t - t0, week) < day`` would sit on a float32
+# knife edge: different compiled variants of the same formula (constants
+# folded vs traced params, vmap widths, shard_map) round a few ulps apart
+# and flip whole ticks of bandwidth. Sampling 0.1us past the tick start
+# gives every comparison a margin far above f32 noise (~5ns at fig8 time
+# scales) and far below a 1us tick, so classification is identical to exact
+# left-endpoint arithmetic and deterministic across program variants.
+_EDGE_NUDGE = 1e-7
+
+
+def circuit_up(t_sec, p: ScheduleParams):
+    """Is the circuit serving this pair at time ``t_sec``? (elementwise)"""
+    ph = jnp.mod(t_sec - p.t0 + _EDGE_NUDGE, p.week)
+    return (ph >= 0.0) & (ph < p.day)
+
+
+def circuit_bw_at(t_sec, p: ScheduleParams) -> jnp.ndarray:
+    """[1] VOQ service rate at ``t_sec`` — the batched ``bw_fn`` for
+    ``simulate_batch(..., bw_fn=circuit_bw_at, bw_params=stack_schedules(...))``."""
+    b = jnp.where(circuit_up(t_sec, p), p.circuit_bw, p.packet_bw)
+    return jnp.reshape(jnp.asarray(b, jnp.float32), (1,))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,22 +83,28 @@ class CircuitSchedule:
     def week(self) -> float:
         return self.matchings * (self.day + self.night)
 
-    def up_fn(self) -> Callable:
-        day, night, week = self.day, self.night, self.week
-        t0 = self.slot * (day + night)
+    def params(self) -> ScheduleParams:
+        """Batchable pytree twin (see module docstring)."""
+        return ScheduleParams(
+            day=jnp.float32(self.day), night=jnp.float32(self.night),
+            week=jnp.float32(self.week),
+            t0=jnp.float32(self.slot * (self.day + self.night)),
+            circuit_bw=jnp.float32(self.circuit_bw),
+            packet_bw=jnp.float32(self.packet_bw))
 
-        def up(t_sec):
-            ph = jnp.mod(t_sec - t0, week)
-            return (ph >= 0.0) & (ph < day)
-        return up
+    def up_fn(self) -> Callable:
+        p = self.params()
+        return lambda t_sec: circuit_up(t_sec, p)
 
     def bw_fn(self) -> Callable:
-        up = self.up_fn()
+        p = self.params()
+        return lambda t_sec: circuit_bw_at(t_sec, p)
 
-        def bw(t_sec):
-            b = jnp.where(up(t_sec), self.circuit_bw, self.packet_bw)
-            return jnp.asarray([b], jnp.float32)
-        return bw
+
+def stack_schedules(scheds: List[CircuitSchedule]) -> ScheduleParams:
+    """Stack schedules along a new leading batch axis ([B] leaves)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                  *[s.params() for s in scheds])
 
 
 def voq_topology(sched: CircuitSchedule, buffer: float = 12e6) -> Topology:
@@ -69,23 +124,48 @@ class ReTCPState(NamedTuple):
     w_base: jnp.ndarray
 
 
-def make_retcp_law(sched: CircuitSchedule, prebuffer: float) -> Law:
-    """NewReno + circuit-aware window scaling with prebuffering."""
-    up = sched.up_fn()
-    ratio = sched.circuit_bw / sched.packet_bw
+def retcp_init(n, cfg: LawConfig):
+    w0 = cfg.host_bw * cfg.tau * jnp.ones((n,), jnp.float32)
+    return ReTCPState(reno=reno_init(n, cfg), w_base=w0)
 
-    def init(n, cfg: LawConfig):
-        w0 = cfg.host_bw * cfg.tau * jnp.ones((n,), jnp.float32)
-        return ReTCPState(reno=reno_init(n, cfg), w_base=w0)
+
+def retcp_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """NewReno + circuit-aware window scaling with prebuffering.
+
+    Schedule and prebuffer come from ``cfg.sched`` (a ``ScheduleParams``)
+    and ``cfg.retcp_prebuffer`` — pure LawConfig data, so both batch under
+    ``stack_law_configs`` like any hyperparameter.
+
+    Documented deviation from the registry's mask contract (laws.py): the
+    NewReno core (``w_base``, loss state) honours ``upd_mask``, but the
+    circuit-state multiplier is applied to the *output* window every step
+    — reTCP's circuit feedback is an out-of-band switch notification, not
+    ACK-clocked, so the scale must track the schedule even between
+    congestion updates (same semantics as the original closure-based law).
+    """
+    sp = cfg.sched
+    rs, wb, _ = reno_update(state.reno, obs, state.w_base, rate_cap,
+                            upd_mask, cfg, t)
+    scale_on = circuit_up(t + cfg.retcp_prebuffer, sp) | circuit_up(t, sp)
+    ratio = sp.circuit_bw / sp.packet_bw
+    w_out = wb * jnp.where(scale_on, ratio, 1.0)
+    return ReTCPState(rs, wb), w_out, rate_cap
+
+
+register_law(Law("retcp", retcp_init, retcp_update))
+
+
+def make_retcp_law(sched: CircuitSchedule, prebuffer: float) -> Law:
+    """Serial-path convenience: ``"retcp"`` with schedule/prebuffer baked
+    into the config via a wrapped update (kept for existing call sites; new
+    code should pass ``LawConfig(sched=..., retcp_prebuffer=...)``)."""
+    sp = sched.params()
 
     def update(state, obs, w, rate_cap, upd_mask, cfg, t):
-        rs, wb, _ = reno_update(state.reno, obs, state.w_base, rate_cap,
-                                upd_mask, cfg, t)
-        scale_on = up(t + prebuffer) | up(t)
-        w_out = wb * jnp.where(scale_on, ratio, 1.0)
-        return ReTCPState(rs, wb), w_out, rate_cap
+        cfg = cfg._replace(sched=sp, retcp_prebuffer=prebuffer)
+        return retcp_update(state, obs, w, rate_cap, upd_mask, cfg, t)
 
-    return Law("retcp", init, update)
+    return Law("retcp", retcp_init, update)
 
 
 def circuit_utilization(rec_t: jnp.ndarray, rec_thru: jnp.ndarray,

@@ -1,0 +1,154 @@
+"""Declarative device-sharded scenario sweeps (DESIGN.md section 11).
+
+A ``SweepSpec`` names a grid over
+
+  * ``laws``      — law names (or prebuilt ``Law`` instances),
+  * ``flows``     — scenarios (seeds, loads, fan-ins: anything expressible
+                    as a ``Flows``),
+  * ``law_cfg_overrides`` — dicts of ``LawConfig`` field overrides
+                    (hyperparameter axes: gamma, prebuffer, ...),
+  * ``schedules`` — optional time-varying bandwidth schedules
+                    (``rdcn.CircuitSchedule``).
+
+``run_sweep`` expands the grid, groups points by law, and runs each group
+as ONE jitted program through ``fluid.simulate_batch``: scenarios are
+padded to a common flow count (``pad_flows``) and stacked along the batch
+axis (``stack_flows``/``stack_law_configs``/``stack_schedules``), then the
+batch axis is sharded across devices (``devices="auto"``) or run on the
+single-device vmap path (``devices=None``, bit-exact with the sharded run).
+
+The law axis is *structural* — each law has its own state pytree, so it
+partitions the grid into one compiled program per law rather than batching;
+all array axes (flows, overrides, schedules) batch inside each program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+
+from .fluid import (default_law_config, pad_flows, simulate_batch,
+                    stack_flows, stack_law_configs)
+from .laws import Law
+from .rdcn import CircuitSchedule, circuit_bw_at, stack_schedules
+from .types import Flows, SimConfig, Topology
+
+
+class SweepPoint(NamedTuple):
+    """One expanded grid point.
+
+    ``index`` is the global position (law-major, then flows x overrides x
+    schedules row-major); ``row`` is the position inside the per-law batch
+    (the index along the batch axis of ``SweepResult.states[law_idx]``).
+    ``sched_idx`` is -1 when the spec has no schedule axis.
+    """
+    index: int
+    row: int
+    law_idx: int
+    law: str
+    flows_idx: int
+    override_idx: int
+    sched_idx: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative grid; see module docstring. ``laws`` entries are registry
+    names or ``Law`` instances (e.g. a custom wrapper)."""
+    laws: Sequence[Union[str, Law]]
+    flows: Sequence[Flows]
+    law_cfg_overrides: Sequence[dict] = ({},)
+    schedules: Optional[Sequence[CircuitSchedule]] = None
+    expected_flows: float = 1.0
+    backend: str = "reference"
+
+    def __post_init__(self):
+        if not self.laws or not self.flows or not self.law_cfg_overrides:
+            raise ValueError("laws, flows and law_cfg_overrides must be "
+                             "non-empty")
+        if self.schedules is not None and not self.schedules:
+            raise ValueError("schedules must be None or non-empty")
+
+
+def _law_name(law: Union[str, Law]) -> str:
+    return law.name if isinstance(law, Law) else law
+
+
+def expand(spec: SweepSpec) -> List[SweepPoint]:
+    """Expanded grid, law-major (one contiguous run of rows per law)."""
+    pts: List[SweepPoint] = []
+    scheds = (range(len(spec.schedules)) if spec.schedules is not None
+              else (-1,))
+    for li, law in enumerate(spec.laws):
+        row = 0
+        for fi in range(len(spec.flows)):
+            for oi in range(len(spec.law_cfg_overrides)):
+                for si in scheds:
+                    pts.append(SweepPoint(len(pts), row, li, _law_name(law),
+                                          fi, oi, si))
+                    row += 1
+    return pts
+
+
+def tree_index(tree, i):
+    """Slice index ``i`` out of every leaf's leading (batch) axis."""
+    return (None if tree is None else
+            jax.tree_util.tree_map(lambda x: x[i], tree))
+
+
+class SweepResult(NamedTuple):
+    """Per-law batched results plus the point list to index them.
+
+    ``states[law_idx]``/``records[law_idx]`` carry the per-law batch axis;
+    ``state(i)``/``record(i)`` slice out global point ``i``. Padded tail
+    flows of a point (beyond its scenario's real flow count) stay inert
+    (``fct``/``size`` infinite) — see ``fluid.pad_flows``.
+    """
+    points: Tuple[SweepPoint, ...]
+    states: Dict[int, object]
+    records: Dict[int, object]
+
+    def state(self, i: int):
+        p = self.points[i]
+        return tree_index(self.states[p.law_idx], p.row)
+
+    def record(self, i: int):
+        p = self.points[i]
+        return tree_index(self.records[p.law_idx], p.row)
+
+
+def run_sweep(spec: SweepSpec, topo: Topology,
+              cfg: Optional[SimConfig] = None, record: bool = True,
+              devices=None) -> SweepResult:
+    """Expand ``spec`` and run it: one compiled, batched (and, with
+    ``devices``, sharded) program per law covering that law's whole slab of
+    the grid. ``devices`` is forwarded to ``simulate_batch``."""
+    points = expand(spec)
+    nmax = max(int(f.tau.shape[0]) for f in spec.flows)
+    padded = [pad_flows(f, nmax, topo.num_queues) for f in spec.flows]
+
+    states: Dict[int, object] = {}
+    records: Dict[int, object] = {}
+    for li, law in enumerate(spec.laws):
+        rows = [p for p in points if p.law_idx == li]
+        lcfgs = []
+        for p in rows:
+            kw = dict(spec.law_cfg_overrides[p.override_idx])
+            if spec.schedules is not None:
+                kw.setdefault("sched", spec.schedules[p.sched_idx].params())
+            lcfgs.append(default_law_config(
+                padded[p.flows_idx], expected_flows=spec.expected_flows,
+                **kw))
+        fb = stack_flows([padded[p.flows_idx] for p in rows],
+                         topo.num_queues)
+        bw_fn = bw_params = None
+        if spec.schedules is not None:
+            bw_fn = circuit_bw_at
+            bw_params = stack_schedules(
+                [spec.schedules[p.sched_idx] for p in rows])
+        states[li], records[li] = simulate_batch(
+            topo, fb, law, stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
+            bw_params=bw_params, record=record, backend=spec.backend,
+            devices=devices)
+    return SweepResult(tuple(points), states, records)

@@ -139,3 +139,9 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
 def active_mesh() -> Optional[Mesh]:
     """The mesh of the enclosing ``use_rules`` context (None in unit tests)."""
     return _CTX.mesh
+
+
+def active_rules() -> Optional[dict]:
+    """The rules table of the enclosing ``use_rules`` context (None outside
+    one) — pass alongside ``active_mesh()`` so custom rules are honoured."""
+    return _CTX.rules

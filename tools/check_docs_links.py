@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Docs link-rot check (CI gate; see .github/workflows/ci.yml).
+
+Two simple greps, zero dependencies:
+
+1. Every relative markdown link ``[text](path)`` in the repo's .md files
+   must point at an existing file/directory (anchors stripped; http(s) and
+   mailto links are ignored).
+2. Every ``DESIGN.md section N`` reference in source/docs must resolve to
+   a ``## N.`` heading in DESIGN.md — docstrings across the tree lean on
+   those section numbers being stable.
+
+Exit status 0 = clean, 1 = rot found (each problem printed).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+SECTION_REF = re.compile(r"DESIGN\.md[,]? section (\d+)", re.I)
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = (".git", "__pycache__", ".github", ".claude")
+
+
+def repo_files(*suffixes):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out += [os.path.relpath(os.path.join(dirpath, f), ROOT)
+                for f in filenames if f.endswith(suffixes)]
+    return sorted(out)
+
+
+def md_link_targets(path: str):
+    with open(os.path.join(ROOT, path), encoding="utf-8") as f:
+        for ln, line in enumerate(f, 1):
+            for target in MD_LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                yield ln, target.split("#", 1)[0]
+
+
+def check_md_links() -> list:
+    problems = []
+    for md in repo_files(".md"):
+        base = os.path.dirname(os.path.join(ROOT, md))
+        for ln, target in md_link_targets(md):
+            if not target:         # pure-anchor link into the same file
+                continue
+            if not os.path.exists(os.path.normpath(
+                    os.path.join(base, target))):
+                problems.append(f"{md}:{ln}: broken link -> {target}")
+    return problems
+
+
+def check_design_sections() -> list:
+    with open(os.path.join(ROOT, "DESIGN.md"), encoding="utf-8") as f:
+        design = f.read()
+    sections = set(re.findall(r"^## (\d+)\.", design, re.M))
+    problems = []
+    for rel in repo_files(".py", ".md"):
+        with open(os.path.join(ROOT, rel), encoding="utf-8") as f:
+            for ln, line in enumerate(f, 1):
+                for num in SECTION_REF.findall(line):
+                    if num not in sections:
+                        problems.append(
+                            f"{rel}:{ln}: DESIGN.md section {num} "
+                            f"does not exist (have {sorted(sections)})")
+    return problems
+
+
+def main() -> int:
+    problems = check_md_links() + check_design_sections()
+    for p in problems:
+        print(p)
+    print(f"docs-link check: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
