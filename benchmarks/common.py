@@ -15,9 +15,10 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core import (Flows, LeafSpine, SimConfig, default_law_config,
-                        homa_alloc_fn, pad_flows, simulate, simulate_batch,
-                        stack_flows)
+from repro.core import (Flows, FlowSchedule, LeafSpine, SimConfig,
+                        default_law_config, homa_alloc_fn, pad_flows,
+                        simulate, simulate_batch, simulate_slots_batch,
+                        stack_flow_schedules, stack_flows)
 from repro.core.sweep import tree_index as _tree_index
 
 SHORT = 10e3            # <10 KB   (paper Fig. 6 buckets)
@@ -93,6 +94,34 @@ def run_law(topo, flows, law: str, cfg: SimConfig, fabric: Optional[LeafSpine]
                                  backend=backend,
                                  expected_flows=expected_flows,
                                  devices=devices)
+    if not batched:
+        st, rec = _tree_index(st, 0), (None if rec is None else
+                                       _tree_index(rec, 0))
+    return st, rec, time.time() - t0
+
+
+def run_law_slots(topo, scheds, law: str, cfg: SimConfig, slots: int,
+                  expected_flows: float = 4.0, record: bool = False,
+                  backend: str = "reference", devices=None):
+    """Slot-path twin of ``run_law``: run one ``FlowSchedule`` or a list of
+    them through the flow-slot streaming engine (``simulate_slots_batch``),
+    one jitted program whose per-tick cost is O(slots * hops) regardless of
+    total flow count — this is what lets fig6/fig7 reach the paper's
+    256-host scale. Results carry a leading batch axis for lists;
+    ``st.fct`` rows are in schedule order (``fct_stats`` against the
+    stacked schedule handles that, since its sizes are sorted the same
+    way). HOMA's receiver-grant allocator stays on the padded path
+    (``run_law``)."""
+    batched = (isinstance(scheds, (list, tuple)) and
+               not isinstance(scheds, FlowSchedule))
+    lst = list(scheds) if batched else [scheds]
+    t0 = time.time()
+    sb = stack_flow_schedules(lst, topo.num_queues)
+    st, rec = simulate_slots_batch(topo, sb, law, slots, cfg=cfg,
+                                   record=record, backend=backend,
+                                   expected_flows=expected_flows,
+                                   devices=devices)
+    jax.block_until_ready(st.fct)
     if not batched:
         st, rec = _tree_index(st, 0), (None if rec is None else
                                        _tree_index(rec, 0))

@@ -1,17 +1,23 @@
 """PowerTCP core: control laws, power computation, fluid-model simulator."""
-from .types import (Flows, PathObs, Record, SimConfig, SimState, Topology,
-                    GBPS, KB, MB, MTU, US)
+from .types import (Flows, FlowSchedule, PathObs, Record, SimConfig,
+                    SimState, SlotState, Topology, GBPS, KB, MB, MTU, US)
 from .laws import (LAWS, Law, LawConfig, get_law, law_backends,
                    norm_power_int, norm_power_theta, register_backend,
                    register_law)
-from .fluid import (FluidSim, build_incidence, default_law_config,
-                    init_state, pad_flows, resolve_devices, simulate,
-                    simulate_batch, stack_flows, stack_law_configs, step)
+from .fluid import (FluidSim, SlotSim, build_incidence, default_law_config,
+                    init_slot_state, init_state, pad_flows, pad_schedule,
+                    resolve_devices, simulate, simulate_batch,
+                    simulate_slots, simulate_slots_batch, slot_step,
+                    stack_flow_schedules, stack_flows, stack_law_configs,
+                    step)
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
-from .network import LeafSpine, make_flows_single, single_bottleneck
+from .network import (LeafSpine, make_flows_single, make_schedule,
+                      schedule_as_flows, single_bottleneck)
 from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
-                       poisson_websearch, synthetic_incast_workload,
-                       websearch_mean, websearch_sample)
+                       peak_concurrency, poisson_websearch,
+                       poisson_websearch_schedule, suggest_slots,
+                       synthetic_incast_workload, websearch_mean,
+                       websearch_sample)
 from .rdcn import (CircuitSchedule, ScheduleParams, circuit_bw_at,
                    circuit_up, circuit_utilization, make_retcp_law,
                    queuing_latency_percentile, stack_schedules,
@@ -20,16 +26,21 @@ from .sweep import SweepPoint, SweepResult, SweepSpec, expand, run_sweep
 from . import analysis
 
 __all__ = [
-    "Flows", "PathObs", "Record", "SimConfig", "SimState", "Topology",
+    "Flows", "FlowSchedule", "PathObs", "Record", "SimConfig", "SimState",
+    "SlotState", "Topology",
     "GBPS", "KB", "MB", "MTU", "US",
     "LAWS", "Law", "LawConfig", "get_law", "law_backends",
     "norm_power_int", "norm_power_theta", "register_backend",
     "register_law",
-    "FluidSim", "build_incidence", "default_law_config", "init_state",
-    "pad_flows", "resolve_devices", "simulate", "simulate_batch",
+    "FluidSim", "SlotSim", "build_incidence", "default_law_config",
+    "init_slot_state", "init_state", "pad_flows", "pad_schedule",
+    "resolve_devices", "simulate", "simulate_batch", "simulate_slots",
+    "simulate_slots_batch", "slot_step", "stack_flow_schedules",
     "stack_flows", "stack_law_configs", "step",
-    "LeafSpine", "make_flows_single", "single_bottleneck",
-    "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "poisson_websearch",
+    "LeafSpine", "make_flows_single", "make_schedule", "schedule_as_flows",
+    "single_bottleneck",
+    "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "peak_concurrency",
+    "poisson_websearch", "poisson_websearch_schedule", "suggest_slots",
     "synthetic_incast_workload", "websearch_mean", "websearch_sample",
     "CircuitSchedule", "ScheduleParams", "circuit_bw_at", "circuit_up",
     "circuit_utilization", "make_retcp_law", "queuing_latency_percentile",

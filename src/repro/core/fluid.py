@@ -34,6 +34,23 @@ present. Batch-axis layout, padding semantics and the sharding contract
 are specified in DESIGN.md section 11; the declarative grid front end is
 ``core/sweep.py``.
 
+Flow-slot streaming engine (DESIGN.md section 12): the padded engine above
+carries EVERY flow of a scenario through every tick, so per-tick cost grows
+with the total flow count even though only a few hundred flows are ever
+concurrently active. ``simulate_slots`` instead streams a time-sorted
+``FlowSchedule`` through a fixed pool of S active slots — a jittable
+admit/retire pass inside the scan body pulls due arrivals into free slots
+and retires completed flows once their in-flight traffic has drained — so
+per-tick cost is O(S * hops), independent of the total flow count. With
+``S >= total_flows`` the slot engine reproduces the padded engine's
+queue and FCT trajectories bit-for-bit (asserted in
+tests/test_slot_engine.py; per-flow windows agree to <= 1 ulp — the
+exactness boundary and the arithmetic pinning behind it are documented
+in DESIGN.md section 12). Undersized pools stay correct but
+admission-delay flows that arrive while the pool is full.
+``simulate_slots_batch`` is the batched/sharded twin with the same
+padding and device-sharding contract as ``simulate_batch``.
+
 Deviations from a packet simulator are documented in DESIGN.md section 9:
 no per-packet loss/retransmit (losses appear as capped queues), store-and-
 forward shaping across hops is not modelled, and ECN feedback uses the
@@ -43,15 +60,19 @@ from __future__ import annotations
 
 from typing import Callable, List, NamedTuple, Optional, Union
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-from ..kernels.queue_arrivals import queue_arrivals
+from ..kernels.queue_arrivals import queue_arrivals, update_incidence
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
-from .laws import Law, LawConfig, get_law
-from .types import (MTU, Flows, PathObs, Record, SimConfig, SimState,
-                    Topology)
+from .laws import Law, LawConfig, get_law, _pin
+from .types import (MTU, Flows, FlowSchedule, PathObs, Record, SimConfig,
+                    SimState, SlotState, Topology)
+
+_INT32_MAX = np.iinfo(np.int32).max
 
 
 def default_law_config(flows: Flows, gamma: float = 0.9,
@@ -144,31 +165,56 @@ def _buffer_caps(topo: Topology, q: jnp.ndarray) -> jnp.ndarray:
     return thr
 
 
-def _queue_update(sim: FluidSim, state: SimState, lam_del, valid, bw):
+def _queue_update(topo: Topology, dt: float, backend: str, incidence,
+                  path, q, lam_del, valid, bw):
     """Queue-arrival accumulation + integration: (arrivals, out, q_new).
 
-    Reference backend: masked scatter-add. Fused backend: incidence matmul
-    through ``kernels/queue_arrivals`` (passing ``out_rate=bw`` to the kernel
-    is exact — when q == 0 and arr < bw the clip at 0 reproduces
-    ``out = min(arr, bw)``; the recorded ``out`` is still computed from the
-    returned arrivals).
+    Reference backend: masked scatter-add over ``path``. Fused backend:
+    incidence matmul through ``kernels/queue_arrivals`` (passing
+    ``out_rate=bw`` to the kernel is exact — when q == 0 and arr < bw the
+    clip at 0 reproduces ``out = min(arr, bw)``; the recorded ``out`` is
+    still computed from the returned arrivals). Shared by the padded
+    (``step``) and slot (``slot_step``) engines — ``path``/``incidence``
+    are the static per-flow hop table for the former, the pool's current
+    occupancy for the latter.
     """
-    caps = _buffer_caps(sim.topo, state.q)
-    dt = sim.cfg.dt
-    if sim.backend == "fused" and sim.incidence is not None:
+    caps = _buffer_caps(topo, q)
+    if backend == "fused" and incidence is not None:
         arr, q_new = queue_arrivals(jnp.swapaxes(lam_del, 0, 1),
-                                    sim.incidence, state.q, bw, caps, dt=dt)
+                                    incidence, q, bw, caps, dt=dt)
     else:
         contrib = jnp.where(valid, lam_del, 0.0)
-        arr = jnp.zeros_like(state.q).at[sim.flows.path].add(contrib)
-        q_new = jnp.clip(state.q + (arr - bw) * dt, 0.0, caps)
-    out = jnp.where(state.q > 0.0, bw, jnp.minimum(arr, bw))
+        arr = jnp.zeros_like(q).at[path].add(contrib)
+        # pinned so no program variant contracts the integration into an
+        # FMA, which would break cross-engine bit-equality (laws._pin)
+        q_new = jnp.clip(q + _pin((arr - bw) * dt), 0.0, caps)
+    out = jnp.where(q > 0.0, bw, jnp.minimum(arr, bw))
     q_new = q_new.at[-1].set(0.0)
     return arr, out, q_new
 
 
+def _pin_flow_cfg(cfg: LawConfig) -> LawConfig:
+    """Pin per-flow LawConfig vectors in the PADDED engine.
+
+    There they are compile-time constants (the scenario is closed over),
+    so XLA folds divisions by them into reciprocal multiplies — arithmetic
+    the slot engine, where the same values are dynamic (gathered on
+    admission), never performs. Pinning makes both engines round the same
+    true divisions, a prerequisite of the bit-for-bit exactness anchor
+    (DESIGN.md section 12). Scalars stay constant — they are constants in
+    both engines.
+    """
+    def g(leaf):
+        x = jnp.asarray(leaf)
+        if x.ndim >= 1 and jnp.issubdtype(x.dtype, jnp.floating):
+            return _pin(x)
+        return leaf
+    return jax.tree_util.tree_map(g, cfg)
+
+
 def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
-    topo, flows, cfg, law_cfg = sim.topo, sim.flows, sim.cfg, sim.law_cfg
+    topo, flows, cfg = sim.topo, sim.flows, sim.cfg
+    law_cfg = _pin_flow_cfg(sim.law_cfg)
     D = cfg.hist
     dt = cfg.dt
     F = flows.tau.shape[0]
@@ -180,12 +226,15 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
               (t_sec < flows.stop))
     # -- instantaneous RTT and send rates ---------------------------------
     q_hop = state.q[flows.path]                               # [F,H]
-    b_hop = bw[flows.path]
+    # pinned: a constant path would let XLA fold the gather and turn the
+    # divisions below into reciprocal multiplies the slot engine (dynamic
+    # path) never performs
+    b_hop = _pin(bw[flows.path])
     valid = flows.path < topo.num_queues
     theta_now = flows.tau + jnp.sum(
         jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
     lam = jnp.where(active,
-                    jnp.minimum(jnp.minimum(state.w / theta_now,
+                    jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
                                             state.rate_cap),
                                 flows.nic_rate), 0.0)
 
@@ -196,7 +245,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # -- queue update ------------------------------------------------------
     hop_delay_idx = jnp.mod(ptr - flows.tf_steps, D)          # [F,H]
     lam_del = hist_lam[hop_delay_idx, jnp.arange(F)[:, None]]  # [F,H]
-    arr, out, q_new = _queue_update(sim, state, lam_del, valid, bw)
+    arr, out, q_new = _queue_update(topo, dt, sim.backend, sim.incidence,
+                                    flows.path, state.q, lam_del, valid, bw)
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
@@ -228,15 +278,15 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
 
     upd = active & (t_sec >= state.next_update)
     dt_obs = jnp.maximum(t_sec - state.last_update, dt)
-    obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=bw[flows.path],
+    obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
                   valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
                   ecn_frac=ecn)
 
     # -- control-law update (dispatches through the law's bound backend) ---
     law_state, w, rate_cap = sim.law.update(
         state.law, obs, state.w, state.rate_cap, upd, law_cfg, t_sec)
-    w = jnp.clip(w, MTU, 8.0 * flows.nic_rate * flows.tau +
-                 8.0 * flows.nic_rate * theta_now)
+    w = jnp.clip(w, MTU, _pin(8.0 * flows.nic_rate * flows.tau) +
+                 _pin(8.0 * flows.nic_rate * theta_now))
     period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
     next_update = jnp.where(upd, t_sec + period, state.next_update)
     last_update = jnp.where(upd, t_sec, state.last_update)
@@ -245,7 +295,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         rate_cap = alloc_fn(state.remaining, active, t_sec, flows, rate_cap)
 
     # -- flow progress ------------------------------------------------------
-    remaining = jnp.where(active, state.remaining - lam * dt, state.remaining)
+    remaining = jnp.where(active, state.remaining - _pin(lam * dt),
+                          state.remaining)
     done = active & (remaining <= 0.0)
     fct = jnp.where(done & jnp.isnan(state.fct),
                     t_sec + flows.tau / 2.0 - flows.start, state.fct)
@@ -256,7 +307,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         remaining=remaining, fct=fct,
         next_update=next_update, last_update=last_update, law=law_state)
     rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(jnp.where(active, w, 0.0)),
-                 thru=out, lam=jnp.sum(lam), lam_f=lam)
+                 thru=out, lam=jnp.sum(lam), lam_f=lam,
+                 n_active=jnp.sum(active.astype(jnp.int32)))
     return new_state, rec
 
 
@@ -267,16 +319,18 @@ def _make_sim(topo: Topology, flows: Flows, law: Law, law_cfg: LawConfig,
     return FluidSim(topo, flows, law, law_cfg, cfg, backend, incidence)
 
 
-def _scan_scenario(sim: FluidSim, state: SimState, bw_fn, alloc_fn,
-                   record: bool):
+def _scan_scenario(sim, state, bw_fn, alloc_fn, record: bool, step_fn=None):
     """lax.scan over cfg.steps; honours cfg.record_every by scanning chunks
     (one record per chunk, the chunk's last step) so the recording memory
-    shrinks by the subsample factor. steps must divide by record_every."""
+    shrinks by the subsample factor. steps must divide by record_every.
+    ``step_fn`` selects the engine (padded ``step`` by default,
+    ``slot_step`` for the flow-slot streaming engine)."""
     cfg = sim.cfg
+    step_fn = step_fn or step
     k = max(int(cfg.record_every), 1) if record else 1
 
     def body(st, _):
-        st, rec = step(sim, st, bw_fn=bw_fn, alloc_fn=alloc_fn)
+        st, rec = step_fn(sim, st, bw_fn=bw_fn, alloc_fn=alloc_fn)
         return st, (rec if record else None)
 
     if k <= 1:
@@ -288,8 +342,8 @@ def _scan_scenario(sim: FluidSim, state: SimState, bw_fn, alloc_fn,
 
     def chunk(st, _):
         st = jax.lax.fori_loop(
-            0, k - 1, lambda _, s: step(sim, s, bw_fn=bw_fn,
-                                        alloc_fn=alloc_fn)[0], st)
+            0, k - 1, lambda _, s: step_fn(sim, s, bw_fn=bw_fn,
+                                           alloc_fn=alloc_fn)[0], st)
         return body(st, None)
 
     return jax.lax.scan(chunk, state, None, length=cfg.steps // k)
@@ -328,6 +382,320 @@ def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
 
     final, recs = run(state)
     return final, recs
+
+
+# --------------------------------------------------------------------------
+# Flow-slot streaming engine (DESIGN.md section 12)
+# --------------------------------------------------------------------------
+
+class SlotSim(NamedTuple):
+    """One schedule bound to a slot pool and a backend.
+
+    ``slots`` (S) is the static pool size: per-tick cost is O(S * hops)
+    regardless of how many flows the schedule holds in total. ``backend``
+    selects the queue-update implementation exactly as in ``FluidSim``;
+    the fused incidence is [H, S, Q+1]-sized and lives in the scan state
+    (rebuilt by masked dynamic-update on admission, see
+    ``kernels.queue_arrivals.update_incidence``).
+    """
+    topo: Topology
+    sched: FlowSchedule
+    law: Law
+    law_cfg: LawConfig
+    cfg: SimConfig
+    slots: int
+    backend: str = "reference"
+
+
+def _gather_law_cfg(law_cfg: LawConfig, gf: jnp.ndarray, n_flows: int):
+    """Per-slot view of a LawConfig: leaves with an [N] flow axis are
+    gathered at ``gf`` (the pool's current schedule indices, clamped);
+    scalars and non-flow pytrees (e.g. ``sched``) pass through."""
+    def g(leaf):
+        x = jnp.asarray(leaf)
+        if x.ndim >= 1 and x.shape[0] == n_flows:
+            return x[gf]
+        return leaf
+    return jax.tree_util.tree_map(g, law_cfg)
+
+
+def init_slot_state(sim: SlotSim) -> SlotState:
+    """All slots free; pool metadata holds the same inert values as
+    ``pad_flows`` so empty slots never send and never NaN."""
+    topo, sched, cfg = sim.topo, sim.sched, sim.cfg
+    S = int(sim.slots)
+    N = int(sched.start.shape[0])
+    H = int(sched.path.shape[1])
+    Q = topo.num_queues
+    D = cfg.hist
+    tau0 = jnp.full((S,), 20e-6, jnp.float32)
+    nic0 = jnp.full((S,), 1e9, jnp.float32)
+    w0 = nic0 * tau0
+    cfg0 = _gather_law_cfg(sim.law_cfg, jnp.zeros((S,), jnp.int32), N)
+    incidence = (jnp.zeros((H, S, Q + 1), jnp.float32)
+                 if sim.backend == "fused" else None)
+    return SlotState(
+        t=jnp.asarray(0, jnp.int32),
+        cursor=jnp.asarray(0, jnp.int32),
+        hw=jnp.asarray(0, jnp.int32),
+        slot_flow=jnp.full((S,), N, jnp.int32),
+        admit_t=jnp.zeros((S,), jnp.int32),
+        free_at=jnp.zeros((S,), jnp.int32),
+        path=jnp.full((S, H), Q, jnp.int32),
+        tf_steps=jnp.ones((S, H), jnp.int32),
+        rtt_steps=jnp.ones((S,), jnp.int32),
+        tau=tau0, nic_rate=nic0,
+        start=jnp.full((S,), jnp.inf, jnp.float32),
+        stop=jnp.full((S,), jnp.inf, jnp.float32),
+        w=w0,
+        rate_cap=jnp.full((S,), jnp.inf, jnp.float32),
+        q=jnp.zeros((Q + 1,), jnp.float32),
+        out_rate=jnp.zeros((Q + 1,), jnp.float32),
+        hist_lam=jnp.zeros((D, S), jnp.float32),
+        hist_q=jnp.zeros((D, Q + 1), jnp.float32),
+        hist_out=jnp.zeros((D, Q + 1), jnp.float32),
+        hist_w=jnp.broadcast_to(w0, (D, S)).astype(jnp.float32),
+        remaining=jnp.full((S,), jnp.inf, jnp.float32),
+        next_update=jnp.full((S,), jnp.inf, jnp.float32),
+        last_update=jnp.zeros((S,), jnp.float32),
+        law=sim.law.init(S, cfg0),
+        fct=jnp.full((N,), jnp.nan, jnp.float32),
+        incidence=incidence,
+    )
+
+
+def _admit_retire(sim: SlotSim, state: SlotState, t_sec):
+    """The per-tick admit/retire pass (pure, jittable, O(S + log N)).
+
+    Retire: slots whose occupant completed (or passed ``stop``) AND whose
+    in-flight traffic has drained (``t >= free_at``) return to the pool.
+    Admit: due arrivals (``start <= t``, a binary search against the
+    sorted schedule) fill free slots, fresh-never-used slots first
+    (ascending), recycled slots only when fresh ones run out. While
+    ``S >= total_flows`` this maps schedule entry i to slot i, which is
+    what makes the padded-engine equivalence bit-for-bit — the queue
+    scatter-add then accumulates contributions in the identical order.
+    Admitted slots gather the flow's metadata, reset window/config state
+    exactly as ``init_state`` would, and re-init the law's state pytree
+    entries (``law.init`` against the slot-gathered config).
+    """
+    sched = sim.sched
+    S = int(state.w.shape[0])
+    N = int(sched.start.shape[0])
+    sidx = jnp.arange(S, dtype=jnp.int32)
+
+    occupied = state.slot_flow < N
+    freeable = occupied & (state.t >= state.free_at)
+    slot_flow = jnp.where(freeable, N, state.slot_flow)
+    occupied = slot_flow < N
+
+    due = jnp.searchsorted(sched.start, t_sec,
+                           side="right").astype(jnp.int32)
+    n_free = S - jnp.sum(occupied.astype(jnp.int32))
+    n_admit = jnp.minimum(due - state.cursor, n_free)
+    free = ~occupied
+    fresh = free & (sidx >= state.hw)
+    n_fresh = jnp.minimum(n_admit, jnp.sum(fresh.astype(jnp.int32)))
+    take_fresh = fresh & (jnp.cumsum(fresh.astype(jnp.int32)) - 1 < n_fresh)
+    recycled = free & (sidx < state.hw)
+    take_rec = recycled & (jnp.cumsum(recycled.astype(jnp.int32)) - 1 <
+                           n_admit - n_fresh)
+    admit = take_fresh | take_rec
+    rank = jnp.cumsum(admit.astype(jnp.int32)) - 1
+    slot_flow = jnp.where(admit, state.cursor + rank, slot_flow)
+
+    gf = jnp.clip(slot_flow, 0, N - 1)
+
+    def sel(new, old):
+        m = admit.reshape(admit.shape + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    tau = sel(sched.tau[gf], state.tau)
+    nic = sel(sched.nic_rate[gf], state.nic_rate)
+    start = sel(sched.start[gf], state.start)
+    cfg_slot = _gather_law_cfg(sim.law_cfg, gf, N)
+    fresh_law = sim.law.init(S, cfg_slot)
+    law_state = jax.tree_util.tree_map(
+        lambda f, o: jnp.where(
+            admit.reshape(admit.shape + (1,) * (o.ndim - 1)), f, o),
+        fresh_law, state.law)
+    state = state._replace(
+        slot_flow=slot_flow,
+        cursor=state.cursor + n_admit,
+        hw=state.hw + n_fresh,
+        admit_t=jnp.where(admit, state.t, state.admit_t),
+        free_at=jnp.where(admit, _INT32_MAX, state.free_at),
+        path=sel(sched.path[gf], state.path),
+        tf_steps=sel(sched.tf_steps[gf], state.tf_steps),
+        rtt_steps=sel(sched.rtt_steps[gf], state.rtt_steps),
+        tau=tau, nic_rate=nic, start=start,
+        stop=sel(sched.stop[gf], state.stop),
+        w=sel(nic * tau, state.w),
+        rate_cap=sel(jnp.full((S,), jnp.inf, jnp.float32), state.rate_cap),
+        remaining=sel(sched.size[gf].astype(jnp.float32), state.remaining),
+        next_update=sel((start + tau).astype(jnp.float32),
+                        state.next_update),
+        last_update=sel(start.astype(jnp.float32), state.last_update),
+        law=law_state,
+    )
+    if sim.backend == "fused" and state.incidence is not None:
+        state = state._replace(incidence=update_incidence(
+            state.incidence, state.path, admit, sim.topo.num_queues))
+    return state, occupied | admit
+
+
+def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
+    """One tick of the flow-slot streaming engine.
+
+    Identical arithmetic to ``step`` on the S-sized pool, plus the
+    admit/retire pass and two occupancy guards on the delayed ring-buffer
+    reads: a slot's history older than its occupant's admission reads as
+    the ring-init values (0 for rates, the initial window for ``w_old``)
+    — exactly what the padded engine's pre-start history holds — so the
+    previous occupant's traffic is never observed and no O(D*S) history
+    reset is needed on admission. Retirement is deferred until the
+    occupant's in-flight traffic has drained (``free_at``; its delayed
+    rates are zero from then on), so queues see the same tail the padded
+    engine delivers. ``alloc_fn`` is not supported on the slot path
+    (receiver-grant bookkeeping is tied to a static flow set).
+    """
+    if alloc_fn is not None:
+        raise ValueError("alloc_fn is not supported on the slot path")
+    topo, cfg = sim.topo, sim.cfg
+    S = int(state.w.shape[0])
+    N = int(sim.sched.start.shape[0])
+    D = cfg.hist
+    dt = cfg.dt
+    t_sec = state.t.astype(jnp.float32) * dt
+    ptr = jnp.mod(state.t, D)
+    bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
+    sidx = jnp.arange(S)
+
+    # -- admit / retire ----------------------------------------------------
+    state, occupied = _admit_retire(sim, state, t_sec)
+    (path, tf_steps, tau, nic) = (state.path, state.tf_steps, state.tau,
+                                  state.nic_rate)
+    gf = jnp.clip(state.slot_flow, 0, N - 1)
+    cfg_slot = _gather_law_cfg(sim.law_cfg, gf, N)
+
+    active = (occupied & (t_sec >= state.start) & (state.remaining > 0.0) &
+              (t_sec < state.stop))
+    # -- instantaneous RTT and send rates ---------------------------------
+    q_hop = state.q[path]                                     # [S,H]
+    b_hop = _pin(bw[path])            # mirror of the padded engine's pin
+    valid = path < topo.num_queues
+    theta_now = tau + jnp.sum(
+        jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
+    lam = jnp.where(active,
+                    jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
+                                            state.rate_cap),
+                                nic), 0.0)
+
+    # -- histories at current time ----------------------------------------
+    hist_lam = state.hist_lam.at[ptr].set(lam)
+    hist_w = state.hist_w.at[ptr].set(state.w)
+
+    # -- queue update (reads older than admission are the prior occupant's
+    #    — they are exactly 0 by the free_at drain guarantee, and the mask
+    #    also reproduces the padded engine's all-zero pre-start history) --
+    hop_delay_idx = jnp.mod(ptr - tf_steps, D)                # [S,H]
+    lam_del = hist_lam[hop_delay_idx, sidx[:, None]]          # [S,H]
+    lam_del = jnp.where(state.t - tf_steps >= state.admit_t[:, None],
+                        lam_del, 0.0)
+    arr, out, q_new = _queue_update(topo, dt, sim.backend, state.incidence,
+                                    path, state.q, lam_del, valid, bw)
+    hist_q = state.hist_q.at[ptr].set(q_new)
+    hist_out = state.hist_out.at[ptr].set(out)
+
+    # -- delayed observation (see step; w_old before admission is the
+    #    occupant's initial window, the padded engine's ring-init) --------
+    tb_steps = jnp.clip(state.rtt_steps[:, None] - tf_steps, 1, D - 2)
+    ohidx = jnp.mod(ptr - tb_steps, D)                        # [S,H]
+    ohprev = jnp.mod(ohidx - 1, D)
+    q_obs = hist_q[ohidx, path]
+    q_obs_prev = hist_q[ohprev, path]
+    qdot_obs = (q_obs - q_obs_prev) / dt
+    mu_obs = hist_out[ohidx, path]
+    theta_obs = tau + jnp.sum(
+        jnp.where(valid, q_obs / b_hop, 0.0), axis=1)
+    wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
+                          1, D - 2)
+    w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx]
+    w_old = jnp.where(state.t - wold_delay >= state.admit_t, w_old,
+                      nic * tau)
+    buf_hop = jnp.concatenate(
+        [topo.buffer, jnp.asarray([1e30], jnp.float32)])[path]
+    ecn = jnp.max(jnp.where(valid, _marking(q_obs, buf_hop, cfg_slot), 0.0),
+                  axis=1)
+
+    upd = active & (t_sec >= state.next_update)
+    dt_obs = jnp.maximum(t_sec - state.last_update, dt)
+    obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
+                  valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
+                  ecn_frac=ecn)
+
+    # -- control-law update (slot-gathered config) ------------------------
+    law_state, w, rate_cap = sim.law.update(
+        state.law, obs, state.w, state.rate_cap, upd, cfg_slot, t_sec)
+    w = jnp.clip(w, MTU, _pin(8.0 * nic * tau) + _pin(8.0 * nic * theta_now))
+    period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
+    next_update = jnp.where(upd, t_sec + period, state.next_update)
+    last_update = jnp.where(upd, t_sec, state.last_update)
+
+    # -- flow progress; FCT scatters to the schedule-ordered [N] output ---
+    remaining = jnp.where(active, state.remaining - _pin(lam * dt),
+                          state.remaining)
+    done = active & (remaining <= 0.0)
+    fct = state.fct.at[jnp.where(done, state.slot_flow, N)].set(
+        jnp.where(done, t_sec + tau / 2.0 - state.start, jnp.nan),
+        mode="drop")
+    # hold the slot until the flow's tail has drained into the queues
+    hold = jnp.max(jnp.where(valid, tf_steps, 0), axis=1)
+    expire = (occupied & (t_sec >= state.stop) &
+              (state.free_at == _INT32_MAX) & ~done)
+    free_at = jnp.where(done | expire, state.t + hold + 1, state.free_at)
+
+    new_state = state._replace(
+        t=state.t + 1, w=w, rate_cap=rate_cap, q=q_new, out_rate=out,
+        hist_lam=hist_lam, hist_q=hist_q, hist_out=hist_out, hist_w=hist_w,
+        remaining=remaining, fct=fct, free_at=free_at,
+        next_update=next_update, last_update=last_update, law=law_state)
+    rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(jnp.where(active, w, 0.0)),
+                 thru=out, lam=jnp.sum(lam), lam_f=lam,
+                 n_active=jnp.sum(active.astype(jnp.int32)))
+    return new_state, rec
+
+
+def simulate_slots(topo: Topology, sched: FlowSchedule,
+                   law_name: Union[str, Law], slots: int,
+                   law_cfg: Optional[LawConfig] = None,
+                   cfg: Optional[SimConfig] = None,
+                   bw_fn: Optional[Callable] = None,
+                   record: bool = True,
+                   backend: str = "reference"):
+    """Run a schedule through a bounded pool of ``slots`` active slots.
+
+    Returns (final ``SlotState``, ``Record`` pytree); ``final.fct`` is [N]
+    in SCHEDULE order (join back to unsorted flows via ``sched.order``).
+    With ``slots >= N`` this reproduces the queue and FCT trajectories of
+    ``simulate`` on ``network.schedule_as_flows(sched)`` bit-for-bit
+    (windows to <= 1 ulp; DESIGN.md section 12); smaller pools
+    admission-delay flows that arrive while the pool is full (size with
+    ``workload.suggest_slots``). ``law_cfg`` leaves with an [N] flow axis
+    are gathered into slots on admission.
+    """
+    cfg = cfg or SimConfig()
+    law = _resolve_law(law_name, backend)
+    law_cfg = law_cfg or default_law_config(sched)
+    sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend)
+    state = init_slot_state(sim)
+
+    @jax.jit
+    def run(st):
+        return _scan_scenario(sim, st, bw_fn, None, record,
+                              step_fn=slot_step)
+
+    return run(state)
 
 
 # --------------------------------------------------------------------------
@@ -380,6 +748,48 @@ def stack_law_configs(cfgs: List[LawConfig]) -> LawConfig:
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *cfgs)
 
 
+def pad_schedule(sched: FlowSchedule, n: int, pad_queue: int) -> FlowSchedule:
+    """Pad a schedule to ``n`` flows with inert tail entries.
+
+    Same inert values as ``pad_flows`` plus ``start = inf`` — the sorted
+    order is preserved (inf sorts last) and the admission cursor never
+    reaches the padding, so padded scenarios in one batch share a flow
+    count without ever admitting phantom flows. ``order`` pads with -1.
+    """
+    N = int(sched.start.shape[0])
+    add = n - N
+    if add < 0:
+        raise ValueError(f"cannot pad {N} schedule entries down to {n}")
+    if add == 0:
+        return sched
+
+    def cat(x, fill, dtype):
+        pad = jnp.full((add,) + tuple(x.shape[1:]), fill, dtype)
+        return jnp.concatenate([jnp.asarray(x, dtype), pad])
+
+    return FlowSchedule(
+        path=cat(sched.path, pad_queue, jnp.int32),
+        tf_steps=cat(sched.tf_steps, 1, jnp.int32),
+        rtt_steps=cat(sched.rtt_steps, 1, jnp.int32),
+        tau=cat(sched.tau, 20e-6, jnp.float32),
+        nic_rate=cat(sched.nic_rate, 1e9, jnp.float32),
+        size=cat(sched.size, jnp.inf, jnp.float32),
+        start=cat(sched.start, jnp.inf, jnp.float32),
+        stop=cat(sched.stop, jnp.inf, jnp.float32),
+        weight=cat(sched.weight, 1.0, jnp.float32),
+        order=cat(sched.order, -1, jnp.int32),
+    )
+
+
+def stack_flow_schedules(scheds: List[FlowSchedule],
+                         pad_queue: int) -> FlowSchedule:
+    """Stack schedules along a new leading batch axis, padding each to the
+    largest flow count with inert entries (``pad_schedule``)."""
+    n = max(int(s.start.shape[0]) for s in scheds)
+    padded = [pad_schedule(s, n, pad_queue) for s in scheds]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
 def resolve_devices(devices) -> int:
     """Normalize the ``devices`` argument of ``simulate_batch``.
 
@@ -412,6 +822,36 @@ def _pad_batch(tree, pad: int):
     return jax.tree_util.tree_map(
         lambda x: jnp.concatenate(
             [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])]), tree)
+
+
+def _dispatch_batch(run, args: tuple, batch: int, devices):
+    """Run a vmapped scenario program on the single-device path or, with
+    ``devices`` > 1, shard its batch axis across the device mesh
+    (DESIGN.md section 11). Shared by ``simulate_batch`` and
+    ``simulate_slots_batch`` — identical padding/sharding contract."""
+    ndev = resolve_devices(devices)
+    if ndev <= 1:
+        return jax.jit(run)(*args)
+
+    mesh, rules = _batch_mesh(ndev)
+    spec = axes_to_pspec(("batch",), mesh, rules)
+    ax0 = spec[0] if len(spec) else None
+    ax0 = ax0 if isinstance(ax0, tuple) else ((ax0,) if ax0 else ())
+    sizes = dict(mesh.shape)
+    shards = 1
+    for a in ax0:
+        shards *= sizes[a]
+    if shards <= 1:
+        return jax.jit(run)(*args)
+
+    pad = -batch % shards
+    args = tuple(_pad_batch(a, pad) for a in args)
+    sharded = shard_map(run, mesh=mesh, in_specs=(spec,) * len(args),
+                        out_specs=spec, check_vma=False)
+    out = jax.jit(sharded)(*args)
+    if pad:
+        out = jax.tree_util.tree_map(lambda x: x[:batch], out)
+    return out
 
 
 def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
@@ -469,28 +909,49 @@ def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
 
     run = jax.vmap(_one, in_axes=(axes(flows), axes(law_cfg),
                                   axes(bw_params)))
-    ndev = resolve_devices(devices)
-    if ndev <= 1:
-        return jax.jit(run)(flows, law_cfg, bw_params)
+    return _dispatch_batch(run, (flows, law_cfg, bw_params),
+                           int(flows.tau.shape[0]), devices)
 
-    mesh, rules = _batch_mesh(ndev)
-    spec = axes_to_pspec(("batch",), mesh, rules)
-    ax0 = spec[0] if len(spec) else None
-    ax0 = ax0 if isinstance(ax0, tuple) else ((ax0,) if ax0 else ())
-    sizes = dict(mesh.shape)
-    shards = 1
-    for a in ax0:
-        shards *= sizes[a]
-    if shards <= 1:
-        return jax.jit(run)(flows, law_cfg, bw_params)
 
-    B = int(flows.tau.shape[0])
-    pad = -B % shards
-    args = (_pad_batch(flows, pad), _pad_batch(law_cfg, pad),
-            _pad_batch(bw_params, pad))
-    sharded = shard_map(run, mesh=mesh, in_specs=(spec, spec, spec),
-                        out_specs=spec, check_vma=False)
-    out = jax.jit(sharded)(*args)
-    if pad:
-        out = jax.tree_util.tree_map(lambda x: x[:B], out)
-    return out
+def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
+                         law_name: Union[str, Law], slots: int,
+                         law_cfg: Optional[LawConfig] = None,
+                         cfg: Optional[SimConfig] = None,
+                         bw_fn: Optional[Callable] = None,
+                         bw_params=None,
+                         record: bool = True,
+                         backend: str = "reference",
+                         expected_flows: float = 1.0,
+                         devices=None):
+    """Batched/sharded twin of ``simulate_slots`` (the slot path of the
+    sweep engine).
+
+    ``scheds`` carries a leading batch axis B on every leaf (build with
+    ``stack_flow_schedules``); ``law_cfg``/``bw_params`` batch exactly as
+    in ``simulate_batch``, and ``devices`` shards the batch axis with the
+    same padding contract (DESIGN.md section 11). The pool size ``slots``
+    is shared across the batch — one compiled program whose per-tick cost
+    is O(B * S * hops) regardless of the stacked schedules' total flow
+    counts. Returns (final ``SlotState``s, records) with a leading batch
+    axis; ``fct`` rows are in each scenario's schedule order.
+    """
+    cfg = cfg or SimConfig()
+    law = _resolve_law(law_name, backend)
+    S = int(slots)
+
+    def _one(sched_i, lcfg_i, bwp_i):
+        lcfg = (lcfg_i if lcfg_i is not None else
+                default_law_config(sched_i, expected_flows=expected_flows))
+        bfn = bw_fn if bwp_i is None else (lambda t: bw_fn(t, bwp_i))
+        sim = SlotSim(topo, sched_i, law, lcfg, cfg, S, backend)
+        return _scan_scenario(sim, init_slot_state(sim), bfn, None, record,
+                              step_fn=slot_step)
+
+    def axes(tree):
+        return (None if tree is None else
+                jax.tree_util.tree_map(lambda _: 0, tree))
+
+    run = jax.vmap(_one, in_axes=(axes(scheds), axes(law_cfg),
+                                  axes(bw_params)))
+    return _dispatch_batch(run, (scheds, law_cfg, bw_params),
+                           int(scheds.start.shape[0]), devices)

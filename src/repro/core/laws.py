@@ -27,9 +27,44 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from .types import PathObs, MTU
+
+
+def _pin(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin an intermediate against XLA algebraic rewriting.
+
+    The normalized-power ratio sits exactly on a float32 knife edge at the
+    control law's fixed point (current == b, voltage == b*tau, so the true
+    ratio is 1.0): XLA's simplifier may rewrite ``(a*b)/c`` into
+    ``a*(b/c)`` in one compiled program and not another (vmap widths, slot
+    vs padded engine, shard_map), flipping the result by 1 ulp right where
+    the EWMA is most sensitive. An optimization barrier on the numerator
+    forces every program to round the same mul-then-div order, which is
+    what makes cross-engine trajectory equality bit-for-bit
+    (tests/test_slot_engine.py) instead of merely close.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _register_barrier_batcher():
+    """jax 0.4.37 ships no vmap rule for ``optimization_barrier`` — the
+    barrier is an identity, so batching is trivial (bind the batched args,
+    keep their batch dims). Without this the batched engines
+    (``simulate_batch``/``simulate_slots_batch``) could not contain pins."""
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:                                  # pragma: no cover
+        return
+    if optimization_barrier_p not in batching.primitive_batchers:
+        batching.primitive_batchers[optimization_barrier_p] = (
+            lambda args, dims: (optimization_barrier_p.bind(*args), dims))
+
+
+_register_barrier_batcher()
 
 
 class LawConfig(NamedTuple):
@@ -82,7 +117,8 @@ def norm_power_int(obs: PathObs, cfg: LawConfig) -> jnp.ndarray:
     current = obs.qdot + obs.mu                      # [F,H] bytes/s
     voltage = obs.q + obs.b * tau                    # [F,H] bytes
     base = jnp.square(obs.b) * tau                   # [F,H]
-    g = jnp.where(obs.valid, (current * voltage) / jnp.maximum(base, 1.0), 0.0)
+    power = _pin(current * voltage)
+    g = jnp.where(obs.valid, power / jnp.maximum(base, 1.0), 0.0)
     return jnp.max(g, axis=1)                        # [F]
 
 
@@ -90,20 +126,27 @@ def norm_power_theta(theta: jnp.ndarray, theta_prev: jnp.ndarray,
                      dt_obs: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     """theta-PowerTCP (Algorithm 2): Gamma_norm = (thetadot + 1) * theta / tau."""
     thetadot = (theta - theta_prev) / jnp.maximum(dt_obs, 1e-12)
-    return (thetadot + 1.0) * theta / jnp.maximum(tau, 1e-12)
+    return _pin((thetadot + 1.0) * theta) / jnp.maximum(tau, 1e-12)
 
 
 def _smooth(prev: jnp.ndarray, new: jnp.ndarray, dt_obs: jnp.ndarray,
             tau: jnp.ndarray) -> jnp.ndarray:
     """Gamma_smooth update (Alg. 1 line 24), with dt clipped to tau."""
     d = jnp.clip(dt_obs, 0.0, tau)
-    return (prev * (tau - d) + new * d) / jnp.maximum(tau, 1e-12)
+    blend = _pin(prev * (tau - d)) + _pin(new * d)
+    return blend / jnp.maximum(tau, 1e-12)
+
+
+def _ewma(gamma, target, w):
+    """``gamma * target + (1 - gamma) * w`` with both products pinned, so
+    no program variant contracts one of them into an FMA (see _pin)."""
+    return _pin(gamma * target) + _pin((1.0 - gamma) * w)
 
 
 def _mimd_update(w, w_old, norm_power, cfg: LawConfig, upd_mask):
     """UPDATEWINDOW (Alg. 1 line 27): EWMA of (w_old / Gamma_norm + beta)."""
     target = w_old / jnp.maximum(norm_power, 1e-9) + cfg.beta
-    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    w_new = _ewma(cfg.gamma, target, w)
     return jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
 
 
@@ -207,8 +250,8 @@ def swift_init(n, cfg):
 
 def swift_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     f = jnp.maximum(obs.theta, 1e-12)
-    target = obs.w_old * cfg.tau / f + cfg.beta
-    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    target = _pin(obs.w_old * cfg.tau) / f + cfg.beta
+    w_new = _ewma(cfg.gamma, target, w)
     w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
     return state, w, rate_cap
 
@@ -229,7 +272,7 @@ def gradient_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     thetadot = (obs.theta - state.prev_theta) / jnp.maximum(obs.dt_obs, 1e-12)
     f = jnp.maximum(thetadot + 1.0, 1e-2)
     target = obs.w_old / f + cfg.beta
-    w_new = cfg.gamma * target + (1.0 - cfg.gamma) * w
+    w_new = _ewma(cfg.gamma, target, w)
     w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
     prev = jnp.where(upd_mask, obs.theta, state.prev_theta)
     return GradState(prev), w, rate_cap
@@ -260,9 +303,10 @@ def timely_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     hai = neg >= cfg.timely_hai_n
     r = state.rate
     r_low = r + jnp.where(hai, cfg.timely_hai_n * add, add)
-    r_high = r * (1.0 - cfg.timely_beta * (1.0 - t_high / jnp.maximum(obs.theta, 1e-12)))
+    r_high = r * (1.0 - _pin(cfg.timely_beta *
+                             (1.0 - t_high / jnp.maximum(obs.theta, 1e-12))))
     r_grad_neg = r + jnp.where(hai, cfg.timely_hai_n * add, add)
-    r_grad_pos = r * jnp.maximum(1.0 - cfg.timely_beta * grad, 0.5)
+    r_grad_pos = r * jnp.maximum(1.0 - _pin(cfg.timely_beta * grad), 0.5)
     r_mid = jnp.where(grad <= 0, r_grad_neg, r_grad_pos)
     r_new = jnp.where(obs.theta < t_low, r_low,
                       jnp.where(obs.theta > t_high, r_high, r_mid))
@@ -299,14 +343,14 @@ def dcqcn_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     gate the actual cut/increase cadence."""
     p = obs.ecn_frac                                  # marking prob at bottleneck
     # probability >=1 marked packet among packets sent since last update
-    pkts = jnp.maximum(state.rc * obs.dt_obs / MTU, 1.0)
+    pkts = jnp.maximum(_pin(state.rc * obs.dt_obs) / MTU, 1.0)
     pe = 1.0 - jnp.power(jnp.clip(1.0 - p, 0.0, 1.0), pkts)
     cut = upd_mask & (pe > 0.01) & (t - state.t_last_cut >= cfg.dcqcn_cnp_timer)
-    alpha = jnp.where(cut, (1.0 - cfg.dcqcn_g) * state.alpha + cfg.dcqcn_g * pe,
-                      state.alpha)
+    alpha = jnp.where(cut, _ewma(cfg.dcqcn_g, pe, state.alpha), state.alpha)
     rt = jnp.where(cut, state.rc, state.rt)
     # expected-value (fluid) cut: scale the alpha/2 cut by the mark fraction
-    rc = jnp.where(cut, state.rc * (1.0 - 0.5 * alpha * jnp.minimum(pe, 1.0)),
+    rc = jnp.where(cut,
+                   state.rc * (1.0 - _pin(0.5 * alpha * jnp.minimum(pe, 1.0))),
                    state.rc)
     t_cut = jnp.where(cut, t, state.t_last_cut)
     # increase path: timer since last increase and no recent cut

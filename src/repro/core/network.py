@@ -18,7 +18,41 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .types import Flows, Topology, GBPS, US
+from .types import Flows, FlowSchedule, Topology, GBPS, US
+
+
+def make_schedule(flows: Flows) -> FlowSchedule:
+    """Sort a ``Flows`` batch by arrival time into a ``FlowSchedule``.
+
+    The sort is stable, so flows sharing a start time keep their original
+    relative order — together with the slot engine's fresh-first slot
+    assignment this is what makes the ``S >= N`` exactness anchor
+    bit-for-bit (slot i holds schedule entry i; see DESIGN.md section 12).
+    ``order`` records the original index of each schedule entry.
+    """
+    start = np.asarray(flows.start)
+    perm = np.argsort(start, kind="stable")
+    idx = jnp.asarray(perm.astype(np.int32))
+    return FlowSchedule(
+        path=flows.path[idx], tf_steps=flows.tf_steps[idx],
+        rtt_steps=flows.rtt_steps[idx], tau=flows.tau[idx],
+        nic_rate=flows.nic_rate[idx], size=flows.size[idx],
+        start=flows.start[idx], stop=flows.stop[idx],
+        weight=flows.weight[idx], order=idx)
+
+
+def schedule_as_flows(sched: FlowSchedule) -> Flows:
+    """View a schedule as a plain ``Flows`` batch (schedule order kept).
+
+    This is the padded-engine twin the slot engine is asserted against:
+    ``simulate(topo, schedule_as_flows(s), ...)`` and
+    ``simulate_slots(topo, s, ..., slots >= N)`` must produce identical
+    trajectories.
+    """
+    return Flows(path=sched.path, tf_steps=sched.tf_steps,
+                 rtt_steps=sched.rtt_steps, tau=sched.tau,
+                 nic_rate=sched.nic_rate, size=sched.size,
+                 start=sched.start, stop=sched.stop, weight=sched.weight)
 
 
 def single_bottleneck(bandwidth: float = 25 * GBPS,

@@ -29,8 +29,10 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 
 from .fluid import (default_law_config, pad_flows, simulate_batch,
-                    stack_flows, stack_law_configs)
+                    simulate_slots_batch, stack_flow_schedules, stack_flows,
+                    stack_law_configs)
 from .laws import Law
+from .network import make_schedule
 from .rdcn import CircuitSchedule, circuit_bw_at, stack_schedules
 from .types import Flows, SimConfig, Topology
 
@@ -55,13 +57,24 @@ class SweepPoint(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """Declarative grid; see module docstring. ``laws`` entries are registry
-    names or ``Law`` instances (e.g. a custom wrapper)."""
+    names or ``Law`` instances (e.g. a custom wrapper).
+
+    ``slots`` switches the grid onto the flow-slot streaming engine
+    (DESIGN.md section 12): each scenario's flows are sorted into a
+    ``FlowSchedule`` and run through a pool of ``slots`` active slots, so
+    per-tick cost scales with peak concurrency instead of total flows.
+    Result states are then ``SlotState``s whose ``fct`` rows are in
+    schedule order (map back via the schedule's ``order``); per-flow [F]
+    vectors inside ``law_cfg_overrides`` must be in schedule order too
+    (scalars — the normal case — are unaffected).
+    """
     laws: Sequence[Union[str, Law]]
     flows: Sequence[Flows]
     law_cfg_overrides: Sequence[dict] = ({},)
     schedules: Optional[Sequence[CircuitSchedule]] = None
     expected_flows: float = 1.0
     backend: str = "reference"
+    slots: Optional[int] = None
 
     def __post_init__(self):
         if not self.laws or not self.flows or not self.law_cfg_overrides:
@@ -69,6 +82,8 @@ class SweepSpec:
                              "non-empty")
         if self.schedules is not None and not self.schedules:
             raise ValueError("schedules must be None or non-empty")
+        if self.slots is not None and self.slots < 1:
+            raise ValueError("slots must be None or >= 1")
 
 
 def _law_name(law: Union[str, Law]) -> str:
@@ -127,6 +142,10 @@ def run_sweep(spec: SweepSpec, topo: Topology,
     points = expand(spec)
     nmax = max(int(f.tau.shape[0]) for f in spec.flows)
     padded = [pad_flows(f, nmax, topo.num_queues) for f in spec.flows]
+    # slot path: schedules are per-scenario sorted views of the padded
+    # flows, so per-flow LawConfig vectors derive from the SORTED metadata
+    scheds = ([make_schedule(f) for f in padded]
+              if spec.slots is not None else None)
 
     states: Dict[int, object] = {}
     records: Dict[int, object] = {}
@@ -137,18 +156,26 @@ def run_sweep(spec: SweepSpec, topo: Topology,
             kw = dict(spec.law_cfg_overrides[p.override_idx])
             if spec.schedules is not None:
                 kw.setdefault("sched", spec.schedules[p.sched_idx].params())
+            src = (scheds if scheds is not None else padded)[p.flows_idx]
             lcfgs.append(default_law_config(
-                padded[p.flows_idx], expected_flows=spec.expected_flows,
-                **kw))
-        fb = stack_flows([padded[p.flows_idx] for p in rows],
-                         topo.num_queues)
+                src, expected_flows=spec.expected_flows, **kw))
         bw_fn = bw_params = None
         if spec.schedules is not None:
             bw_fn = circuit_bw_at
             bw_params = stack_schedules(
                 [spec.schedules[p.sched_idx] for p in rows])
-        states[li], records[li] = simulate_batch(
-            topo, fb, law, stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
-            bw_params=bw_params, record=record, backend=spec.backend,
-            devices=devices)
+        if spec.slots is not None:
+            sb = stack_flow_schedules([scheds[p.flows_idx] for p in rows],
+                                      topo.num_queues)
+            states[li], records[li] = simulate_slots_batch(
+                topo, sb, law, spec.slots, stack_law_configs(lcfgs), cfg,
+                bw_fn=bw_fn, bw_params=bw_params, record=record,
+                backend=spec.backend, devices=devices)
+        else:
+            fb = stack_flows([padded[p.flows_idx] for p in rows],
+                             topo.num_queues)
+            states[li], records[li] = simulate_batch(
+                topo, fb, law, stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
+                bw_params=bw_params, record=record, backend=spec.backend,
+                devices=devices)
     return SweepResult(tuple(points), states, records)

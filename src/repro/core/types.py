@@ -53,6 +53,35 @@ class Flows(NamedTuple):
     weight: jnp.ndarray             # [F] additive-increase weight multiplier
 
 
+class FlowSchedule(NamedTuple):
+    """Time-sorted arrival schedule for the flow-slot streaming engine.
+
+    Same per-flow metadata as ``Flows`` (identical field names, so helpers
+    like ``fluid.default_law_config`` and ``benchmarks.common.fct_stats``
+    accept either), plus the ordering contract: ``start`` is sorted
+    ascending (build with ``network.make_schedule``), and every per-flow
+    array is in that arrival order. ``order`` maps schedule position back
+    to the original ``Flows`` index (-1 for padding), so slot-engine
+    outputs (``fct`` is indexed in schedule order) can be joined back to
+    unsorted metadata.
+
+    The slot engine (``fluid.simulate_slots``) admits flows from the head
+    of this schedule into a bounded pool of S active slots and retires
+    them on completion — per-tick cost is O(S * hops), independent of the
+    total flow count N.
+    """
+    path: jnp.ndarray               # [N, H] int32 queue ids; pad == num_queues
+    tf_steps: jnp.ndarray           # [N, H] int32 forward delay (steps) per hop
+    rtt_steps: jnp.ndarray          # [N] int32 base feedback delay in steps
+    tau: jnp.ndarray                # [N] base RTT (seconds)
+    nic_rate: jnp.ndarray           # [N] host NIC line rate bytes/s
+    size: jnp.ndarray               # [N] flow size bytes (inf => long-lived)
+    start: jnp.ndarray              # [N] arrival time (seconds), sorted asc
+    stop: jnp.ndarray               # [N] hard stop time (inf => none)
+    weight: jnp.ndarray             # [N] additive-increase weight multiplier
+    order: jnp.ndarray              # [N] int32 original Flows index (-1 = pad)
+
+
 class PathObs(NamedTuple):
     """What a sender observes at window-update time (delayed by the feedback
     path). Per-hop arrays carry the INT metadata of Algorithm 1: egress queue
@@ -93,6 +122,46 @@ class SimState(NamedTuple):
     law: tuple                      # law-specific pytree
 
 
+class SlotState(NamedTuple):
+    """Scan state of the flow-slot streaming engine (``fluid.slot_step``).
+
+    Per-slot arrays have S (pool size) leading; ``fct`` is the only
+    O(total flows) output and is written by scatter on retirement.
+    ``slot_flow == N`` marks a free slot. ``admit_t`` gates delayed
+    ring-buffer reads (reads older than the admission substitute the
+    ring-init values — the previous occupant's history is never visible),
+    and ``free_at`` holds a completed flow's slot until its in-flight
+    traffic has fully drained into the queues (DESIGN.md section 12).
+    """
+    t: jnp.ndarray                  # int32 step counter
+    cursor: jnp.ndarray             # int32 next schedule index to admit
+    hw: jnp.ndarray                 # int32 fresh-slot high-water mark
+    slot_flow: jnp.ndarray          # [S] int32 schedule index (N == free)
+    admit_t: jnp.ndarray            # [S] int32 admission step of occupant
+    free_at: jnp.ndarray            # [S] int32 step when slot becomes reusable
+    path: jnp.ndarray               # [S, H] int32 (gathered on admit)
+    tf_steps: jnp.ndarray           # [S, H] int32
+    rtt_steps: jnp.ndarray          # [S] int32
+    tau: jnp.ndarray                # [S] float32
+    nic_rate: jnp.ndarray           # [S] float32
+    start: jnp.ndarray              # [S] float32
+    stop: jnp.ndarray               # [S] float32
+    w: jnp.ndarray                  # [S] congestion window (bytes)
+    rate_cap: jnp.ndarray           # [S] explicit rate cap (bytes/s)
+    q: jnp.ndarray                  # [Q+1] queue bytes (sentinel appended)
+    out_rate: jnp.ndarray           # [Q+1] egress rate, last step
+    hist_lam: jnp.ndarray           # [D, S] per-slot sending-rate history
+    hist_q: jnp.ndarray             # [D, Q+1]
+    hist_out: jnp.ndarray           # [D, Q+1]
+    hist_w: jnp.ndarray             # [D, S] per-slot window history
+    remaining: jnp.ndarray          # [S] bytes left
+    next_update: jnp.ndarray        # [S] next window-update time (seconds)
+    last_update: jnp.ndarray        # [S] previous window-update time (seconds)
+    law: tuple                      # law-specific pytree ([S] leaves)
+    fct: jnp.ndarray                # [N] completion time in SCHEDULE order
+    incidence: Optional[jnp.ndarray]  # [H, S, Q+1] (fused backend only)
+
+
 class Record(NamedTuple):
     """Optional per-step recordings (subsampled by ``record_every``)."""
     t: jnp.ndarray                  # seconds
@@ -100,4 +169,6 @@ class Record(NamedTuple):
     w_sum: jnp.ndarray              # scalar, aggregate window
     thru: jnp.ndarray               # [Q+1] egress rate
     lam: jnp.ndarray                # scalar, aggregate arrival rate at queue 0
-    lam_f: jnp.ndarray              # [F] per-flow send rates
+    lam_f: jnp.ndarray              # [F] per-flow (padded) / per-slot (slot
+                                    #     engine) send rates
+    n_active: jnp.ndarray           # scalar int32, flows actively sending

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .network import LeafSpine
-from .types import Flows, KB, MB
+from .network import LeafSpine, make_schedule
+from .types import Flows, FlowSchedule, KB, MB
 
 # (size_bytes, cdf) anchor points
 WEBSEARCH_CDF = np.array([
@@ -134,6 +134,59 @@ def synthetic_incast_workload(fabric: LeafSpine, request_rate: float,
     return fabric.make_flows(np.concatenate(src_l), np.concatenate(dst_l),
                              np.concatenate(sz_l), np.concatenate(st_l),
                              sim_dt, rng=rng)
+
+
+def poisson_websearch_schedule(fabric: LeafSpine, load: float,
+                               duration: float, sim_dt: float, seed: int = 0,
+                               cross_rack_only: bool = True) -> FlowSchedule:
+    """``poisson_websearch`` emitted directly as a time-sorted
+    ``FlowSchedule`` for the flow-slot streaming engine. Poisson arrivals
+    are generated in time order, so the sort is a near-no-op; the explicit
+    ``make_schedule`` keeps the ordering contract in one place."""
+    return make_schedule(poisson_websearch(fabric, load, duration, sim_dt,
+                                           seed=seed,
+                                           cross_rack_only=cross_rack_only))
+
+
+def peak_concurrency(starts: np.ndarray, ends: np.ndarray) -> int:
+    """Maximum number of simultaneously live intervals [start, end)."""
+    starts = np.asarray(starts, np.float64)
+    ends = np.asarray(ends, np.float64)
+    ok = np.isfinite(starts)
+    starts, ends = starts[ok], ends[ok]
+    ends = np.where(np.isfinite(ends), ends, np.inf)
+    ts = np.concatenate([starts, ends])
+    deltas = np.concatenate([np.ones_like(starts), -np.ones_like(ends)])
+    # process departures (-1) before arrivals (+1) at identical times —
+    # intervals are half-open, and a retired slot is reusable in the same
+    # tick a new flow is admitted
+    order = np.lexsort((deltas, ts))
+    return int(np.cumsum(deltas[order]).max()) if len(ts) else 0
+
+
+def suggest_slots(sched: FlowSchedule, sim_dt: float,
+                  rate_fraction: float = 0.1, rtt_slack: float = 16.0,
+                  round_to: int = 64) -> int:
+    """A-priori slot-pool size for a schedule (DESIGN.md section 12).
+
+    Upper-bounds each flow's slot residency as transfer time at a
+    pessimistic ``rate_fraction`` of its NIC rate plus ``rtt_slack`` RTTs
+    and the post-completion drain hold, sweeps the implied intervals for
+    their peak overlap, and rounds up to a multiple of ``round_to``
+    (clamped to the total flow count — more slots than flows is never
+    useful). Undersized pools stay correct — flows queue for admission —
+    so this only needs to be a decent guess, not a bound.
+    """
+    n = int(sched.start.shape[0])
+    starts = np.asarray(sched.start, np.float64)
+    sizes = np.asarray(sched.size, np.float64)
+    nic = np.asarray(sched.nic_rate, np.float64)
+    tau = np.asarray(sched.tau, np.float64)
+    hold = np.asarray(sched.tf_steps).max() * sim_dt if n else 0.0
+    dur = sizes / np.maximum(rate_fraction * nic, 1.0) + rtt_slack * tau
+    peak = max(peak_concurrency(starts, starts + dur + hold), 1)
+    rounded = ((peak + round_to - 1) // round_to) * round_to
+    return max(min(rounded, n), 1)
 
 
 # --------------------------------------------------------------------------

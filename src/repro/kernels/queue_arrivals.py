@@ -20,6 +20,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def update_incidence(incidence: jnp.ndarray, path: jnp.ndarray,
+                     changed: jnp.ndarray, num_queues: int) -> jnp.ndarray:
+    """Dynamic-update of a slot-sized incidence on admit/retire.
+
+    ``incidence`` is the [H, S, Q+1] one-hot path incidence carried by the
+    flow-slot streaming engine's scan state; ``path`` [S, H] is the pool's
+    current hop table and ``changed`` [S] marks slots whose occupancy
+    changed this tick (admissions — retired slots keep their stale path,
+    which is exact because a retiring flow's delayed rates are zero by
+    construction, see fluid.slot_step). Unchanged columns pass through
+    untouched, so the update is a masked select rather than a rebuild of
+    the scatter graph; the fresh one-hot columns cost O(H*S*Q), the same
+    order as the incidence matmul itself consumes every tick.
+
+    Invalid (sentinel) hops become all-zero rows, exactly as in
+    ``fluid.build_incidence``.
+    """
+    valid = path < num_queues
+    oh = jax.nn.one_hot(path, num_queues + 1, dtype=jnp.float32)
+    cols = jnp.swapaxes(oh * valid[..., None].astype(jnp.float32), 0, 1)
+    return jnp.where(changed[None, :, None], cols, incidence)
+
+
 def _kernel(lam_ref, onehot_ref, q_ref, out_ref, caps_ref, arr_ref,
             qnew_ref, *, dt, hops):
     acc = jnp.zeros((1, arr_ref.shape[-1]), jnp.float32)

@@ -1,20 +1,37 @@
-"""Backend dispatch + batched scenario engine.
+"""Backend dispatch + batched scenario engine — registry-driven.
 
-The fused (Pallas) backend must reproduce the reference trajectories
-(w, q, fct) for full simulations, and ``simulate_batch`` must match the
-serial per-point loop exactly — backends and batching change where the
-simulation runs, never what it computes.
+Differential coverage is parameterized over the LIVE registry
+(``laws.LAWS`` / ``law_backends``), not a hand-picked subset: every
+registered law is asserted serial==batched, and every registered
+alternative backend (today the fused Pallas kernels) is asserted
+fused==reference over full trajectories. A law or backend registered
+tomorrow is covered with zero test edits — backends and batching change
+where the simulation runs, never what it computes.
 """
 import numpy as np
 import pytest
 
-from repro.core import (GBPS, US, LeafSpine, SimConfig, default_law_config,
-                        get_law, incast_flows, law_backends,
-                        make_flows_single, simulate, simulate_batch,
-                        single_bottleneck, stack_flows, stack_law_configs)
+from repro.core import (GBPS, US, CircuitSchedule, LAWS, LeafSpine,
+                        SimConfig, default_law_config, get_law,
+                        incast_flows, law_backends, make_flows_single,
+                        simulate, simulate_batch, single_bottleneck,
+                        stack_flows, stack_law_configs)
 
 B = 100 * GBPS
 TAU = 20 * US
+
+# every (law, alternative backend) pair in the registry — reference is the
+# baseline each alternative is asserted against
+ALT_BACKENDS = [(law, be) for law in sorted(LAWS)
+                for be in law_backends(law) if be != "reference"]
+
+
+def _law_cfg(flows, expected_flows=8.0, **kw):
+    """Paper-default config that satisfies every registered law's extra
+    requirements (retcp needs a circuit schedule in cfg.sched)."""
+    kw.setdefault("sched", CircuitSchedule(day=50 * US, night=10 * US,
+                                           matchings=4).params())
+    return default_law_config(flows, expected_flows=expected_flows, **kw)
 
 
 def _scenario(n=8, steps=1500):
@@ -39,69 +56,78 @@ def test_backend_registry():
         get_law("swift", "fused")
     with pytest.raises(KeyError):
         get_law("nope")
+    # every registered law resolves through every backend it advertises
+    for law in sorted(LAWS):
+        for be in law_backends(law):
+            assert get_law(law, be).backend == be
 
 
 # -------------------------------------------------------------------------
-# fused == reference, full trajectories
+# every alternative backend == reference, full trajectories
 # -------------------------------------------------------------------------
 
-@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp"])
-def test_fused_matches_reference_single_bottleneck(law):
+@pytest.mark.parametrize("law,backend", ALT_BACKENDS)
+def test_backend_matches_reference_single_bottleneck(law, backend):
     topo, flows, cfg = _scenario()
-    lcfg = default_law_config(flows, expected_flows=8.0)
+    lcfg = _law_cfg(flows)
     st_r, rec_r = simulate(topo, flows, law, lcfg, cfg)
-    st_f, rec_f = simulate(topo, flows, law, lcfg, cfg, backend="fused")
-    np.testing.assert_allclose(st_f.w, st_r.w, rtol=1e-5)
-    np.testing.assert_allclose(st_f.fct, st_r.fct, rtol=1e-5, atol=2e-6)
+    st_b, rec_b = simulate(topo, flows, law, lcfg, cfg, backend=backend)
+    np.testing.assert_allclose(st_b.w, st_r.w, rtol=1e-5)
+    np.testing.assert_allclose(st_b.fct, st_r.fct, rtol=1e-5, atol=2e-6)
     # whole trajectories: queue trace (bytes) and per-flow send rates
-    np.testing.assert_allclose(rec_f.q, rec_r.q, rtol=1e-5, atol=1.0)
-    np.testing.assert_allclose(rec_f.lam_f, rec_r.lam_f, rtol=1e-4,
+    np.testing.assert_allclose(rec_b.q, rec_r.q, rtol=1e-5, atol=1.0)
+    np.testing.assert_allclose(rec_b.lam_f, rec_r.lam_f, rtol=1e-4,
                                atol=1.0)
 
 
-@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp"])
-def test_fused_matches_reference_multihop(law):
+@pytest.mark.parametrize("law,backend", ALT_BACKENDS)
+def test_backend_matches_reference_multihop(law, backend):
     """Leaf-spine incast: exercises the H=3 hop loop of the fused law
     kernel and the padded-hop rows of the incidence matmul."""
     fab = LeafSpine(racks=2, hosts_per_rack=4, spines=1)
     flows, bq = incast_flows(fab, fan_in=4, req_bytes=5e5, sim_dt=1e-6)
     topo = fab.topology()
     cfg = SimConfig(dt=1e-6, steps=2500, hist=512)
-    lcfg = default_law_config(flows, expected_flows=4.0)
+    lcfg = _law_cfg(flows, expected_flows=4.0)
     st_r, rec_r = simulate(topo, flows, law, lcfg, cfg)
-    st_f, rec_f = simulate(topo, flows, law, lcfg, cfg, backend="fused")
-    np.testing.assert_allclose(st_f.w, st_r.w, rtol=1e-4)
-    np.testing.assert_allclose(st_f.fct, st_r.fct, rtol=1e-4, atol=2e-6)
-    np.testing.assert_allclose(rec_f.q[:, bq], rec_r.q[:, bq], rtol=1e-4,
+    st_b, rec_b = simulate(topo, flows, law, lcfg, cfg, backend=backend)
+    np.testing.assert_allclose(st_b.w, st_r.w, rtol=1e-4)
+    np.testing.assert_allclose(st_b.fct, st_r.fct, rtol=1e-4, atol=2e-6)
+    np.testing.assert_allclose(rec_b.q[:, bq], rec_r.q[:, bq], rtol=1e-4,
                                atol=10.0)
 
 
 # -------------------------------------------------------------------------
-# simulate_batch == serial loop
+# simulate_batch == serial loop, for EVERY registered law
 # -------------------------------------------------------------------------
 
-def test_simulate_batch_matches_serial_loop():
-    """An 8-point sweep with distinct flow counts, one jitted program; every
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_simulate_batch_matches_serial_loop(law):
+    """A 3-point sweep with distinct flow counts, one jitted program; every
     point must equal its serial run (padded tail flows stay inert)."""
     topo = single_bottleneck(bandwidth=B, buffer=16e6)
-    cfg = SimConfig(dt=1e-6, steps=1200, hist=256)
-    scenarios = []
-    for s in range(8):
+    cfg = SimConfig(dt=1e-6, steps=800, hist=256)
+    scenarios, lcfgs = [], []
+    for s in range(3):
         rng = np.random.default_rng(s)
         nf = 4 + s
-        scenarios.append(make_flows_single(
-            nf, tau=TAU, nic=B, sizes=rng.uniform(2e5, 6e5, nf),
-            starts=rng.uniform(0.0, 1e-4, nf), sim_dt=1e-6))
+        fl = make_flows_single(nf, tau=TAU, nic=B,
+                               sizes=rng.uniform(2e5, 6e5, nf),
+                               starts=rng.uniform(0.0, 1e-4, nf),
+                               sim_dt=1e-6)
+        scenarios.append(fl)
+    from repro.core import pad_flows
+    nmax = max(int(f.tau.shape[0]) for f in scenarios)
+    padded = [pad_flows(f, nmax, topo.num_queues) for f in scenarios]
+    lcfgs = [_law_cfg(f, expected_flows=4.0) for f in padded]
     fb = stack_flows(scenarios, topo.num_queues)
-    stb, recb = simulate_batch(topo, fb, "powertcp", cfg=cfg,
-                               expected_flows=4.0)
-    assert stb.fct.shape[0] == 8
-    for i, fl in enumerate(scenarios):
-        n = int(fl.tau.shape[0])
-        st, rec = simulate(topo, fl, "powertcp",
-                           default_law_config(fl, expected_flows=4.0), cfg)
-        np.testing.assert_allclose(stb.fct[i][:n], st.fct, rtol=1e-6)
-        np.testing.assert_allclose(stb.w[i][:n], st.w, rtol=1e-6)
+    stb, recb = simulate_batch(topo, fb, law, stack_law_configs(lcfgs), cfg)
+    assert stb.fct.shape[0] == 3
+    for i, fl in enumerate(padded):
+        n = int(scenarios[i].tau.shape[0])
+        st, rec = simulate(topo, fl, law, lcfgs[i], cfg)
+        np.testing.assert_allclose(stb.fct[i][:n], st.fct[:n], rtol=1e-6)
+        np.testing.assert_allclose(stb.w[i][:n], st.w[:n], rtol=1e-6)
         np.testing.assert_allclose(recb.q[i], rec.q, rtol=1e-5, atol=0.1)
         # padded flows never activate
         assert not np.isfinite(np.asarray(stb.fct[i][n:])).any()

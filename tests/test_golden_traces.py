@@ -1,0 +1,51 @@
+"""Golden-trace regression tests.
+
+Short (200-step) reference trajectories per registered law, checked in at
+tests/golden/golden_laws.json. Equivalence tests (fused==reference,
+batched==serial, slot==padded) cannot catch numerical drift that moves
+both sides of the comparison; these anchors can. Tolerances are tight but
+leave headroom for cross-platform 1-ulp instruction-selection noise
+(DESIGN.md section 12).
+
+Regenerate with ``PYTHONPATH=src python tools/gen_golden.py`` ONLY when a
+numerical change is intentional, and say so in the commit.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import LAWS
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "golden_laws.json")
+
+with open(GOLDEN) as f:
+    _DATA = json.load(f)
+
+
+def test_every_registered_law_has_a_golden_trace():
+    """New laws must check in an anchor (regenerate the JSON)."""
+    assert sorted(LAWS) == sorted(_DATA)
+
+
+@pytest.mark.parametrize("law", sorted(_DATA))
+def test_golden_trace(law):
+    from tools.gen_golden import trace
+    got = trace(law)
+    want = _DATA[law]
+    np.testing.assert_allclose(got["q"], want["q"], rtol=1e-5, atol=0.5,
+                               err_msg=f"{law}: queue trace drifted")
+    np.testing.assert_allclose(got["w_final"], want["w_final"], rtol=1e-5,
+                               err_msg=f"{law}: final windows drifted")
+    np.testing.assert_allclose(got["w_sum"], want["w_sum"], rtol=1e-5,
+                               err_msg=f"{law}: w_sum trace drifted")
+    for g, w in zip(got["fct_us"], want["fct_us"]):
+        assert (g is None) == (w is None), \
+            f"{law}: flow completion set changed"
+        if g is not None:
+            assert g == pytest.approx(w, rel=1e-5), f"{law}: FCT drifted"

@@ -3,7 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — `pip install hypothesis` "
+           "(CI installs it from requirements.txt, so these run in CI)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (GBPS, US, SimConfig, default_law_config,

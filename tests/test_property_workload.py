@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) on workload generators and the
+flow-slot schedule invariants."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — `pip install hypothesis` "
+           "(CI installs it from requirements.txt, so these run in CI)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (GBPS, US, WEBSEARCH_CDF, LeafSpine, SimConfig,  # noqa: E402
+                        default_law_config, make_flows_single,
+                        make_schedule, peak_concurrency,
+                        poisson_websearch_schedule, schedule_as_flows,
+                        simulate_slots, single_bottleneck, suggest_slots,
+                        websearch_mean, websearch_sample)
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# -------------------------------------------------------------------------
+# web-search flow-size distribution
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([2000, 5000]))
+def test_websearch_sample_within_cdf_anchors(seed, n):
+    """Samples stay inside the CDF's support and hit its mean: the anchor
+    bounds are hard (inverse-CDF interpolation cannot extrapolate), the
+    mean within sampling noise of ``websearch_mean()``."""
+    s = websearch_sample(np.random.default_rng(seed), n)
+    lo, hi = WEBSEARCH_CDF[0, 0], WEBSEARCH_CDF[-1, 0]
+    assert (s >= lo).all() and (s <= hi).all()
+    # heavy tail: relative SD of the sample mean is ~3/sqrt(n)
+    assert s.mean() == pytest.approx(websearch_mean(),
+                                     rel=5 * 3.0 / np.sqrt(n))
+    # the distribution is genuinely heavy-tailed: most flows are small,
+    # most bytes are in the big flows
+    assert np.median(s) < 0.1 * s.mean()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16),
+       load=st.sampled_from([0.2, 0.4, 0.6]),
+       duration=st.sampled_from([0.1, 0.2]))
+def test_poisson_websearch_hits_requested_load(seed, load, duration):
+    """Arrival byte-rate matches load * fabric capacity (the paper's load
+    definition) within heavy-tail sampling noise."""
+    fab = LeafSpine()
+    sched = poisson_websearch_schedule(fab, load, duration, 1e-6, seed=seed)
+    cap = fab.racks * fab.spines * fab.fabric_bw
+    n = int(sched.start.shape[0])
+    byte_rate = float(np.asarray(sched.size).sum()) / duration
+    # relative SD of the byte-rate estimate ~ size_cv / sqrt(n); size_cv ~ 3
+    tol = max(5 * 3.0 / np.sqrt(max(n, 1)), 0.05)
+    assert byte_rate == pytest.approx(load * cap, rel=tol)
+
+
+# -------------------------------------------------------------------------
+# FlowSchedule + slot admission invariants
+# -------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 20))
+def test_schedule_sorted_and_order_is_permutation(seed, n):
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=20 * US, nic=100 * GBPS,
+                              sizes=rng.uniform(5e4, 5e5, n),
+                              starts=rng.uniform(0, 1e-3, n), sim_dt=1e-6)
+    sched = make_schedule(flows)
+    start = np.asarray(sched.start)
+    assert (np.diff(start) >= 0).all()
+    assert sorted(np.asarray(sched.order).tolist()) == list(range(n))
+    # sorting preserves the (start, size) pairing
+    got = sorted(zip(np.asarray(sched.start).tolist(),
+                     np.asarray(sched.size).tolist()))
+    want = sorted(zip(np.asarray(flows.start).tolist(),
+                      np.asarray(flows.size).tolist()))
+    assert got == want
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), slots=st.integers(1, 6),
+       n=st.integers(4, 12))
+def test_slot_admission_never_exceeds_pool(seed, slots, n):
+    """For any schedule and pool size: concurrently-sending flows never
+    exceed S, every flow is eventually admitted, and every finite flow
+    completes (admission control delays, never drops)."""
+    rng = np.random.default_rng(seed)
+    topo = single_bottleneck(bandwidth=100 * GBPS, buffer=16e6)
+    flows = make_flows_single(n, tau=20 * US, nic=100 * GBPS,
+                              sizes=rng.uniform(5e4, 2e5, n),
+                              starts=rng.uniform(0, 3e-4, n), sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=6000, hist=128)
+    lcfg = default_law_config(schedule_as_flows(sched),
+                              expected_flows=float(n))
+    stf, rec = simulate_slots(topo, sched, "powertcp", slots, lcfg, cfg)
+    assert int(np.asarray(rec.n_active).max()) <= slots
+    assert int(stf.cursor) == n
+    assert np.isfinite(np.asarray(stf.fct)).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 30))
+def test_suggest_slots_is_a_valid_pool_size(seed, n):
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=20 * US, nic=25 * GBPS,
+                              sizes=rng.uniform(1e4, 1e6, n),
+                              starts=rng.uniform(0, 1e-2, n), sim_dt=1e-6)
+    sched = make_schedule(flows)
+    s = suggest_slots(sched, 1e-6)
+    assert 1 <= s <= n
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 40))
+def test_peak_concurrency_matches_bruteforce(seed, n):
+    rng = np.random.default_rng(seed)
+    starts = rng.uniform(0, 1.0, n)
+    ends = starts + rng.uniform(0.01, 0.5, n)
+    got = peak_concurrency(starts, ends)
+    ts = np.unique(np.concatenate([starts, ends]))
+    brute = max(int(((starts <= t) & (t < ends)).sum()) for t in ts)
+    assert got == brute

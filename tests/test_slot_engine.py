@@ -1,0 +1,225 @@
+"""Flow-slot streaming engine (DESIGN.md section 12).
+
+The exactness anchor: with a pool of S >= total_flows slots, the slot
+engine must reproduce the padded engine's queue and FCT trajectories
+BIT-FOR-BIT on the single-bottleneck topology (per-flow windows to within
+1 ulp — XLA may select knife-edge instruction variants across the two
+compiled programs; the load-bearing arithmetic is pinned, see laws._pin).
+On the multihop leaf-spine, FCTs stay bitwise and queue traces agree to
+sub-byte absolute error. Bounded pools must never exceed their occupancy
+budget, stream every flow eventually, and batch exactly like the padded
+engine.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, CircuitSchedule, LeafSpine, SimConfig,
+                        default_law_config, incast_flows, make_flows_single,
+                        make_schedule, pad_schedule, poisson_websearch,
+                        schedule_as_flows, simulate, simulate_slots,
+                        simulate_slots_batch, single_bottleneck,
+                        stack_flow_schedules, suggest_slots)
+
+B = 100 * GBPS
+TAU = 20 * US
+
+
+def _staggered(n=12, steps=4000, seed=0):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=TAU, nic=B,
+                              sizes=rng.uniform(8e4, 4e5, n),
+                              starts=rng.uniform(0.0, 1.5e-3, n),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, sched, cfg
+
+
+# -------------------------------------------------------------------------
+# schedule container semantics
+# -------------------------------------------------------------------------
+
+def test_make_schedule_sorts_and_maps_back():
+    topo, sched, cfg = _staggered()
+    start = np.asarray(sched.start)
+    assert (np.diff(start) >= 0).all()
+    # order maps schedule entries back to the original flow indices
+    flows = schedule_as_flows(sched)
+    assert sorted(np.asarray(sched.order).tolist()) == list(range(12))
+    assert np.asarray(flows.start).shape == (12,)
+
+
+def test_pad_schedule_keeps_sort_and_inertness():
+    _, sched, _ = _staggered()
+    padded = pad_schedule(sched, 20, pad_queue=1)
+    start = np.asarray(padded.start)
+    assert start.shape == (20,)
+    assert (np.diff(start[np.isfinite(start)]) >= 0).all()
+    assert np.isinf(start[12:]).all()
+    assert (np.asarray(padded.order)[12:] == -1).all()
+    with pytest.raises(ValueError):
+        pad_schedule(sched, 6, pad_queue=1)
+
+
+# -------------------------------------------------------------------------
+# exactness anchor: S >= N reproduces the padded engine
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp", "hpcc",
+                                 "swift", "timely", "dcqcn", "reno",
+                                 "retcp"])
+@pytest.mark.parametrize("extra", [0, 5])
+def test_slot_engine_bitmatches_padded_single_bottleneck(law, extra):
+    """Queue trace, FCT vector, w_sum and per-flow rate trajectories must
+    be bit-identical for S == N and S > N (staggered arrivals, completions
+    and retirements included)."""
+    topo, sched, cfg = _staggered()
+    flows = schedule_as_flows(sched)
+    sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=4).params()
+    lcfg = default_law_config(flows, expected_flows=8.0, sched=sp)
+    st_p, rec_p = simulate(topo, flows, law, lcfg, cfg)
+    n = int(sched.start.shape[0])
+    st_s, rec_s = simulate_slots(topo, sched, law, n + extra, lcfg, cfg)
+    assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+    assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(rec_s.w_sum), np.asarray(rec_p.w_sum))
+    assert np.array_equal(np.asarray(rec_s.lam_f[:, :n]),
+                          np.asarray(rec_p.lam_f))
+    assert np.array_equal(np.asarray(rec_s.n_active),
+                          np.asarray(rec_p.n_active))
+    # windows: bit-equal up to isolated 1-ulp knife-edge ticks
+    np.testing.assert_allclose(np.asarray(st_s.w[:n]), np.asarray(st_p.w),
+                               rtol=5e-7)
+
+
+@pytest.mark.parametrize("law", ["powertcp", "theta_powertcp"])
+def test_slot_engine_matches_padded_leafspine(law):
+    """Multihop: queue traces, FCTs and windows bitwise; per-flow send
+    rates may carry isolated 1-ulp flickers (the two compiled programs can
+    round a handful of division ticks apart; DESIGN.md section 12)."""
+    fab = LeafSpine()
+    flows = poisson_websearch(fab, 0.4, 0.004, 1e-6, seed=3)
+    n = int(flows.tau.shape[0])
+    sched = make_schedule(flows)
+    topo = fab.topology()
+    cfg = SimConfig(dt=1e-6, steps=8000, hist=512, update_period=2e-6)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg)
+    st_s, rec_s = simulate_slots(topo, sched, law, n + 8, lcfg, cfg)
+    assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+    assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_s.w[:n]), np.asarray(st_p.w))
+    np.testing.assert_allclose(np.asarray(rec_s.lam_f[:, :n]),
+                               np.asarray(rec_p.lam_f), rtol=1e-5)
+
+
+@pytest.mark.parametrize("law", ["powertcp"])
+def test_slot_engine_fused_backend(law):
+    """The fused (Pallas) queue path with the dynamically-updated slot
+    incidence must match the fused padded engine."""
+    fab = LeafSpine(racks=2, hosts_per_rack=4, spines=1)
+    flows, bq = incast_flows(fab, fan_in=4, req_bytes=5e5, sim_dt=1e-6)
+    sched = make_schedule(flows)
+    n = int(sched.start.shape[0])
+    topo = fab.topology()
+    cfg = SimConfig(dt=1e-6, steps=2500, hist=512)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=4.0)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg,
+                           backend="fused")
+    st_s, rec_s = simulate_slots(topo, sched, law, n + 3, lcfg, cfg,
+                                 backend="fused")
+    np.testing.assert_allclose(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                               rtol=1e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(rec_s.q[:, bq]),
+                               np.asarray(rec_p.q[:, bq]), rtol=1e-4,
+                               atol=10.0)
+
+
+# -------------------------------------------------------------------------
+# bounded pools: streaming, occupancy, admission control
+# -------------------------------------------------------------------------
+
+def test_bounded_pool_streams_all_flows():
+    """A pool far smaller than the total flow count recycles slots and
+    still completes every flow; occupancy never exceeds S."""
+    topo, sched, cfg = _staggered(n=24, steps=12000)
+    st, rec = simulate_slots(topo, sched, "powertcp", 6,
+                             default_law_config(schedule_as_flows(sched),
+                                                expected_flows=8.0), cfg)
+    assert int(st.cursor) == 24                  # everything admitted
+    assert np.isfinite(np.asarray(st.fct)).all()  # everything finished
+    assert int(np.asarray(rec.n_active).max()) <= 6
+    # slots were genuinely reused: fresh high-water stopped at the pool
+    assert int(st.hw) == 6
+
+
+def test_bounded_pool_admission_delay_is_graceful():
+    """With S=1 flows serialize: each admission waits for the previous
+    retirement, FCTs include the queueing-for-admission delay."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(3, tau=TAU, nic=B, sizes=[1e5] * 3,
+                              starts=[0.0, 1e-5, 2e-5], sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=4000, hist=256)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=1.0)
+    st1, rec1 = simulate_slots(topo, sched, "powertcp", 1, lcfg, cfg)
+    st3, _ = simulate_slots(topo, sched, "powertcp", 3, lcfg, cfg)
+    assert np.isfinite(np.asarray(st1.fct)).all()
+    assert int(np.asarray(rec1.n_active).max()) == 1
+    # serialized flows finish strictly later than concurrently-admitted ones
+    assert np.asarray(st1.fct)[1:].min() > np.asarray(st3.fct)[1:].min()
+
+
+# -------------------------------------------------------------------------
+# batched slot engine
+# -------------------------------------------------------------------------
+
+def test_simulate_slots_batch_matches_serial():
+    """Stacked schedules with distinct flow counts through one vmapped
+    program must reproduce each serial slot run exactly."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    cfg = SimConfig(dt=1e-6, steps=2000, hist=256)
+    scheds = []
+    for s in range(3):
+        rng = np.random.default_rng(s)
+        nf = 6 + 2 * s
+        scheds.append(make_schedule(make_flows_single(
+            nf, tau=TAU, nic=B, sizes=rng.uniform(1e5, 4e5, nf),
+            starts=rng.uniform(0.0, 5e-4, nf), sim_dt=1e-6)))
+    sb = stack_flow_schedules(scheds, topo.num_queues)
+    stb, recb = simulate_slots_batch(topo, sb, "powertcp", 12, cfg=cfg,
+                                     expected_flows=4.0)
+    assert stb.fct.shape[0] == 3
+    for i, sc in enumerate(scheds):
+        n = int(sc.start.shape[0])
+        lcfg = default_law_config(schedule_as_flows(sc), expected_flows=4.0)
+        st, rec = simulate_slots(topo, sc, "powertcp", 12, lcfg, cfg)
+        np.testing.assert_allclose(np.asarray(stb.fct[i][:n]),
+                                   np.asarray(st.fct), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(recb.q[i]),
+                                   np.asarray(rec.q), rtol=1e-5, atol=0.1)
+        # padded schedule tail is never admitted
+        assert not np.isfinite(np.asarray(stb.fct[i][n:])).any()
+
+
+def test_peak_concurrency_halfopen_ties():
+    """Back-to-back intervals (end == next start) never overlap: the
+    departure is processed before the coincident arrival."""
+    from repro.core import peak_concurrency
+    assert peak_concurrency([0.0, 1.0], [1.0, 2.0]) == 1
+    assert peak_concurrency([0.0, 0.0], [1.0, 1.0]) == 2
+    assert peak_concurrency([], []) == 0
+
+
+def test_suggest_slots_bounds():
+    _, sched, _ = _staggered(n=24)
+    s = suggest_slots(sched, 1e-6)
+    assert 1 <= s <= 24
+    # a schedule of simultaneous arrivals needs a slot for everyone
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(8, tau=TAU, nic=B, sizes=[1e6] * 8,
+                              sim_dt=1e-6)
+    assert suggest_slots(make_schedule(flows), 1e-6) == 8

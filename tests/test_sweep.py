@@ -99,6 +99,37 @@ def test_rdcn_sweep_matches_serial():
             assert abs(p_b - p_s) <= 0.001 * max(p_s, 1e-6) + 1e-6
 
 
+def test_sweep_slot_path_matches_padded_path():
+    """``SweepSpec(slots=...)`` routes the grid through the flow-slot
+    streaming engine; with a pool covering every flow the FCTs must
+    reproduce the padded sweep's exactly (joined through the schedule's
+    ``order`` permutation)."""
+    from repro.core import GBPS, make_schedule, single_bottleneck
+
+    topo = single_bottleneck(bandwidth=100 * GBPS, buffer=16e6)
+    cfg = SimConfig(dt=1e-6, steps=1500, hist=256)
+    scenarios = []
+    for s in range(2):
+        rng = np.random.default_rng(s)
+        nf = 5 + s
+        scenarios.append(make_flows_single(
+            nf, tau=20e-6, nic=100 * GBPS, sizes=rng.uniform(1e5, 4e5, nf),
+            starts=rng.uniform(0, 2e-4, nf), sim_dt=1e-6))
+    kw = dict(laws=["powertcp", "swift"], flows=scenarios,
+              law_cfg_overrides=({"gamma": 0.8}, {"gamma": 0.9}),
+              expected_flows=4.0)
+    padded = run_sweep(SweepSpec(**kw), topo, cfg, record=False)
+    slotted = run_sweep(SweepSpec(**kw, slots=6), topo, cfg, record=False)
+    assert len(padded.points) == len(slotted.points) == 8
+    from repro.core import pad_flows
+    for p in padded.points:
+        fl = pad_flows(scenarios[p.flows_idx], 6, topo.num_queues)
+        order = np.asarray(make_schedule(fl).order)
+        fct_p = np.asarray(padded.state(p.index).fct)[order]
+        fct_s = np.asarray(slotted.state(p.index).fct)
+        np.testing.assert_allclose(fct_s, fct_p, rtol=1e-6)
+
+
 _SHARDED_SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax

@@ -1,0 +1,69 @@
+"""Regenerate tests/golden/golden_laws.json (golden-trace regression data).
+
+    PYTHONPATH=src python tools/gen_golden.py
+
+One short (200-step) reference trajectory per registered law on the
+single-bottleneck topology: the queue trace, final windows and FCTs.
+tests/test_golden_traces.py asserts current simulations against these with
+tight tolerances — equivalence tests (fused==reference, slot==padded)
+cannot see drift that moves BOTH sides, golden traces can. Regenerate ONLY
+when a numerical change is intentional, and say so in the commit that
+updates the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (GBPS, US, CircuitSchedule, LAWS, SimConfig,  # noqa: E402
+                        default_law_config, make_flows_single,
+                        simulate, single_bottleneck)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "golden_laws.json")
+
+# the scenario is part of the contract — keep in sync with the test
+STEPS = 200
+N_FLOWS = 4
+
+
+def scenario():
+    topo = single_bottleneck(bandwidth=25 * GBPS, buffer=6e6, dt_alpha=0.0)
+    flows = make_flows_single(
+        N_FLOWS, tau=20 * US, nic=25 * GBPS,
+        sizes=[30e3, 60e3, 120e3, float("inf")],
+        starts=[0.0, 20e-6, 40e-6, 0.0], sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=STEPS, hist=64)
+    sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=2).params()
+    lcfg = default_law_config(flows, expected_flows=float(N_FLOWS), sched=sp)
+    return topo, flows, lcfg, cfg
+
+
+def trace(law: str) -> dict:
+    topo, flows, lcfg, cfg = scenario()
+    st, rec = simulate(topo, flows, law, lcfg, cfg)
+    fct = np.asarray(st.fct, np.float64)
+    return {
+        "q": np.asarray(rec.q[:, 0], np.float64).tolist(),
+        "w_final": np.asarray(st.w, np.float64).tolist(),
+        "w_sum": np.asarray(rec.w_sum, np.float64)[::10].tolist(),
+        "fct_us": [None if not np.isfinite(x) else x * 1e6 for x in fct],
+    }
+
+
+def main():
+    data = {law: trace(law) for law in sorted(LAWS)}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"wrote {os.path.abspath(OUT)} ({len(data)} laws, "
+          f"{STEPS} steps each)")
+
+
+if __name__ == "__main__":
+    main()
