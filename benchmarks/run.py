@@ -13,7 +13,12 @@ scaling PRs (see benchmarks/README.md for the field reference).
 ``--devices N|auto`` additionally runs the sweep with the batch axis
 sharded across devices (``simulate_batch(devices=...)``, DESIGN.md
 section 11) and records the sharded points/sec; on a single-device host
-it falls back to the vmap path and reports ``devices: 1``. The
+it falls back to the vmap path and reports ``devices: 1``. The slot leg
+also runs the whole-tick megakernel backend on the identical workload
+(``fct_mega_*`` fields: wall time, speedup over the reference slot
+stream, the anchor bit-exactness gate and paper-scale consistency —
+DESIGN.md section 13). ``--profile`` prints the per-op tick cost
+breakdown per backend instead (tools/profile_tick.py). The
 dry-run/roofline sweep (benchmarks.dryrun_table) is orchestrated separately
 because each cell runs in a subprocess; its persisted results are
 summarized here when present.
@@ -198,6 +203,17 @@ def smoke_slots(duration: float = 0.03, load: float = 0.6,
     jax.block_until_ready(st_s.fct)
     slot_s = time.time() - t0
 
+    # megakernel backend on the identical workload (DESIGN.md section 13):
+    # the sequential batch driver keeps one compile for the sweep while
+    # letting the idle-tick gate branch at runtime (under vmap a cond
+    # runs both branches)
+    t0 = time.time()
+    st_m, _ = simulate_slots_batch(topo, sb, "powertcp", slots, cfg=cfg,
+                                   record=False, expected_flows=8.0,
+                                   backend="megakernel", sequential=True)
+    jax.block_until_ready(st_m.fct)
+    mega_s = time.time() - t0
+
     # consistency at equal scale: identical completion set, and short-flow
     # tail FCT within cross-program float noise (multihop trajectories are
     # ~1 ulp/step apart between the two compiled engines; DESIGN.md s12)
@@ -215,6 +231,16 @@ def smoke_slots(duration: float = 0.03, load: float = 0.6,
     pp = float(np.percentile(fct_p[short], 99.9))
     ps = float(np.percentile(fct_s[short], 99.9))
     p999_rel_err = abs(ps - pp) / max(pp, 1e-12)
+
+    # megakernel consistency at equal scale: identical completion set and
+    # short-flow tail within cross-program float noise (same boundary as
+    # the slot-vs-padded comparison above)
+    fct_m = np.concatenate(
+        [np.asarray(st_m.fct[i][:int(s.start.shape[0])])
+         for i, s in enumerate(scheds)])
+    mega_completed = bool((np.isfinite(fct_s) == np.isfinite(fct_m)).all())
+    pm = float(np.percentile(fct_m[short], 99.9))
+    mega_p999_rel_err = abs(pm - ps) / max(ps, 1e-12)
 
     # bit-exactness gate: tiny single-bottleneck scenario, S >= total flows
     B = 100 * GBPS
@@ -239,6 +265,18 @@ def smoke_slots(duration: float = 0.03, load: float = 0.6,
                            equal_nan=True)
         and np.allclose(np.asarray(slot_st.w[:12]), np.asarray(ref_st.w),
                         rtol=5e-7))
+    # megakernel anchor (DESIGN.md section 13): vs the reference slot
+    # engine the contract is stronger — queue trace, FCTs, windows AND
+    # per-slot rates bit-for-bit
+    mega_st, mega_rec = simulate_slots(btopo, bsched, "powertcp", 16, lcfg,
+                                       bcfg, backend="megakernel")
+    mega_exact = bool(
+        np.array_equal(np.asarray(mega_rec.q), np.asarray(slot_rec.q))
+        and np.array_equal(np.asarray(mega_st.fct),
+                           np.asarray(slot_st.fct), equal_nan=True)
+        and np.array_equal(np.asarray(mega_st.w), np.asarray(slot_st.w))
+        and np.array_equal(np.asarray(mega_rec.lam_f),
+                           np.asarray(slot_rec.lam_f)))
 
     points = len(seeds)
     return {
@@ -256,6 +294,13 @@ def smoke_slots(duration: float = 0.03, load: float = 0.6,
         "fct_slot_completed_match": completed_match,
         "fct_slot_p999_rel_err": round(p999_rel_err, 6),
         "fct_slot_exact_bitmatch": exact,
+        "fct_mega_s": round(mega_s, 3),
+        "fct_mega_points_per_s": round(points / mega_s, 3),
+        "fct_mega_speedup": round(slot_s / mega_s, 2),
+        "fct_mega_mode": "sequential",
+        "fct_mega_completed_match": mega_completed,
+        "fct_mega_p999_rel_err": round(mega_p999_rel_err, 6),
+        "fct_mega_exact_bitmatch": mega_exact,
     }
 
 
@@ -345,9 +390,23 @@ def main():
     ap.add_argument("--devices", default=None,
                     help="shard sweep batch axes across N devices "
                          "('auto' = all local devices; default: off)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-op tick cost breakdown per slot backend "
+                         "(tools/profile_tick.py, reduced preset)")
     a = ap.parse_args()
     devices = (None if a.devices in (None, "", "0", "1")
                else ("auto" if a.devices == "auto" else int(a.devices)))
+
+    if a.profile:
+        import subprocess
+        root = os.path.join(os.path.dirname(__file__), "..")
+        return subprocess.call(
+            [sys.executable, os.path.join(root, "tools",
+                                          "profile_tick.py"),
+             "--hosts", "64", "--steps", "4096", "--slots", "64"],
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(root, "src") + os.pathsep +
+                 os.environ.get("PYTHONPATH", "")})
 
     if a.smoke:
         data = run_smoke(devices=devices)
@@ -365,7 +424,13 @@ def main():
               and data["fct_slot_exact_bitmatch"]
               and data["fct_slot_completed_match"]
               and data["fct_slot_p999_rel_err"] < 1e-3
-              and data["fct_slot_speedup"] > 1.0)
+              and data["fct_slot_speedup"] > 1.0
+              # megakernel backend: anchor bit-exactness + paper-scale
+              # consistency are hard gates; the speedup floor is CI's
+              and data["fct_mega_exact_bitmatch"]
+              and data["fct_mega_completed_match"]
+              and data["fct_mega_p999_rel_err"] < 1e-3
+              and data["fct_mega_speedup"] > 1.0)
         return 0 if ok else 1
 
     from . import (fig3_phase, fig4_incast, fig5_fairness, fig6_fct,

@@ -10,7 +10,9 @@ from .fluid import (FluidSim, SlotSim, build_incidence, default_law_config,
                     simulate_slots, simulate_slots_batch, slot_step,
                     stack_flow_schedules, stack_flows, stack_law_configs,
                     step)
+from .fluid import audit_carry_dtypes
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
+from . import megakernel  # noqa: F401  (whole-tick fused slot engine)
 from .network import (LeafSpine, make_flows_single, make_schedule,
                       schedule_as_flows, single_bottleneck)
 from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
@@ -32,7 +34,8 @@ __all__ = [
     "LAWS", "Law", "LawConfig", "get_law", "law_backends",
     "norm_power_int", "norm_power_theta", "register_backend",
     "register_law",
-    "FluidSim", "SlotSim", "build_incidence", "default_law_config",
+    "FluidSim", "SlotSim", "audit_carry_dtypes", "build_incidence",
+    "default_law_config",
     "init_slot_state", "init_state", "pad_flows", "pad_schedule",
     "resolve_devices", "simulate", "simulate_batch", "simulate_slots",
     "simulate_slots_batch", "slot_step", "stack_flow_schedules",
@@ -46,5 +49,5 @@ __all__ = [
     "circuit_utilization", "make_retcp_law", "queuing_latency_percentile",
     "stack_schedules", "voq_topology",
     "SweepPoint", "SweepResult", "SweepSpec", "expand", "run_sweep",
-    "analysis",
+    "analysis", "megakernel",
 ]

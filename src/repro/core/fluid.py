@@ -65,7 +65,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..kernels.queue_arrivals import queue_arrivals, update_incidence
+from ..kernels.queue_arrivals import (ordered_scatter_add, queue_arrivals,
+                                      update_incidence)
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
 from .laws import Law, LawConfig, get_law, _pin
@@ -184,7 +185,12 @@ def _queue_update(topo: Topology, dt: float, backend: str, incidence,
                                     incidence, q, bw, caps, dt=dt)
     else:
         contrib = jnp.where(valid, lam_del, 0.0)
-        arr = jnp.zeros_like(q).at[path].add(contrib)
+        # bit-identical to zeros.at[path].add(contrib); small row counts
+        # unroll to straight-line code instead of the per-row while loop
+        # XLA CPU emits for a float scatter (which dominated the whole
+        # tick on small scenarios, e.g. the fig8 VOQ — see the kernel's
+        # docstring)
+        arr = ordered_scatter_add(jnp.zeros_like(q), path, contrib)
         # pinned so no program variant contracts the integration into an
         # FMA, which would break cross-engine bit-equality (laws._pin)
         q_new = jnp.clip(q + _pin((arr - bw) * dt), 0.0, caps)
@@ -355,6 +361,28 @@ def _resolve_law(law: Union[str, Law], backend: str) -> Law:
     return law if isinstance(law, Law) else get_law(law, backend)
 
 
+def audit_carry_dtypes(state) -> None:
+    """Assert every scan-carry leaf is float32/int32 (trace-time check).
+
+    A stray float64/int64 leaf would silently double the carried state in
+    HBM (and double-buffer through the whole scan); catching it at init
+    keeps long traces at their audited footprint. Boolean leaves are fine
+    (1 byte)."""
+    ok = (jnp.float32, jnp.int32, jnp.bool_)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        if leaf is None:
+            continue
+        # read the dtype without materializing (works on tracers) and
+        # without jnp.asarray (which would silently downcast the very
+        # float64 leaves the audit exists to catch)
+        dtype = getattr(leaf, "dtype", None) or jnp.asarray(leaf).dtype
+        if dtype not in ok:
+            raise TypeError(
+                f"scan carry leaf {jax.tree_util.keystr(path)} has dtype "
+                f"{dtype}; expected float32/int32 "
+                f"(HBM double-buffering audit)")
+
+
 def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
              law_cfg: Optional[LawConfig] = None,
              cfg: Optional[SimConfig] = None,
@@ -367,8 +395,12 @@ def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
     The whole scenario (topology, flows, law) is closed over and jitted as a
     unit; hist buffers live in the carried state so the scan is O(1) memory.
     ``backend="fused"`` dispatches the law update and the queue-arrival
-    scatter through the Pallas kernels (see module docstring). ``law_name``
-    may also be a prebuilt ``Law``.
+    scatter through the Pallas kernels (see module docstring);
+    ``backend="megakernel"`` resolves (every law carries a
+    kernel-composable entry) but the whole-tick fused engine is a SLOT
+    path — on this padded engine it degrades to the reference ops, same
+    program, same bits (DESIGN.md section 13). ``law_name`` may also be
+    a prebuilt ``Law``.
     """
     cfg = cfg or SimConfig()
     law = _resolve_law(law_name, backend)
@@ -464,13 +496,15 @@ def init_slot_state(sim: SlotSim) -> SlotState:
     )
 
 
-def _admit_retire(sim: SlotSim, state: SlotState, t_sec):
+def _admit_retire(sim: SlotSim, state: SlotState, t_sec, due=None):
     """The per-tick admit/retire pass (pure, jittable, O(S + log N)).
 
     Retire: slots whose occupant completed (or passed ``stop``) AND whose
     in-flight traffic has drained (``t >= free_at``) return to the pool.
     Admit: due arrivals (``start <= t``, a binary search against the
-    sorted schedule) fill free slots, fresh-never-used slots first
+    sorted schedule — or the precomputed ``due`` count when the caller
+    already holds the whole-trace table, see ``megakernel._due_table``)
+    fill free slots, fresh-never-used slots first
     (ascending), recycled slots only when fresh ones run out. While
     ``S >= total_flows`` this maps schedule entry i to slot i, which is
     what makes the padded-engine equivalence bit-for-bit — the queue
@@ -489,8 +523,9 @@ def _admit_retire(sim: SlotSim, state: SlotState, t_sec):
     slot_flow = jnp.where(freeable, N, state.slot_flow)
     occupied = slot_flow < N
 
-    due = jnp.searchsorted(sched.start, t_sec,
-                           side="right").astype(jnp.int32)
+    if due is None:
+        due = jnp.searchsorted(sched.start, t_sec,
+                               side="right").astype(jnp.int32)
     n_free = S - jnp.sum(occupied.astype(jnp.int32))
     n_admit = jnp.minimum(due - state.cursor, n_free)
     free = ~occupied
@@ -683,19 +718,34 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
     admission-delay flows that arrive while the pool is full (size with
     ``workload.suggest_slots``). ``law_cfg`` leaves with an [N] flow axis
     are gathered into slots on admission.
+
+    ``backend="megakernel"`` (DESIGN.md section 13) advances the run in
+    K-tick fused blocks (``core.megakernel``) — bit-identical
+    trajectories, measured severalfold faster at paper scale; the other
+    backends step tick-by-tick through ``_scan_scenario``. Either way
+    the scan carry is born inside the jitted program (the strong form of
+    buffer donation: no boundary-crossing buffer exists to double-buffer
+    the rings in HBM — a law init may legally alias one zeros buffer
+    across state leaves, which ``donate_argnums`` would reject) and its
+    dtypes are audited (``audit_carry_dtypes``) so a stray wide leaf
+    cannot silently double the carried footprint.
     """
     cfg = cfg or SimConfig()
     law = _resolve_law(law_name, backend)
     law_cfg = law_cfg or default_law_config(sched)
     sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend)
-    state = init_slot_state(sim)
+    if backend == "megakernel":
+        from .megakernel import simulate_slots_mega
+        return simulate_slots_mega(sim, bw_fn=bw_fn, record=record)
 
     @jax.jit
-    def run(st):
-        return _scan_scenario(sim, st, bw_fn, None, record,
+    def run():
+        state = init_slot_state(sim)
+        audit_carry_dtypes(state)
+        return _scan_scenario(sim, state, bw_fn, None, record,
                               step_fn=slot_step)
 
-    return run(state)
+    return run()
 
 
 # --------------------------------------------------------------------------
@@ -922,7 +972,8 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
                          record: bool = True,
                          backend: str = "reference",
                          expected_flows: float = 1.0,
-                         devices=None):
+                         devices=None,
+                         sequential: bool = False):
     """Batched/sharded twin of ``simulate_slots`` (the slot path of the
     sweep engine).
 
@@ -934,6 +985,14 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
     is O(B * S * hops) regardless of the stacked schedules' total flow
     counts. Returns (final ``SlotState``s, records) with a leading batch
     axis; ``fct`` rows are in each scenario's schedule order.
+
+    ``sequential=True`` runs the batch axis as a ``lax.scan`` over
+    scenarios instead of a vmap: still ONE compiled program (one compile
+    for the whole sweep), but scenarios execute one after another, so
+    data-dependent ``lax.cond`` branches keep their runtime short-circuit
+    — this is how the megakernel backend's idle-tick gate stays effective
+    across a sweep (under vmap a cond lowers to executing both branches).
+    Identical results, different schedule; ``devices`` is ignored.
     """
     cfg = cfg or SimConfig()
     law = _resolve_law(law_name, backend)
@@ -944,12 +1003,33 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
                 default_law_config(sched_i, expected_flows=expected_flows))
         bfn = bw_fn if bwp_i is None else (lambda t: bw_fn(t, bwp_i))
         sim = SlotSim(topo, sched_i, law, lcfg, cfg, S, backend)
-        return _scan_scenario(sim, init_slot_state(sim), bfn, None, record,
+        if backend == "megakernel":
+            from .megakernel import simulate_slots_mega
+            # the idle-tick gate is a lax.cond; under vmap it would
+            # lower to running both branches every tick — keep it only
+            # on the sequential path (bit-identical either way, see
+            # make_block_fn)
+            return simulate_slots_mega(sim, bw_fn=bfn, record=record,
+                                       gate=sequential)
+        # state is born inside the jitted program (nothing to donate);
+        # the audit still gates stray wide dtypes out of the carry
+        state = init_slot_state(sim)
+        audit_carry_dtypes(state)
+        return _scan_scenario(sim, state, bfn, None, record,
                               step_fn=slot_step)
 
     def axes(tree):
         return (None if tree is None else
                 jax.tree_util.tree_map(lambda _: 0, tree))
+
+    if sequential:
+        @jax.jit
+        def run_seq():
+            def body(_, xs):
+                return None, _one(*xs)
+            return jax.lax.scan(body, None,
+                                (scheds, law_cfg, bw_params))[1]
+        return run_seq()
 
     run = jax.vmap(_one, in_axes=(axes(scheds), axes(law_cfg),
                                   axes(bw_params)))

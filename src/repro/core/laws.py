@@ -404,26 +404,55 @@ class Law(NamedTuple):
     ``update(state, obs, w, rate_cap, upd_mask, cfg, t) -> (state, w, rate_cap)``
     form the uniform state/obs contract every backend must honour: same state
     pytree, same ``PathObs`` fields, same masking semantics. ``backend`` names
-    the implementation currently bound to ``update`` (``"reference"`` pure-jnp
-    or ``"fused"`` Pallas; see ``register_backend``/``get_law``).
+    the implementation currently bound to ``update`` (``"reference"`` pure-jnp,
+    ``"fused"`` Pallas, or ``"megakernel"``, the whole-tick fused slot engine;
+    see ``register_backend``/``get_law``).
+
+    ``uses_qdot``/``uses_mu``/``uses_ecn`` declare which optional ``PathObs``
+    telemetry the law actually reads. The reference engines always deliver
+    everything; the megakernel backend uses the flags to skip building
+    telemetry a law ignores (the skipped fields arrive as zeros, so a law
+    that honours its declaration computes identically — and bit-equality
+    with the reference backend is asserted registry-wide in
+    tests/test_megakernel.py). Keep a flag True when in doubt.
+
+    ``masked_updates`` declares that the law honours the ``upd_mask``
+    contract strictly — outside the mask its state, window and rate cap
+    pass through unchanged (every law above; per-tick clips that are
+    identities on in-range values, like DCQCN's rate clamp, qualify). The
+    megakernel's quiescent-pool fast tick relies on this; a law with a
+    documented every-step deviation (reTCP's circuit-state multiplier)
+    must set it False.
     """
     name: str
     init: Callable
     update: Callable
     rate_based: bool = False
     backend: str = "reference"
+    uses_qdot: bool = True          # reads PathObs.qdot (queue gradient)
+    uses_mu: bool = True            # reads PathObs.mu (egress txRate)
+    uses_ecn: bool = True           # reads PathObs.ecn_frac (marking)
+    masked_updates: bool = True     # strict upd_mask passthrough contract
 
 
 LAWS = {
-    "powertcp": Law("powertcp", powertcp_init, powertcp_update),
+    "powertcp": Law("powertcp", powertcp_init, powertcp_update,
+                    uses_ecn=False),
     "theta_powertcp": Law("theta_powertcp", theta_powertcp_init,
-                          theta_powertcp_update),
-    "hpcc": Law("hpcc", hpcc_init, hpcc_update),
-    "swift": Law("swift", swift_init, swift_update),
-    "gradient_mimd": Law("gradient_mimd", gradient_init, gradient_update),
-    "timely": Law("timely", timely_init, timely_update, rate_based=True),
-    "dcqcn": Law("dcqcn", dcqcn_init, dcqcn_update, rate_based=True),
-    "reno": Law("reno", reno_init, reno_update),
+                          theta_powertcp_update, uses_qdot=False,
+                          uses_mu=False, uses_ecn=False),
+    "hpcc": Law("hpcc", hpcc_init, hpcc_update, uses_qdot=False,
+                uses_ecn=False),
+    "swift": Law("swift", swift_init, swift_update, uses_qdot=False,
+                 uses_mu=False, uses_ecn=False),
+    "gradient_mimd": Law("gradient_mimd", gradient_init, gradient_update,
+                         uses_qdot=False, uses_mu=False, uses_ecn=False),
+    "timely": Law("timely", timely_init, timely_update, rate_based=True,
+                  uses_qdot=False, uses_mu=False, uses_ecn=False),
+    "dcqcn": Law("dcqcn", dcqcn_init, dcqcn_update, rate_based=True,
+                 uses_qdot=False, uses_mu=False),
+    "reno": Law("reno", reno_init, reno_update, uses_qdot=False,
+                uses_mu=False),
 }
 
 
@@ -435,6 +464,18 @@ LAWS = {
 # callable}; alternative backends (e.g. the fused Pallas kernels registered
 # on import of ``core.backends`` — kept separate so laws.py stays
 # kernel-free) are pure drop-in replacements for ``Law.update``.
+#
+# Every law also carries a ``"megakernel"`` backend entry: its
+# KERNEL-COMPOSABLE per-tick update, the function the whole-tick fused slot
+# engine (core/megakernel.py, DESIGN.md section 13) inlines into its K-tick
+# block. By default this is the reference update itself — reference updates
+# are pure per-flow jnp and therefore compose into the megernel's traced
+# block unchanged, which is how every registered law (including ones
+# registered tomorrow) runs on the fused path with zero extra code. A law
+# may override its composable form via ``register_backend(name,
+# "megakernel", fn)``; such an override must stay free of nested
+# ``pallas_call``s (it runs INSIDE the megakernel's traced block, so e.g.
+# the "fused" Pallas law kernels are not composable).
 #
 # The contract, which every registered implementation must honour:
 #
@@ -460,19 +501,22 @@ LAWS = {
 # uses; nothing else should reach into ``LAW_BACKENDS`` directly.
 # --------------------------------------------------------------------------
 
-LAW_BACKENDS: dict = {name: {"reference": law.update}
+LAW_BACKENDS: dict = {name: {"reference": law.update,
+                             "megakernel": law.update}
                       for name, law in LAWS.items()}
 
 
 def register_law(law: Law) -> None:
-    """Add a new law to the registry (its ``update`` becomes the
-    ``"reference"`` backend). The law must obey the contract above; its
-    name becomes resolvable through ``get_law`` and listable backends.
+    """Add a new law to the registry (its ``update`` becomes both the
+    ``"reference"`` backend and the kernel-composable ``"megakernel"``
+    entry). The law must obey the contract above; its name becomes
+    resolvable through ``get_law`` and listable backends.
     Re-registering a name replaces the law AND resets its backends table —
     alternative backends of the old law would otherwise stay resolvable
     and silently pair the new law with the old implementation."""
     LAWS[law.name] = law
-    LAW_BACKENDS[law.name] = {"reference": law.update}
+    LAW_BACKENDS[law.name] = {"reference": law.update,
+                              "megakernel": law.update}
 
 
 def register_backend(law_name: str, backend: str, update: Callable) -> None:

@@ -152,7 +152,11 @@ def retcp_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     return ReTCPState(rs, wb), w_out, rate_cap
 
 
-register_law(Law("retcp", retcp_init, retcp_update))
+# masked_updates=False: the circuit-state multiplier is applied to the
+# output window every step (see the docstring above), so reTCP is
+# excluded from the megakernel's quiescent-pool fast tick
+register_law(Law("retcp", retcp_init, retcp_update, uses_qdot=False,
+                 uses_mu=False, masked_updates=False))
 
 
 def make_retcp_law(sched: CircuitSchedule, prebuffer: float) -> Law:

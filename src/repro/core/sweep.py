@@ -8,7 +8,10 @@ A ``SweepSpec`` names a grid over
   * ``law_cfg_overrides`` — dicts of ``LawConfig`` field overrides
                     (hyperparameter axes: gamma, prebuffer, ...),
   * ``schedules`` — optional time-varying bandwidth schedules
-                    (``rdcn.CircuitSchedule``).
+                    (``rdcn.CircuitSchedule``),
+  * ``backends``  — optional law-backend axis (reference / fused /
+                    megakernel; structural like the law axis — one
+                    compiled program per (law, backend) pair).
 
 ``run_sweep`` expands the grid, groups points by law, and runs each group
 as ONE jitted program through ``fluid.simulate_batch``: scenarios are
@@ -40,10 +43,13 @@ from .types import Flows, SimConfig, Topology
 class SweepPoint(NamedTuple):
     """One expanded grid point.
 
-    ``index`` is the global position (law-major, then flows x overrides x
-    schedules row-major); ``row`` is the position inside the per-law batch
-    (the index along the batch axis of ``SweepResult.states[law_idx]``).
-    ``sched_idx`` is -1 when the spec has no schedule axis.
+    ``index`` is the global position (law-major, then backend-major, then
+    flows x overrides x schedules row-major); ``row`` is the position
+    inside the per-(law, backend) batch (the index along the batch axis
+    of ``SweepResult.states[group]``). ``sched_idx`` is -1 when the spec
+    has no schedule axis; ``backend``/``backend_idx`` name the point's
+    law backend (the backend axis defaults to the spec's single
+    ``backend``).
     """
     index: int
     row: int
@@ -52,6 +58,8 @@ class SweepPoint(NamedTuple):
     flows_idx: int
     override_idx: int
     sched_idx: int
+    backend: str = "reference"
+    backend_idx: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +83,7 @@ class SweepSpec:
     expected_flows: float = 1.0
     backend: str = "reference"
     slots: Optional[int] = None
+    backends: Optional[Sequence[str]] = None
 
     def __post_init__(self):
         if not self.laws or not self.flows or not self.law_cfg_overrides:
@@ -84,6 +93,21 @@ class SweepSpec:
             raise ValueError("schedules must be None or non-empty")
         if self.slots is not None and self.slots < 1:
             raise ValueError("slots must be None or >= 1")
+        if self.backends is not None and not self.backends:
+            raise ValueError("backends must be None or non-empty")
+
+    @property
+    def backend_axis(self) -> Sequence[str]:
+        """The backend axis: ``backends`` when given, else the single
+        ``backend``. Like the law axis it is STRUCTURAL — each (law,
+        backend) pair compiles its own program (a backend changes the
+        implementation, not the arithmetic), so the axis multiplies the
+        compiled-program count, not the batch width. The megakernel
+        backend rides this axis (``backends=("reference",
+        "megakernel")`` runs every point through both engines in one
+        spec — the differential harness of tests/test_megakernel.py)."""
+        return tuple(self.backends) if self.backends is not None \
+            else (self.backend,)
 
 
 def _law_name(law: Union[str, Law]) -> str:
@@ -91,18 +115,21 @@ def _law_name(law: Union[str, Law]) -> str:
 
 
 def expand(spec: SweepSpec) -> List[SweepPoint]:
-    """Expanded grid, law-major (one contiguous run of rows per law)."""
+    """Expanded grid, law-major then backend-major (one contiguous run of
+    rows per compiled (law, backend) program)."""
     pts: List[SweepPoint] = []
     scheds = (range(len(spec.schedules)) if spec.schedules is not None
               else (-1,))
     for li, law in enumerate(spec.laws):
-        row = 0
-        for fi in range(len(spec.flows)):
-            for oi in range(len(spec.law_cfg_overrides)):
-                for si in scheds:
-                    pts.append(SweepPoint(len(pts), row, li, _law_name(law),
-                                          fi, oi, si))
-                    row += 1
+        for bi, be in enumerate(spec.backend_axis):
+            row = 0
+            for fi in range(len(spec.flows)):
+                for oi in range(len(spec.law_cfg_overrides)):
+                    for si in scheds:
+                        pts.append(SweepPoint(len(pts), row, li,
+                                              _law_name(law), fi, oi, si,
+                                              be, bi))
+                        row += 1
     return pts
 
 
@@ -113,32 +140,40 @@ def tree_index(tree, i):
 
 
 class SweepResult(NamedTuple):
-    """Per-law batched results plus the point list to index them.
+    """Per-program batched results plus the point list to index them.
 
-    ``states[law_idx]``/``records[law_idx]`` carry the per-law batch axis;
-    ``state(i)``/``record(i)`` slice out global point ``i``. Padded tail
-    flows of a point (beyond its scenario's real flow count) stay inert
+    ``states``/``records`` are keyed by compiled-program group —
+    ``law_idx`` when the spec has no backend axis (the historical
+    layout), ``(law_idx, backend_idx)`` otherwise — and carry the
+    per-group batch axis; ``state(i)``/``record(i)`` slice out global
+    point ``i`` without the caller knowing the keying. Padded tail flows
+    of a point (beyond its scenario's real flow count) stay inert
     (``fct``/``size`` infinite) — see ``fluid.pad_flows``.
     """
     points: Tuple[SweepPoint, ...]
-    states: Dict[int, object]
-    records: Dict[int, object]
+    states: Dict[object, object]
+    records: Dict[object, object]
+
+    def _key(self, p: SweepPoint):
+        return (p.law_idx if p.law_idx in self.states
+                else (p.law_idx, p.backend_idx))
 
     def state(self, i: int):
         p = self.points[i]
-        return tree_index(self.states[p.law_idx], p.row)
+        return tree_index(self.states[self._key(p)], p.row)
 
     def record(self, i: int):
         p = self.points[i]
-        return tree_index(self.records[p.law_idx], p.row)
+        return tree_index(self.records[self._key(p)], p.row)
 
 
 def run_sweep(spec: SweepSpec, topo: Topology,
               cfg: Optional[SimConfig] = None, record: bool = True,
               devices=None) -> SweepResult:
     """Expand ``spec`` and run it: one compiled, batched (and, with
-    ``devices``, sharded) program per law covering that law's whole slab of
-    the grid. ``devices`` is forwarded to ``simulate_batch``."""
+    ``devices``, sharded) program per (law, backend) pair covering that
+    pair's whole slab of the grid. ``devices`` is forwarded to
+    ``simulate_batch``."""
     points = expand(spec)
     nmax = max(int(f.tau.shape[0]) for f in spec.flows)
     padded = [pad_flows(f, nmax, topo.num_queues) for f in spec.flows]
@@ -147,35 +182,41 @@ def run_sweep(spec: SweepSpec, topo: Topology,
     scheds = ([make_schedule(f) for f in padded]
               if spec.slots is not None else None)
 
-    states: Dict[int, object] = {}
-    records: Dict[int, object] = {}
+    states: Dict[object, object] = {}
+    records: Dict[object, object] = {}
     for li, law in enumerate(spec.laws):
-        rows = [p for p in points if p.law_idx == li]
-        lcfgs = []
-        for p in rows:
-            kw = dict(spec.law_cfg_overrides[p.override_idx])
+        for bi, be in enumerate(spec.backend_axis):
+            # historical single-backend specs keep their law_idx keys
+            key = li if spec.backends is None else (li, bi)
+            rows = [p for p in points
+                    if p.law_idx == li and p.backend_idx == bi]
+            lcfgs = []
+            for p in rows:
+                kw = dict(spec.law_cfg_overrides[p.override_idx])
+                if spec.schedules is not None:
+                    kw.setdefault("sched",
+                                  spec.schedules[p.sched_idx].params())
+                src = (scheds if scheds is not None
+                       else padded)[p.flows_idx]
+                lcfgs.append(default_law_config(
+                    src, expected_flows=spec.expected_flows, **kw))
+            bw_fn = bw_params = None
             if spec.schedules is not None:
-                kw.setdefault("sched", spec.schedules[p.sched_idx].params())
-            src = (scheds if scheds is not None else padded)[p.flows_idx]
-            lcfgs.append(default_law_config(
-                src, expected_flows=spec.expected_flows, **kw))
-        bw_fn = bw_params = None
-        if spec.schedules is not None:
-            bw_fn = circuit_bw_at
-            bw_params = stack_schedules(
-                [spec.schedules[p.sched_idx] for p in rows])
-        if spec.slots is not None:
-            sb = stack_flow_schedules([scheds[p.flows_idx] for p in rows],
-                                      topo.num_queues)
-            states[li], records[li] = simulate_slots_batch(
-                topo, sb, law, spec.slots, stack_law_configs(lcfgs), cfg,
-                bw_fn=bw_fn, bw_params=bw_params, record=record,
-                backend=spec.backend, devices=devices)
-        else:
-            fb = stack_flows([padded[p.flows_idx] for p in rows],
-                             topo.num_queues)
-            states[li], records[li] = simulate_batch(
-                topo, fb, law, stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
-                bw_params=bw_params, record=record, backend=spec.backend,
-                devices=devices)
+                bw_fn = circuit_bw_at
+                bw_params = stack_schedules(
+                    [spec.schedules[p.sched_idx] for p in rows])
+            if spec.slots is not None:
+                sb = stack_flow_schedules(
+                    [scheds[p.flows_idx] for p in rows], topo.num_queues)
+                states[key], records[key] = simulate_slots_batch(
+                    topo, sb, law, spec.slots, stack_law_configs(lcfgs),
+                    cfg, bw_fn=bw_fn, bw_params=bw_params, record=record,
+                    backend=be, devices=devices)
+            else:
+                fb = stack_flows([padded[p.flows_idx] for p in rows],
+                                 topo.num_queues)
+                states[key], records[key] = simulate_batch(
+                    topo, fb, law, stack_law_configs(lcfgs), cfg,
+                    bw_fn=bw_fn, bw_params=bw_params, record=record,
+                    backend=be, devices=devices)
     return SweepResult(tuple(points), states, records)

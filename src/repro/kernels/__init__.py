@@ -6,17 +6,28 @@ tests/test_kernels.py; ops.py is the jit'd TPU/CPU dispatch):
   rmsnorm          fused norm
   powertcp_step    Algorithm 1 fused over a flow tile (the paper's hot path)
   theta_powertcp_step  Algorithm 2 fused (RTT + RTT-gradient only)
-  queue_arrivals   scatter-free fluid-queue update (MXU incidence matmul)
+  queue_arrivals   fluid-queue update: dense MXU incidence matmul plus the
+                   sparse CSR forms (ordered_scatter_add /
+                   build_csr_gather / csr_gather_arrivals — bit-identical
+                   to the reference scatter, DESIGN.md section 13)
+  fused_tick       whole-tick megakernel harness: one pallas_call advances
+                   K slot-engine ticks with state resident in VMEM
 
 The simulator selects these via the law-backend registry
-(``core.backends`` registers them as the ``"fused"`` backend; see
-DESIGN.md section 10).
+(``core.backends`` registers the ``"fused"`` kernels; ``core.megakernel``
+drives ``fused_tick`` as the ``"megakernel"`` backend; see DESIGN.md
+sections 10 and 13).
 """
 from . import ops, ref
 from .flash_attention import flash_attention
+from .fused_tick import fused_tick_block
 from .powertcp_step import powertcp_step, theta_powertcp_step
-from .queue_arrivals import queue_arrivals
+from .queue_arrivals import (build_csr_gather, csr_gather_arrivals,
+                             ordered_scatter_add, queue_arrivals,
+                             queue_arrivals_sparse)
 from .rmsnorm import rmsnorm
 
-__all__ = ["ops", "ref", "flash_attention", "powertcp_step",
-           "theta_powertcp_step", "queue_arrivals", "rmsnorm"]
+__all__ = ["ops", "ref", "flash_attention", "fused_tick_block",
+           "powertcp_step", "theta_powertcp_step", "build_csr_gather",
+           "csr_gather_arrivals", "ordered_scatter_add", "queue_arrivals",
+           "queue_arrivals_sparse", "rmsnorm"]

@@ -1,0 +1,149 @@
+"""Whole-tick fused megakernel harness (DESIGN.md section 13).
+
+One ``pallas_call`` advances K simulator ticks of the flow-slot streaming
+engine: the slot pool's control state, the per-hop queue vector, the EWMA
+law state and the four delayed-feedback ring buffers stay resident in
+VMEM across an inner ``fori_loop`` over ticks, and only the chunked
+recording rows and the final state leave the kernel. This collapses the
+per-tick HBM round trips of the op-by-op lowering (law update -> queue
+scatter -> ring write each materializing carried state) into one
+resident-state loop — the HPCC/PowerTCP per-ACK INT pipeline is exactly a
+short-vector, state-carrying loop, which is what VMEM residency is for.
+
+The tick semantics live in ``core/megakernel.py`` as a pure function
+``block_fn(carry, due_block) -> (carry', records)``; this module only
+provides the kernel lowering. Both lowerings of the megakernel backend
+run the SAME traced arithmetic:
+
+  * ``fused_tick_block`` (here): the Pallas kernel — carry leaves become
+    aliased VMEM refs, the block function runs inside the kernel, and
+    results are stored back in place. Used on TPU (and by tests in
+    interpret mode on CPU).
+  * the XLA block lowering (``core/megakernel.py``): the same
+    ``block_fn`` scanned directly — used where no TPU is present, where
+    it already removes the per-tick scatter/copy overhead that dominates
+    the op-by-op engine.
+
+TPU memory plan (for the compiled path):
+
+  * carried state (pool vectors [S], queue vector [Q+1], law pytree,
+    ring buffers [D, S] / [D, Q+1], FCT output [N]) — VMEM, aliased
+    input->output so the scan over blocks ping-pongs one buffer set.
+    At the paper scale (S=128, Q=288, D=512, N~5000) this is ~3 MB,
+    well inside a 16 MB VMEM budget; the budget caps D*S + D*Q, not the
+    trace length.
+  * scalars (tick counter, admission cursor, high-water mark) — kept as
+    (1,)-shaped VMEM lanes here; a tuned TPU variant would place them in
+    SMEM via ``pl.BlockSpec(memory_space=pltpu.SMEM)``.
+  * the due-arrival table slice [K] — precomputed outside (binary search
+    against the sorted schedule is hoisted out of the hot loop), read
+    per tick.
+  * recording rows [K/record_every, ...] — plain (non-aliased) outputs,
+    the only per-block HBM traffic besides the final state.
+  * the queue-arrival incidence is kept SPARSE (the [S, H] hop list,
+    ``kernels.queue_arrivals.queue_arrivals_sparse``): per-tick cost is
+    O(nnz), not O(S * Q) as in the dense one-hot matmul, and the
+    slot-major accumulation order keeps the megakernel bit-identical to
+    the reference engine.
+
+Like the other kernels in this package, the Pallas path runs in
+interpreter mode off-TPU; correctness of the kernel lowering (bit-match
+against the reference engine for every registered law) is asserted in
+tests/test_megakernel.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+
+# Default number of ticks fused into one kernel invocation. Any K works
+# (``core.megakernel.simulate_slots_mega`` clamps it to the trace length,
+# aligns it to record_every so each block emits whole record rows, and
+# runs a remainder block for the tail); larger K amortizes kernel-launch
+# and HBM round-trips against VMEM residency time.
+DEFAULT_BLOCK = 64
+
+
+def fused_tick_block(block_fn: Callable, carry, due_block: jnp.ndarray, *,
+                     interpret=None):
+    """Run one K-tick megakernel block as a single ``pallas_call``.
+
+    ``block_fn(carry, due_block) -> (carry', records_or_None)`` is the
+    pure tick-block function from ``core/megakernel.py``; ``carry`` is
+    its state pytree (pool state + pending-FCT buffer + ring buffers).
+    Every carry leaf becomes a VMEM ref aliased input->output, so the
+    whole block executes with state resident in VMEM and writes results
+    in place; records (when present) are fresh outputs.
+
+    Returns ``(carry', records_or_None)`` exactly like ``block_fn`` —
+    the two megakernel lowerings are drop-in replacements for each
+    other (and bit-identical: they trace the same function).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # hoist everything block_fn closes over (schedule arrays, topology
+    # constants, law hyperparameters) into explicit kernel inputs —
+    # Pallas kernels may not capture array constants. closure_convert
+    # only hoists differentiable tracers, so trace to a jaxpr and feed
+    # its consts through the kernel argument list instead.
+    closed, out_shape = jax.make_jaxpr(block_fn, return_shape=True)(
+        carry, due_block)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+    consts = [jnp.asarray(c) for c in closed.consts]
+
+    def block_conv(c, d, *cvals):
+        flat_in = jax.tree_util.tree_leaves((c, d))
+        out_flat = jax.core.eval_jaxpr(closed.jaxpr, cvals, *flat_in)
+        return jax.tree_util.tree_unflatten(out_tree, out_flat)
+
+    leaves, treedef = jax.tree_util.tree_flatten(carry)
+    # ()-shaped leaves (tick counter, cursors) ride as (1,) VMEM lanes;
+    # see the module docstring for the SMEM note.
+    def shape1(xs):
+        return [x.reshape((1,)) if x.ndim == 0 else x for x in xs]
+
+    shaped = shape1(leaves)
+    n = len(shaped)
+    cshaped = shape1(consts)
+
+    rec_aval = out_shape[1]
+    rec_leaves, rec_treedef = jax.tree_util.tree_flatten(rec_aval)
+
+    def kernel(due_ref, *refs):
+        ins = refs[:n]
+        cins = refs[n:n + len(consts)]
+        outs = refs[n + len(consts):]
+        vals = [r[...].reshape(l.shape) for r, l in zip(ins, leaves)]
+        cvals = [r[...].reshape(jnp.shape(c))
+                 for r, c in zip(cins, consts)]
+        c2, recs = block_conv(
+            jax.tree_util.tree_unflatten(treedef, vals), due_ref[...],
+            *cvals)
+        out_vals = jax.tree_util.tree_leaves(c2)
+        for r, v in zip(outs[:n], out_vals):
+            r[...] = v.reshape(r.shape)
+        for r, v in zip(outs[n:], jax.tree_util.tree_leaves(recs)):
+            r[...] = v
+
+    out_shape = ([jax.ShapeDtypeStruct(x.shape, x.dtype) for x in shaped] +
+                 [jax.ShapeDtypeStruct(x.shape, x.dtype)
+                  for x in rec_leaves])
+    res = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        # alias carry leaf i (input i+1; input 0 is the due table) onto
+        # output i: state updates in place, block over block
+        input_output_aliases={i + 1: i for i in range(n)},
+        interpret=interpret,
+    )(due_block, *shaped, *cshaped)
+
+    carry_out = jax.tree_util.tree_unflatten(
+        treedef, [v.reshape(l.shape) for v, l in zip(res[:n], leaves)])
+    recs_out = (None if not rec_leaves else
+                jax.tree_util.tree_unflatten(rec_treedef, list(res[n:])))
+    return carry_out, recs_out

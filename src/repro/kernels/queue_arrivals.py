@@ -1,14 +1,27 @@
-"""Fluid-queue update kernel: scatter-free arrivals via MXU matmul.
+"""Fluid-queue update kernels: dense (MXU matmul) and sparse (CSR) forms.
 
 The simulator's inner loop scatters delayed per-hop flow rates into queue
-arrival sums (``zeros.at[path].add(lam)``). Scatters serialize badly on
-TPU; the TPU-native adaptation (DESIGN.md section 2) is a dense incidence
-form: per hop h, ``arr += lam_del[h] @ onehot[h]`` — an [1,F] x [F,Q]
-matmul on the MXU — followed by the fused elementwise queue integration
-``q' = clip(q + (arr - out) dt, 0, caps)``.
+arrival sums (``zeros.at[path].add(lam)``). Two accelerated forms exist:
 
-Grid tiles the queue axis; all H hops accumulate within one grid step, so
-arrivals and the queue update leave VMEM exactly once.
+Dense (``queue_arrivals``, the ``"fused"`` backend): scatters serialize
+badly on TPU; the TPU-native adaptation (DESIGN.md section 2) is a dense
+incidence form: per hop h, ``arr += lam_del[h] @ onehot[h]`` — an
+[1,F] x [F,Q] matmul on the MXU — followed by the fused elementwise queue
+integration ``q' = clip(q + (arr - out) dt, 0, caps)``. Grid tiles the
+queue axis; all H hops accumulate within one grid step, so arrivals and
+the queue update leave VMEM exactly once. The matmul REASSOCIATES each
+queue's sum, so the dense form is numerically close to (not bitwise equal
+with) the reference scatter.
+
+Sparse (``queue_arrivals_sparse``, the ``"megakernel"`` backend,
+DESIGN.md section 13): the incidence of a slot pool is tiny
+(nnz <= S*hops, vs the S*Q dense form) and changes only on admission, so
+the megakernel keeps the CSR view — the flat per-slot hop list
+``path.reshape(-1)`` with values ``lam_del.reshape(-1)`` — and
+accumulates with a segment-sum in slot-major order. Per-tick cost is
+O(nnz), and the accumulation order is IDENTICAL to the reference
+engine's masked scatter-add, which is what lets the megakernel backend
+bit-match the reference backend (the dense matmul cannot).
 """
 from __future__ import annotations
 
@@ -18,6 +31,141 @@ import jax
 import jax.numpy as jnp
 
 from jax.experimental import pallas as pl
+
+
+def _pin(x):
+    """Identity optimization barrier (see ``core.laws._pin``; duplicated
+    here so kernels stay importable without the core package)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def ordered_scatter_add(zero: jnp.ndarray, idx: jnp.ndarray,
+                        vals: jnp.ndarray, unroll_max: int = 128):
+    """``zero.at[idx].add(vals)`` with a bit-identical unrolled lowering
+    for small row counts.
+
+    XLA CPU lowers a float scatter-add to a per-row ``while`` loop whose
+    per-iteration overhead (condition + tuple shuffling) costs ~1us —
+    for a [16]-row scatter into a 2-queue VOQ that while loop IS half the
+    simulator tick. With ``rows <= unroll_max`` this emits straight-line
+    fused elementwise code instead: one masked add per row, applied in
+    ascending flat row order — exactly the scatter's update order — and
+    the +0.0 the mask contributes elsewhere is an additive identity (the
+    accumulator and all arrival contributions are non-negative, so no
+    -0.0 exists anywhere). The result is therefore bit-for-bit the
+    scatter's, on every engine and batch width; larger row counts fall
+    through to the native scatter.
+    """
+    idx = idx.reshape(-1)
+    vals = vals.reshape(-1)
+    rows = int(idx.shape[0])
+    if rows > unroll_max:
+        return zero.at[idx].add(vals)
+    qidx = jnp.arange(zero.shape[0], dtype=idx.dtype)
+    acc = zero
+    for i in range(rows):
+        acc = acc + jnp.where(qidx == idx[i], vals[i], 0.0)
+    return acc
+
+
+def build_csr_gather(path: jnp.ndarray, num_queues: int, maxdeg: int):
+    """Invert the pool's hop list into a per-queue gather table.
+
+    ``path`` is the [S, H] hop table; the result ``inv`` is
+    [Q+1, maxdeg] int32 where ``inv[q, j]`` is the flat (slot-major)
+    index of queue q's j-th contributor in ascending flat order — i.e. a
+    CSR of the incidence, padded with the sentinel index S*H (which the
+    consumer maps to a 0.0 contribution). ``overflow`` is True when some
+    real queue has more than ``maxdeg`` contributors, in which case the
+    consumer must fall back to the scatter form (the table is truncated).
+    Sentinel (invalid) hops are excluded — their contributions are
+    structurally zero and the sentinel queue's arrival sum is exactly
+    +0.0 either way.
+
+    Cost is one stable sort + one scatter over S*H elements; the slot
+    engine's hop table changes only on admission, so the megakernel
+    rebuilds this inside the (gated) admit pass — O(nnz log nnz)
+    amortized over the many ticks between arrivals — and pays one
+    [Q+1, maxdeg] gather + maxdeg in-order column adds per tick instead
+    of an S*H-row scatter.
+    """
+    flat_q = path.reshape(-1)
+    nnz = int(flat_q.shape[0])
+    order = jnp.argsort(flat_q, stable=True)
+    sorted_q = flat_q[order]
+    # rank of each contribution within its queue (ascending flat index,
+    # because the sort is stable)
+    seg_start = jnp.searchsorted(sorted_q, sorted_q, side="left")
+    rank_sorted = jnp.arange(nnz, dtype=jnp.int32) - seg_start.astype(
+        jnp.int32)
+    real = sorted_q < num_queues
+    overflow = jnp.any(real & (rank_sorted >= maxdeg))
+    cell = jnp.where(real & (rank_sorted < maxdeg),
+                     sorted_q * maxdeg + jnp.minimum(rank_sorted,
+                                                     maxdeg - 1),
+                     (num_queues + 1) * maxdeg)
+    inv = jnp.full(((num_queues + 1) * maxdeg + 1,), nnz,
+                   jnp.int32).at[cell].set(order.astype(jnp.int32),
+                                           mode="drop")
+    return inv[:-1].reshape(num_queues + 1, maxdeg), overflow
+
+
+def csr_gather_arrivals(contrib: jnp.ndarray, inv: jnp.ndarray,
+                        zero: jnp.ndarray) -> jnp.ndarray:
+    """Arrival sums from the inverted incidence: one [Q+1, maxdeg] gather
+    plus maxdeg in-order column adds. Column j holds every queue's j-th
+    contributor (ascending flat order), so each queue's accumulation
+    chain is exactly the scatter's — bit-for-bit — and the sentinel
+    pad contributes +0.0 (an additive identity on the non-negative
+    arrivals)."""
+    padded = jnp.concatenate([contrib.reshape(-1),
+                              jnp.zeros((1,), contrib.dtype)])
+    m = padded[inv]                                   # [Q+1, maxdeg]
+    arr = zero
+    for j in range(inv.shape[1]):                     # in-order, unrolled
+        arr = arr + m[:, j]
+    return arr
+
+
+def integrate_arrivals(arr: jnp.ndarray, q: jnp.ndarray, bw: jnp.ndarray,
+                       caps: jnp.ndarray, *, dt: float):
+    """The fluid-queue integration step shared by every sparse queue
+    form: mirrors ``fluid._queue_update`` exactly, pins included (the
+    barrier keeps program variants from contracting the integration into
+    an FMA, which would break cross-engine bit-equality). Returns
+    (out, q_new)."""
+    q_new = jnp.clip(q + _pin((arr - bw) * dt), 0.0, caps)
+    out = jnp.where(q > 0.0, bw, jnp.minimum(arr, bw))
+    return out, q_new.at[-1].set(0.0)
+
+
+def queue_arrivals_sparse(lam_del: jnp.ndarray, path: jnp.ndarray,
+                          valid: jnp.ndarray, q: jnp.ndarray,
+                          bw: jnp.ndarray, caps: jnp.ndarray, *, dt: float,
+                          unroll_max: int = 128):
+    """Sparse (CSR / flat hop-list) queue update, self-contained form.
+
+    ``lam_del``/``path``/``valid`` are the pool's [S, H] delayed rates and
+    hop table; the incidence is kept in its sparse form — the flattened
+    per-slot hop list — and accumulated with a slot-major segment sum
+    (``ordered_scatter_add``), so per-tick cost is O(nnz) and the
+    accumulation order is identical to the reference engine's masked
+    scatter-add (bit-for-bit, unlike the dense matmul of
+    ``queue_arrivals``). Returns (arrivals, out, q_new).
+
+    The megakernel (core/megakernel.py) composes the same pieces —
+    ``ordered_scatter_add``/``csr_gather_arrivals`` for the arrivals plus
+    ``integrate_arrivals`` — inline, because it interleaves the packed
+    telemetry-row write and the inverted-incidence cond between them;
+    this function is the standalone one-call form of that pipeline
+    (asserted bit-identical to ``fluid._queue_update`` in
+    tests/test_megakernel.py).
+    """
+    contrib = jnp.where(valid, lam_del, 0.0)
+    arr = ordered_scatter_add(jnp.zeros_like(q), path, contrib,
+                              unroll_max=unroll_max)
+    out, q_new = integrate_arrivals(arr, q, bw, caps, dt=dt)
+    return arr, out, q_new
 
 
 def update_incidence(incidence: jnp.ndarray, path: jnp.ndarray,

@@ -47,11 +47,14 @@ def _scenario(n=8, steps=1500):
 # -------------------------------------------------------------------------
 
 def test_backend_registry():
-    assert law_backends("powertcp") == ["fused", "reference"]
-    assert law_backends("theta_powertcp") == ["fused", "reference"]
-    assert law_backends("reno") == ["reference"]
+    assert law_backends("powertcp") == ["fused", "megakernel", "reference"]
+    assert law_backends("theta_powertcp") == ["fused", "megakernel",
+                                              "reference"]
+    # every law carries its kernel-composable megakernel entry
+    assert law_backends("reno") == ["megakernel", "reference"]
     assert get_law("powertcp").backend == "reference"
     assert get_law("powertcp", "fused").backend == "fused"
+    assert get_law("reno", "megakernel").backend == "megakernel"
     with pytest.raises(KeyError):
         get_law("swift", "fused")
     with pytest.raises(KeyError):

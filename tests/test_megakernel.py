@@ -1,0 +1,307 @@
+"""Whole-tick megakernel backend (DESIGN.md section 13).
+
+The exactness anchor, inherited from the PR-3 discipline (section 12): on
+the single-bottleneck anchor scenario the megakernel backend must
+reproduce the reference backend's queue trace, FCT vector, per-slot
+rates, windows and ring buffers BIT-FOR-BIT — for EVERY law in the live
+registry (a law registered tomorrow is covered with zero test edits) and
+on BOTH lowerings (the flat XLA scan and the Pallas whole-tick kernel in
+interpret mode). Block boundaries (trace length not divisible by K,
+retire/admit landing on block edges, S=1 pools), recording chunking, the
+sweep-spec backend axis and the bit-identity of the restructured
+primitives (unrolled scatter, inverted incidence, CSR buffer caps) are
+pinned here too.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GBPS, US, CircuitSchedule, LAWS, SimConfig,
+                        SweepSpec, default_law_config, get_law,
+                        law_backends, make_flows_single, make_schedule,
+                        run_sweep, schedule_as_flows, simulate_slots,
+                        simulate_slots_batch, single_bottleneck,
+                        stack_flow_schedules)
+from repro.core.fluid import SlotSim, _resolve_law, audit_carry_dtypes
+from repro.core.megakernel import (build_switch_csr, _buffer_caps_csr,
+                                   simulate_slots_mega)
+from repro.kernels.queue_arrivals import (build_csr_gather,
+                                          csr_gather_arrivals,
+                                          ordered_scatter_add)
+
+B = 100 * GBPS
+TAU = 20 * US
+
+
+def _staggered(n=12, steps=4000, seed=0):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=TAU, nic=B,
+                              sizes=rng.uniform(8e4, 4e5, n),
+                              starts=rng.uniform(0.0, 1.5e-3, n),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, sched, cfg
+
+
+def _law_cfg(sched, **kw):
+    """Config satisfying every registered law (retcp needs a schedule)."""
+    kw.setdefault("sched", CircuitSchedule(day=50 * US, night=10 * US,
+                                           matchings=4).params())
+    return default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              **kw)
+
+
+def _assert_bitwise(out_m, out_r, slots=None):
+    st_m, rec_m = out_m
+    st_r, rec_r = out_r
+    assert np.array_equal(np.asarray(rec_m.q), np.asarray(rec_r.q))
+    assert np.array_equal(np.asarray(st_m.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_m.w), np.asarray(st_r.w))
+    assert np.array_equal(np.asarray(rec_m.w_sum), np.asarray(rec_r.w_sum))
+    assert np.array_equal(np.asarray(rec_m.lam_f), np.asarray(rec_r.lam_f))
+    assert np.array_equal(np.asarray(rec_m.n_active),
+                          np.asarray(rec_r.n_active))
+    # ring buffers too: the megakernel's packed telemetry ring must
+    # unpack to exactly the reference rings
+    assert np.array_equal(np.asarray(st_m.hist_q), np.asarray(st_r.hist_q))
+    assert np.array_equal(np.asarray(st_m.hist_out),
+                          np.asarray(st_r.hist_out))
+
+
+# -------------------------------------------------------------------------
+# registry-driven exactness anchor
+# -------------------------------------------------------------------------
+
+def test_every_law_advertises_megakernel_backend():
+    for law in sorted(LAWS):
+        assert "megakernel" in law_backends(law), law
+        assert get_law(law, "megakernel").backend == "megakernel"
+
+
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_megakernel_bitmatches_reference_every_law(law):
+    """Full-trajectory bit-identity vs the reference backend on the
+    anchor scenario, including pool recycling (S < N forces admission
+    waits, retirements and slot reuse)."""
+    topo, sched, cfg = _staggered()
+    lcfg = _law_cfg(sched)
+    ref = simulate_slots(topo, sched, law, 6, lcfg, cfg)
+    mega = simulate_slots(topo, sched, law, 6, lcfg, cfg,
+                          backend="megakernel")
+    _assert_bitwise(mega, ref)
+
+
+@pytest.mark.parametrize("law", ["powertcp", "dcqcn"])
+def test_megakernel_pallas_lowering_bitmatches(law):
+    """The Pallas whole-tick kernel (interpret mode off-TPU) runs the
+    same tick function — bit-identical to the reference backend."""
+    topo, sched, cfg = _staggered(steps=600)
+    lcfg = _law_cfg(sched)
+    ref = simulate_slots(topo, sched, law, 16, lcfg, cfg)
+    sim = SlotSim(topo, sched, _resolve_law(law, "megakernel"), lcfg, cfg,
+                  16, "megakernel")
+    mega = simulate_slots_mega(sim, record=True, impl="pallas")
+    _assert_bitwise(mega, ref)
+
+
+# -------------------------------------------------------------------------
+# block boundaries
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [7, 64])
+def test_pallas_block_boundaries(block):
+    """Trace length not divisible by K (remainder block), retires and
+    admissions landing on arbitrary block edges: K must never change the
+    results (K=7 puts edges on ~570 distinct ticks of a 3998-step run,
+    K=64 exercises the remainder path since 3998 % 64 != 0)."""
+    topo, sched, cfg = _staggered(steps=3998)
+    lcfg = _law_cfg(sched)
+    ref = simulate_slots(topo, sched, "powertcp", 6, lcfg, cfg)
+    sim = SlotSim(topo, sched, _resolve_law("powertcp", "megakernel"),
+                  lcfg, cfg, 6, "megakernel")
+    mega = simulate_slots_mega(sim, record=True, impl="pallas",
+                               block=block)
+    _assert_bitwise(mega, ref)
+
+
+def test_single_slot_pool():
+    """S=1: flows serialize through one slot; the megakernel's deferred
+    FCT flush must still deliver every completion exactly."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(3, tau=TAU, nic=B, sizes=[1e5] * 3,
+                              starts=[0.0, 1e-5, 2e-5], sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=4000, hist=256)
+    lcfg = _law_cfg(sched, )
+    ref = simulate_slots(topo, sched, "powertcp", 1, lcfg, cfg)
+    mega = simulate_slots(topo, sched, "powertcp", 1, lcfg, cfg,
+                          backend="megakernel")
+    _assert_bitwise(mega, ref)
+    assert np.isfinite(np.asarray(mega[0].fct)).all()
+
+
+def test_record_every_chunking_matches_reference():
+    topo, sched, cfg = _staggered(steps=2000)
+    cfg = cfg._replace(record_every=10)
+    lcfg = _law_cfg(sched)
+    ref = simulate_slots(topo, sched, "powertcp", 16, lcfg, cfg)
+    mega = simulate_slots(topo, sched, "powertcp", 16, lcfg, cfg,
+                          backend="megakernel")
+    assert mega[1].q.shape[0] == 200
+    _assert_bitwise(mega, ref)
+
+
+# -------------------------------------------------------------------------
+# batched / sweep integration
+# -------------------------------------------------------------------------
+
+def test_megakernel_batched_and_sequential_match_serial():
+    """The vmapped and the sequential-scan batch drivers must reproduce
+    the per-schedule megakernel runs (different compiled programs —
+    knife-edge ulps allowed on windows, everything else bitwise)."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    cfg = SimConfig(dt=1e-6, steps=1500, hist=256)
+    scheds = []
+    for s in range(2):
+        rng = np.random.default_rng(s)
+        nf = 6 + 2 * s
+        scheds.append(make_schedule(make_flows_single(
+            nf, tau=TAU, nic=B, sizes=rng.uniform(1e5, 4e5, nf),
+            starts=rng.uniform(0.0, 5e-4, nf), sim_dt=1e-6)))
+    sb = stack_flow_schedules(scheds, topo.num_queues)
+    for seq in (False, True):
+        stb, _ = simulate_slots_batch(topo, sb, "powertcp", 10, cfg=cfg,
+                                      expected_flows=4.0,
+                                      backend="megakernel", sequential=seq)
+        for i, sc in enumerate(scheds):
+            n = int(sc.start.shape[0])
+            lcfg = default_law_config(schedule_as_flows(sc),
+                                      expected_flows=4.0)
+            st, _ = simulate_slots(topo, sc, "powertcp", 10, lcfg, cfg,
+                                   backend="megakernel")
+            np.testing.assert_allclose(np.asarray(stb.fct[i][:n]),
+                                       np.asarray(st.fct), rtol=1e-6)
+            assert not np.isfinite(np.asarray(stb.fct[i][n:])).any()
+
+
+def test_sweepspec_backend_axis():
+    """``SweepSpec(backends=...)`` fans the grid across law backends —
+    one compiled program per (law, backend) pair — and the megakernel
+    rows must reproduce the reference rows."""
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    cfg = SimConfig(dt=1e-6, steps=1200, hist=256)
+    scheds_src = []
+    for s in range(2):
+        rng = np.random.default_rng(s)
+        scheds_src.append(make_flows_single(
+            5, tau=TAU, nic=B, sizes=rng.uniform(1e5, 3e5, 5),
+            starts=rng.uniform(0.0, 2e-4, 5), sim_dt=1e-6))
+    spec = SweepSpec(laws=["powertcp", "swift"], flows=scheds_src,
+                     expected_flows=4.0, slots=8,
+                     backends=("reference", "megakernel"))
+    pts = run_sweep(spec, topo, cfg, record=False)
+    assert len(pts.points) == 2 * 2 * 2
+    assert sorted({p.backend for p in pts.points}) == ["megakernel",
+                                                       "reference"]
+    assert set(pts.states) == {(0, 0), (0, 1), (1, 0), (1, 1)}
+    by = {(p.law, p.backend, p.flows_idx): p.index for p in pts.points}
+    for law in ("powertcp", "swift"):
+        for fi in range(2):
+            ref = pts.state(by[(law, "reference", fi)])
+            mega = pts.state(by[(law, "megakernel", fi)])
+            np.testing.assert_array_equal(np.asarray(mega.fct),
+                                          np.asarray(ref.fct))
+
+
+# -------------------------------------------------------------------------
+# restructured primitives: bit-identity against their reference forms
+# -------------------------------------------------------------------------
+
+def test_ordered_scatter_add_bit_identical():
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 29, (16, 4)), jnp.int32)
+    vals = jnp.asarray(rng.uniform(0, 1e9, (16, 4)), jnp.float32)
+    zero = jnp.zeros((29,), jnp.float32)
+
+    @jax.jit
+    def both(i, v):
+        return (zero.at[i].add(v),
+                ordered_scatter_add(zero, i, v, unroll_max=256))
+
+    a, b = both(idx, vals)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_csr_gather_matches_scatter_and_overflows():
+    rng = np.random.default_rng(1)
+    Q = 13
+    path = jnp.asarray(rng.integers(0, Q + 1, (9, 3)), jnp.int32)
+    vals = jnp.asarray(rng.uniform(0, 1e9, (9, 3)), jnp.float32)
+    zero = jnp.zeros((Q + 1,), jnp.float32)
+    # sentinel (path == Q) contributions are masked to +0.0 in both forms
+    ref = np.asarray(zero.at[path].add(jnp.where(path < Q, vals, 0.0)))
+    inv, ovf = build_csr_gather(path, Q, maxdeg=27)
+    assert not bool(ovf)
+    got = np.asarray(csr_gather_arrivals(jnp.where(path < Q, vals, 0.0),
+                                         inv, zero))
+    assert np.array_equal(got, ref)
+    # a 1-wide CSR must detect the duplicate-queue overflow
+    _, ovf1 = build_csr_gather(jnp.zeros((4, 1), jnp.int32), Q, maxdeg=1)
+    assert bool(ovf1)
+
+
+def test_queue_arrivals_sparse_matches_reference_update():
+    """The standalone sparse queue update (flat hop-list accumulate +
+    pinned integration) must be bit-identical to ``fluid._queue_update``
+    on the reference backend."""
+    from repro.core.fluid import _buffer_caps, _queue_update
+    from repro.kernels.queue_arrivals import queue_arrivals_sparse
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(3)
+    S, H = 6, 2
+    path = jnp.asarray(rng.integers(0, topo.num_queues + 1, (S, H)),
+                       jnp.int32)
+    lam = jnp.asarray(rng.uniform(0, 1e9, (S, H)), jnp.float32)
+    q = jnp.asarray([3e5, 0.0], jnp.float32)
+    bw = jnp.asarray([12.5e9, 1e15], jnp.float32)
+    valid = path < topo.num_queues
+
+    @jax.jit
+    def both(path, lam, q, bw):
+        ref = _queue_update(topo, 1e-6, "reference", None, path, q,
+                            lam, valid, bw)
+        sparse = queue_arrivals_sparse(lam, path, valid, q, bw,
+                                       _buffer_caps(topo, q), dt=1e-6)
+        return ref, sparse
+
+    (ra, ro, rq), (sa, so, sq) = both(path, lam, q, bw)
+    for a, b in ((ra, sa), (ro, so), (rq, sq)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_buffer_caps_csr_bit_identical():
+    from repro.core import LeafSpine
+    from repro.core.fluid import _buffer_caps
+    topo = LeafSpine(racks=2, hosts_per_rack=4, spines=1).topology()
+    csr = build_switch_csr(topo)
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(np.concatenate([rng.uniform(0, 2e6, topo.num_queues),
+                                    [0.0]]), jnp.float32)
+
+    @jax.jit
+    def both(q):
+        return _buffer_caps(topo, q), _buffer_caps_csr(topo, q, csr)
+
+    a, b = both(q)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_audit_carry_dtypes_rejects_wide_leaves():
+    audit_carry_dtypes({"ok": jnp.zeros((3,), jnp.float32)})
+    with pytest.raises(TypeError, match="float64|f64|double-buffering"):
+        audit_carry_dtypes({"bad": np.zeros((3,), np.float64)})
