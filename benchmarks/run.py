@@ -358,8 +358,8 @@ def smoke_rdcn() -> dict:
 
 
 def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
-    """--smoke entry: seed sweep + slot engine + RDCN grid, one
-    BENCH_sweep.json.
+    """--smoke entry: seed sweep + slot engine + RDCN grid + fabric legs,
+    one BENCH_sweep.json.
 
     ``devices`` adds the sharded leg to the seed sweep; the RDCN grid (10
     points, compile-dominated) always runs the single-device batched path —
@@ -371,6 +371,8 @@ def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
     data = smoke_sweep(devices=devices)
     data.update(smoke_slots())
     data.update(smoke_rdcn())
+    from .fabric_fct import smoke_fabric
+    data.update(smoke_fabric())
     out = os.path.join(os.path.dirname(__file__), "..", out_name)
     with open(out, "w") as f:
         json.dump(data, f, indent=2)
@@ -430,11 +432,23 @@ def main():
               and data["fct_mega_exact_bitmatch"]
               and data["fct_mega_completed_match"]
               and data["fct_mega_p999_rel_err"] < 1e-3
-              and data["fct_mega_speedup"] > 1.0)
+              and data["fct_mega_speedup"] > 1.0
+              # fabric legs (DESIGN.md section 14): fat-tree (5-hop) and
+              # incast-burst scenarios bit-for-bit across all three
+              # engines, compiled leaf-spine == legacy paths, ECMP
+              # deterministic
+              and data["fct_fabric_hops"] >= 5
+              and data["fct_fabric_ref_slot_bitmatch"]
+              and data["fct_fabric_mega_bitmatch"]
+              and data["fct_fabric_incast_ref_slot_bitmatch"]
+              and data["fct_fabric_incast_mega_bitmatch"]
+              and data["fct_fabric_incast_completed_all"]
+              and data["fct_fabric_leafspine_paths_match"]
+              and data["fct_fabric_ecmp_deterministic"])
         return 0 if ok else 1
 
-    from . import (fig3_phase, fig4_incast, fig5_fairness, fig6_fct,
-                   fig7_load_sweep, fig8_rdcn, tab_commsched)
+    from . import (fabric_fct, fig3_phase, fig4_incast, fig5_fairness,
+                   fig6_fct, fig7_load_sweep, fig8_rdcn, tab_commsched)
     def sharded(fn):
         return lambda quick: fn(quick=quick, devices=devices)
 
@@ -445,6 +459,7 @@ def main():
         "fig6": sharded(fig6_fct.run),
         "fig7": sharded(fig7_load_sweep.run),
         "fig8": sharded(fig8_rdcn.run),
+        "fabric": sharded(fabric_fct.run),
         "commsched": tab_commsched.run,
     }
     only = set(a.only.split(",")) if a.only else set(suite)

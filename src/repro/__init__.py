@@ -1,0 +1,25 @@
+"""PowerTCP reproduction on jax/Pallas.
+
+Importing this package pins XLA:CPU's fast-math OFF (unless the user
+already set the flag themselves). XLA's CPU backend compiles with LLVM
+fast-math enabled by default, which lets each compiled program
+independently contract multiplies into FMAs, reassociate sums and turn
+divisions into reciprocal multiplies — so two programs computing the
+SAME arithmetic (padded vs slot vs megakernel engine, record on/off,
+different batch widths) can legally round f32 knife edges apart. The
+repo's cross-engine bit-for-bit exactness anchors (DESIGN.md sections
+12-14) rely on every program rounding identically; disabling fast-math
+removes the whole class at the root, and the explicit pins /
+contraction blockers in ``core.laws`` (``_pin`` / ``_nofma``) remain as
+defense for backends the flag does not cover.
+
+The flag must be set before XLA initializes its CPU client, i.e. before
+the first jax computation — importing ``repro`` (or any submodule)
+first is sufficient.
+"""
+import os as _os
+
+if "xla_cpu_enable_fast_math" not in _os.environ.get("XLA_FLAGS", ""):
+    _os.environ["XLA_FLAGS"] = (
+        _os.environ.get("XLA_FLAGS", "") +
+        " --xla_cpu_enable_fast_math=false").strip()

@@ -1,6 +1,7 @@
 """PowerTCP core: control laws, power computation, fluid-model simulator."""
 from .types import (Flows, FlowSchedule, PathObs, Record, SimConfig,
-                    SimState, SlotState, Topology, GBPS, KB, MB, MTU, US)
+                    SimState, SlotState, Topology, GBPS, KB, MB, MTU, US,
+                    pad_hops)
 from .laws import (LAWS, Law, LawConfig, get_law, law_backends,
                    norm_power_int, norm_power_theta, register_backend,
                    register_law)
@@ -15,8 +16,12 @@ from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from . import megakernel  # noqa: F401  (whole-tick fused slot engine)
 from .network import (LeafSpine, make_flows_single, make_schedule,
                       schedule_as_flows, single_bottleneck)
-from .workload import (WEBSEARCH_CDF, homa_alloc_fn, incast_flows,
-                       peak_concurrency, poisson_websearch,
+from .fabric import (CompiledPaths, Fabric, FabricBuilder, FabricRoutes,
+                     compile_routes, ecmp_hash, fat_tree,
+                     leaf_spine_fabric, single_bottleneck_fabric)
+from .workload import (WEBSEARCH_CDF, all_to_all_flows, homa_alloc_fn,
+                       incast_burst, incast_flows, peak_concurrency,
+                       permutation_traffic, poisson_websearch,
                        poisson_websearch_schedule, suggest_slots,
                        synthetic_incast_workload, websearch_mean,
                        websearch_sample)
@@ -29,8 +34,11 @@ from . import analysis
 
 __all__ = [
     "Flows", "FlowSchedule", "PathObs", "Record", "SimConfig", "SimState",
-    "SlotState", "Topology",
+    "SlotState", "Topology", "pad_hops",
     "GBPS", "KB", "MB", "MTU", "US",
+    "CompiledPaths", "Fabric", "FabricBuilder", "FabricRoutes",
+    "compile_routes", "ecmp_hash", "fat_tree", "leaf_spine_fabric",
+    "single_bottleneck_fabric",
     "LAWS", "Law", "LawConfig", "get_law", "law_backends",
     "norm_power_int", "norm_power_theta", "register_backend",
     "register_law",
@@ -42,7 +50,8 @@ __all__ = [
     "stack_flows", "stack_law_configs", "step",
     "LeafSpine", "make_flows_single", "make_schedule", "schedule_as_flows",
     "single_bottleneck",
-    "WEBSEARCH_CDF", "homa_alloc_fn", "incast_flows", "peak_concurrency",
+    "WEBSEARCH_CDF", "all_to_all_flows", "homa_alloc_fn", "incast_burst",
+    "incast_flows", "peak_concurrency", "permutation_traffic",
     "poisson_websearch", "poisson_websearch_schedule", "suggest_slots",
     "synthetic_incast_workload", "websearch_mean", "websearch_sample",
     "CircuitSchedule", "ScheduleParams", "circuit_bw_at", "circuit_up",

@@ -69,9 +69,9 @@ from ..kernels.queue_arrivals import (ordered_scatter_add, queue_arrivals,
                                       update_incidence)
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
-from .laws import Law, LawConfig, get_law, _pin
+from .laws import Law, LawConfig, get_law, _nofma, _pin
 from .types import (MTU, Flows, FlowSchedule, PathObs, Record, SimConfig,
-                    SimState, SlotState, Topology)
+                    SimState, SlotState, Topology, pad_hops)
 
 _INT32_MAX = np.iinfo(np.int32).max
 
@@ -82,6 +82,23 @@ def default_law_config(flows: Flows, gamma: float = 0.9,
     beta = flows.nic_rate * flows.tau / expected_flows
     return LawConfig(gamma=gamma, beta=beta, tau=flows.tau,
                      host_bw=flows.nic_rate, **kw)
+
+
+def _hop_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sequential sum over the (last) hop axis with a fixed association.
+
+    ``jnp.sum``'s reduction order is implementation-defined — compiled
+    program variants (padded vs slot vs megakernel) may associate a
+    5-hop sum differently and flip the per-flow RTT by 1 ulp, which
+    breaks cross-engine bit-equality for laws that consume theta
+    directly (first seen with TIMELY on fat-tree paths; DESIGN.md
+    section 14). An unrolled left-to-right chain costs the same H-1
+    adds and leaves no association choice to make.
+    """
+    acc = x[..., 0]
+    for h in range(1, x.shape[-1]):
+        acc = acc + x[..., h]
+    return acc
 
 
 def _marking(q: jnp.ndarray, buf: jnp.ndarray, cfg: LawConfig) -> jnp.ndarray:
@@ -191,9 +208,11 @@ def _queue_update(topo: Topology, dt: float, backend: str, incidence,
         # tick on small scenarios, e.g. the fig8 VOQ — see the kernel's
         # docstring)
         arr = ordered_scatter_add(jnp.zeros_like(q), path, contrib)
-        # pinned so no program variant contracts the integration into an
-        # FMA, which would break cross-engine bit-equality (laws._pin)
-        q_new = jnp.clip(q + _pin((arr - bw) * dt), 0.0, caps)
+        # pinned against XLA rewrites and contraction-blocked against
+        # LLVM FMAs so no program variant fuses the integration into the
+        # add, which would break cross-engine bit-equality (laws._pin /
+        # laws._nofma; mirrored by kernels.integrate_arrivals)
+        q_new = jnp.clip(q + _nofma(_pin((arr - bw) * dt)), 0.0, caps)
     out = jnp.where(q > 0.0, bw, jnp.minimum(arr, bw))
     q_new = q_new.at[-1].set(0.0)
     return arr, out, q_new
@@ -224,7 +243,9 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     D = cfg.hist
     dt = cfg.dt
     F = flows.tau.shape[0]
-    t_sec = state.t.astype(jnp.float32) * dt
+    # the t*dt product feeds timer subtractions/adds downstream; blocked
+    # against FMA contraction so every engine rounds it identically
+    t_sec = _nofma(state.t.astype(jnp.float32) * dt)
     ptr = jnp.mod(state.t, D)
     bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
 
@@ -237,8 +258,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # path) never performs
     b_hop = _pin(bw[flows.path])
     valid = flows.path < topo.num_queues
-    theta_now = flows.tau + jnp.sum(
-        jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
+    theta_now = flows.tau + _hop_sum(
+        jnp.where(valid, q_hop / b_hop, 0.0))
     lam = jnp.where(active,
                     jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
                                             state.rate_cap),
@@ -270,10 +291,17 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     fidx = jnp.arange(F)
     q_obs = hist_q[ohidx, flows.path]
     q_obs_prev = hist_q[ohprev, flows.path]
-    qdot_obs = (q_obs - q_obs_prev) / dt
+    # explicit reciprocal multiply: program variants disagree on whether
+    # the divide-by-constant lowers to a division or a reciprocal
+    # multiply; the multiply makes every engine round identically
+    # (mirrored by megakernel.integrate_queues at write time). The
+    # product is also contraction-blocked: it feeds the law's
+    # current = qdot + mu add, which LLVM otherwise FMA-contracts in
+    # some programs (fp-contract is on even without fast-math)
+    qdot_obs = _nofma((q_obs - q_obs_prev) * (1.0 / dt))
     mu_obs = hist_out[ohidx, flows.path]
-    theta_obs = flows.tau + jnp.sum(
-        jnp.where(valid, q_obs / b_hop, 0.0), axis=1)
+    theta_obs = flows.tau + _hop_sum(
+        jnp.where(valid, q_obs / b_hop, 0.0))
     wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                           1, D - 2)
     w_old = hist_w[jnp.mod(ptr - wold_delay, D), fidx]
@@ -291,8 +319,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # -- control-law update (dispatches through the law's bound backend) ---
     law_state, w, rate_cap = sim.law.update(
         state.law, obs, state.w, state.rate_cap, upd, law_cfg, t_sec)
-    w = jnp.clip(w, MTU, _pin(8.0 * flows.nic_rate * flows.tau) +
-                 _pin(8.0 * flows.nic_rate * theta_now))
+    w = jnp.clip(w, MTU, _nofma(_pin(8.0 * flows.nic_rate * flows.tau)) +
+                 _nofma(_pin(8.0 * flows.nic_rate * theta_now)))
     period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
     next_update = jnp.where(upd, t_sec + period, state.next_update)
     last_update = jnp.where(upd, t_sec, state.last_update)
@@ -301,11 +329,17 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         rate_cap = alloc_fn(state.remaining, active, t_sec, flows, rate_cap)
 
     # -- flow progress ------------------------------------------------------
-    remaining = jnp.where(active, state.remaining - _pin(lam * dt),
+    remaining = jnp.where(active, state.remaining - _nofma(_pin(lam * dt)),
                           state.remaining)
     done = active & (remaining <= 0.0)
+    # tau/start are compile-time constants here; pinned so XLA cannot
+    # fold (tau/2 - start) into one constant — the slot engine (dynamic
+    # values) rounds the sequential (t_sec + tau/2) - start, and the
+    # bit-for-bit anchor needs both engines on the same association
     fct = jnp.where(done & jnp.isnan(state.fct),
-                    t_sec + flows.tau / 2.0 - flows.start, state.fct)
+                    t_sec + _nofma(_pin(flows.tau / 2.0)) -
+                    _pin(flows.start),
+                    state.fct)
 
     new_state = SimState(
         t=state.t + 1, w=w, rate_cap=rate_cap, q=q_new, out_rate=out,
@@ -601,7 +635,7 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     N = int(sim.sched.start.shape[0])
     D = cfg.hist
     dt = cfg.dt
-    t_sec = state.t.astype(jnp.float32) * dt
+    t_sec = _nofma(state.t.astype(jnp.float32) * dt)   # mirror of step()
     ptr = jnp.mod(state.t, D)
     bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
     sidx = jnp.arange(S)
@@ -619,8 +653,8 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     q_hop = state.q[path]                                     # [S,H]
     b_hop = _pin(bw[path])            # mirror of the padded engine's pin
     valid = path < topo.num_queues
-    theta_now = tau + jnp.sum(
-        jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
+    theta_now = tau + _hop_sum(
+        jnp.where(valid, q_hop / b_hop, 0.0))
     lam = jnp.where(active,
                     jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
                                             state.rate_cap),
@@ -649,10 +683,10 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     ohprev = jnp.mod(ohidx - 1, D)
     q_obs = hist_q[ohidx, path]
     q_obs_prev = hist_q[ohprev, path]
-    qdot_obs = (q_obs - q_obs_prev) / dt
+    qdot_obs = _nofma((q_obs - q_obs_prev) * (1.0 / dt))  # mirror of step
     mu_obs = hist_out[ohidx, path]
-    theta_obs = tau + jnp.sum(
-        jnp.where(valid, q_obs / b_hop, 0.0), axis=1)
+    theta_obs = tau + _hop_sum(
+        jnp.where(valid, q_obs / b_hop, 0.0))
     wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                           1, D - 2)
     w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx]
@@ -672,17 +706,18 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     # -- control-law update (slot-gathered config) ------------------------
     law_state, w, rate_cap = sim.law.update(
         state.law, obs, state.w, state.rate_cap, upd, cfg_slot, t_sec)
-    w = jnp.clip(w, MTU, _pin(8.0 * nic * tau) + _pin(8.0 * nic * theta_now))
+    w = jnp.clip(w, MTU, _nofma(_pin(8.0 * nic * tau)) +
+                 _nofma(_pin(8.0 * nic * theta_now)))
     period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
     next_update = jnp.where(upd, t_sec + period, state.next_update)
     last_update = jnp.where(upd, t_sec, state.last_update)
 
     # -- flow progress; FCT scatters to the schedule-ordered [N] output ---
-    remaining = jnp.where(active, state.remaining - _pin(lam * dt),
+    remaining = jnp.where(active, state.remaining - _nofma(_pin(lam * dt)),
                           state.remaining)
     done = active & (remaining <= 0.0)
     fct = state.fct.at[jnp.where(done, state.slot_flow, N)].set(
-        jnp.where(done, t_sec + tau / 2.0 - state.start, jnp.nan),
+        jnp.where(done, t_sec + _nofma(tau / 2.0) - state.start, jnp.nan),
         mode="drop")
     # hold the slot until the flow's tail has drained into the queues
     hold = jnp.max(jnp.where(valid, tf_steps, 0), axis=1)
@@ -785,9 +820,14 @@ def pad_flows(flows: Flows, n: int, pad_queue: int) -> Flows:
 
 def stack_flows(flows_list: List[Flows], pad_queue: int) -> Flows:
     """Stack scenarios along a new leading batch axis, padding each to the
-    largest flow count with inert flows (``pad_flows``)."""
+    largest flow count with inert flows (``pad_flows``) and to the
+    largest hop count with sentinel hops (``types.pad_hops`` — scenarios
+    mixing path depths, e.g. incast bursts alongside a permutation
+    matrix on one fat-tree, stack into one program)."""
     n = max(int(f.tau.shape[0]) for f in flows_list)
-    padded = [pad_flows(f, n, pad_queue) for f in flows_list]
+    h = max(int(f.path.shape[-1]) for f in flows_list)
+    padded = [pad_flows(pad_hops(f, h, pad_queue), n, pad_queue)
+              for f in flows_list]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
 
 
@@ -834,9 +874,12 @@ def pad_schedule(sched: FlowSchedule, n: int, pad_queue: int) -> FlowSchedule:
 def stack_flow_schedules(scheds: List[FlowSchedule],
                          pad_queue: int) -> FlowSchedule:
     """Stack schedules along a new leading batch axis, padding each to the
-    largest flow count with inert entries (``pad_schedule``)."""
+    largest flow count with inert entries (``pad_schedule``) and to the
+    largest hop count with sentinel hops (``types.pad_hops``)."""
     n = max(int(s.start.shape[0]) for s in scheds)
-    padded = [pad_schedule(s, n, pad_queue) for s in scheds]
+    h = max(int(s.path.shape[-1]) for s in scheds)
+    padded = [pad_schedule(pad_hops(s, h, pad_queue), n, pad_queue)
+              for s in scheds]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
 
 

@@ -49,6 +49,24 @@ def _pin(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.optimization_barrier(x)
 
 
+def _nofma(x: jnp.ndarray) -> jnp.ndarray:
+    """Block FMA/FNMA contraction of a product feeding an add/sub.
+
+    ``_pin`` stops XLA's algebraic rewrites but is stripped before
+    codegen, so LLVM may still contract ``a*b + c`` (or ``c - a*b``)
+    into a fused multiply-add — and compiled program variants (padded vs
+    slot vs megakernel, different batch widths) make that choice
+    independently, flipping f32 knife edges right where cross-engine
+    bit-equality is asserted (first seen on 5-hop fat-tree paths,
+    DESIGN.md section 14). Routing the product through a ``maximum``
+    with a huge negative constant is numerically inert for every finite
+    simulator quantity (and NaN-propagating), survives XLA's simplifier,
+    and leaves LLVM no mul-feeds-add pattern to contract — every program
+    rounds the product explicitly.
+    """
+    return jnp.maximum(x, jnp.float32(-3e38))
+
+
 def _register_barrier_batcher():
     """jax 0.4.37 ships no vmap rule for ``optimization_barrier`` — the
     barrier is an identity, so batching is trivial (bind the batched args,
@@ -115,10 +133,21 @@ def norm_power_int(obs: PathObs, cfg: LawConfig) -> jnp.ndarray:
     """
     tau = cfg.tau[:, None]
     current = obs.qdot + obs.mu                      # [F,H] bytes/s
-    voltage = obs.q + obs.b * tau                    # [F,H] bytes
-    base = jnp.square(obs.b) * tau                   # [F,H]
+    bdp = _nofma(obs.b * tau)                        # [F,H] bytes (b*tau)
+    voltage = obs.q + bdp                            # [F,H] bytes
+    # base is written as (b*tau)*b — the association SOME program
+    # variants rewrite square(b)*tau into anyway (to reuse voltage's
+    # b*tau subterm), flipping the result by 1 ulp between engines.
+    # Building it from the materialized bdp and pinning the whole
+    # product forces every program onto the same association AND keeps
+    # later passes from re-deriving it (DESIGN.md section 14)
+    base = _pin(bdp * obs.b)                         # [F,H] b^2 * tau
     power = _pin(current * voltage)
-    g = jnp.where(obs.valid, power / jnp.maximum(base, 1.0), 0.0)
+    # explicit reciprocal multiply: XLA CPU's vectorized codegen lowers
+    # this f32 divide to recip-then-multiply in SOME programs (even with
+    # both operands barriered) while others divide directly — writing
+    # the reciprocal makes every program (and eager mode) round the same
+    g = jnp.where(obs.valid, power * (1.0 / jnp.maximum(base, 1.0)), 0.0)
     return jnp.max(g, axis=1)                        # [F]
 
 
@@ -133,14 +162,16 @@ def _smooth(prev: jnp.ndarray, new: jnp.ndarray, dt_obs: jnp.ndarray,
             tau: jnp.ndarray) -> jnp.ndarray:
     """Gamma_smooth update (Alg. 1 line 24), with dt clipped to tau."""
     d = jnp.clip(dt_obs, 0.0, tau)
-    blend = _pin(prev * (tau - d)) + _pin(new * d)
+    blend = _nofma(_pin(prev * (tau - d))) + _nofma(_pin(new * d))
     return blend / jnp.maximum(tau, 1e-12)
 
 
 def _ewma(gamma, target, w):
-    """``gamma * target + (1 - gamma) * w`` with both products pinned, so
-    no program variant contracts one of them into an FMA (see _pin)."""
-    return _pin(gamma * target) + _pin((1.0 - gamma) * w)
+    """``gamma * target + (1 - gamma) * w`` with both products pinned
+    against XLA rewrites (_pin) and contraction-blocked against LLVM
+    FMAs (_nofma), so no program variant fuses one of them into the
+    add."""
+    return _nofma(_pin(gamma * target)) + _nofma(_pin((1.0 - gamma) * w))
 
 
 def _mimd_update(w, w_old, norm_power, cfg: LawConfig, upd_mask):
@@ -297,16 +328,25 @@ def timely_init(n, cfg):
 def timely_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     t_low = cfg.t_low if cfg.t_low is not None else 1.5 * cfg.tau
     t_high = cfg.t_high if cfg.t_high is not None else 3.0 * cfg.tau
-    add = cfg.timely_add if cfg.timely_add is not None else cfg.host_bw / 100.0
+    # explicit reciprocal multiply: program variants disagree on whether
+    # x / 100.0 lowers to a division or a reciprocal multiply (they
+    # round differently); writing the multiply makes every engine agree
+    add = cfg.timely_add if cfg.timely_add is not None \
+        else cfg.host_bw * (1.0 / 100.0)
     grad = (obs.theta - state.prev_theta) / jnp.maximum(cfg.tau, 1e-12)  # normalized
     neg = jnp.where(grad <= 0, state.neg_count + 1, 0)
     hai = neg >= cfg.timely_hai_n
     r = state.rate
-    r_low = r + jnp.where(hai, cfg.timely_hai_n * add, add)
-    r_high = r * (1.0 - _pin(cfg.timely_beta *
-                             (1.0 - t_high / jnp.maximum(obs.theta, 1e-12))))
-    r_grad_neg = r + jnp.where(hai, cfg.timely_hai_n * add, add)
-    r_grad_pos = r * jnp.maximum(1.0 - _pin(cfg.timely_beta * grad), 0.5)
+    # the additive increment is _nofma'd: some variants contract
+    # r + hai_n*add into an FMA through the select, some round the
+    # product first
+    r_low = r + _nofma(jnp.where(hai, cfg.timely_hai_n * add, add))
+    r_high = r * (1.0 - _nofma(_pin(cfg.timely_beta *
+                               (1.0 - t_high / jnp.maximum(obs.theta,
+                                                           1e-12)))))
+    r_grad_neg = r + _nofma(jnp.where(hai, cfg.timely_hai_n * add, add))
+    r_grad_pos = r * jnp.maximum(1.0 - _nofma(_pin(cfg.timely_beta * grad)),
+                                 0.5)
     r_mid = jnp.where(grad <= 0, r_grad_neg, r_grad_pos)
     r_new = jnp.where(obs.theta < t_low, r_low,
                       jnp.where(obs.theta > t_high, r_high, r_mid))
@@ -350,7 +390,8 @@ def dcqcn_update(state, obs, w, rate_cap, upd_mask, cfg, t):
     rt = jnp.where(cut, state.rc, state.rt)
     # expected-value (fluid) cut: scale the alpha/2 cut by the mark fraction
     rc = jnp.where(cut,
-                   state.rc * (1.0 - _pin(0.5 * alpha * jnp.minimum(pe, 1.0))),
+                   state.rc * (1.0 - _nofma(_pin(0.5 * alpha *
+                                                 jnp.minimum(pe, 1.0)))),
                    state.rc)
     t_cut = jnp.where(cut, t, state.t_last_cut)
     # increase path: timer since last increase and no recent cut

@@ -78,8 +78,8 @@ import jax.numpy as jnp
 from ..kernels.fused_tick import DEFAULT_BLOCK, fused_tick_block
 from ..kernels.queue_arrivals import (build_csr_gather, csr_gather_arrivals,
                                       integrate_arrivals,
-                                      ordered_scatter_add)
-from .laws import _pin
+                                      ordered_scatter_add, suggest_maxdeg)
+from .laws import _nofma, _pin
 from .types import MTU, PathObs, Record, SlotState
 from . import fluid  # safe: fluid imports this module only inside functions
 
@@ -216,8 +216,16 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
     # sparse-gather queue path: worth carrying the inverted incidence
     # once the hop list outgrows the unrolled accumulate, but only on
     # the gated (serial) path — ungated, the rebuild would run every
-    # tick (and under vmap the overflow cond runs both branches)
-    maxdeg = min(S, 32)
+    # tick (and under vmap the overflow cond runs both branches). The
+    # CSR width comes from the compiled path set (the schedule's static
+    # per-queue degree bounds the runtime degree), so deep fat-tree /
+    # incast hop tables get a wide-enough table instead of falling back
+    # to the per-tick scatter every tick. Under the batched drivers the
+    # schedule is a tracer (no concrete hop table at trace time) — keep
+    # the historical fixed width there; the runtime overflow fallback
+    # stays bit-identical either way.
+    maxdeg = (min(S, 32) if isinstance(sched.path, jax.core.Tracer)
+              else suggest_maxdeg(sched.path, Q, S))
     use_csr = gate and S * H > 128
 
     def slot_hold(st):
@@ -274,7 +282,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         bit-identically."""
         caps = _buffer_caps_csr(topo, st.q, csr)
         out, q_new = integrate_arrivals(arr, st.q, bw, caps, dt=dt)
-        row = jnp.concatenate([q_new, out, (q_new - st.q) / dt])
+        row = jnp.concatenate([q_new, out,
+                               _nofma((q_new - st.q) * (1.0 / dt))])
         return q_new, out, row
 
     def quiet_tick(c, bw, ptr):
@@ -288,10 +297,10 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         q_hop = st.q[st.path]
         b_hop = _pin(bw[st.path])
         valid = st.path < Q
-        theta_now = st.tau + jnp.sum(
-            jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
-        w = jnp.clip(st.w, MTU, _pin(8.0 * st.nic_rate * st.tau) +
-                     _pin(8.0 * st.nic_rate * theta_now))
+        theta_now = st.tau + fluid._hop_sum(
+            jnp.where(valid, q_hop / b_hop, 0.0))
+        w = jnp.clip(st.w, MTU, _nofma(_pin(8.0 * st.nic_rate * st.tau)) +
+                     _nofma(_pin(8.0 * st.nic_rate * theta_now)))
         st = st._replace(
             t=st.t + 1, w=w, q=q_new, out_rate=out,
             hist_lam=st.hist_lam.at[ptr].set(jnp.zeros((S,), jnp.float32)),
@@ -302,13 +311,13 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
 
     def busy_tick(c, bw, ptr, due_t):
         st, pend, hold, inv, ovf = c
-        # t_sec is computed inside this code region on purpose: the
-        # reference engine's codegen contracts t*dt into neighbouring
-        # adds (the update timers); keeping the multiply adjacent lets
-        # this program's codegen make the identical choice, which
-        # bit-equality depends on (an optimization_barrier cannot pin
-        # it — LLVM contracts after XLA strips barriers)
-        t_sec = st.t.astype(jnp.float32) * dt
+        # t*dt is contraction-blocked (laws._nofma), mirroring the
+        # reference engines: every program rounds the product before it
+        # feeds the update timers, instead of relying on each program's
+        # codegen contracting it the same way (an optimization_barrier
+        # alone cannot pin it — LLVM contracts after XLA strips
+        # barriers)
+        t_sec = _nofma(st.t.astype(jnp.float32) * dt)
 
         if gate:
             # ticks with nothing due and nothing freeable skip the whole
@@ -340,8 +349,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         q_hop = st.q[path]                            # [S,H]
         b_hop = _pin(bw[path])       # mirror of the reference engine pin
         valid = path < Q
-        theta_now = tau + jnp.sum(
-            jnp.where(valid, q_hop / b_hop, 0.0), axis=1)
+        theta_now = tau + fluid._hop_sum(
+            jnp.where(valid, q_hop / b_hop, 0.0))
         lam = jnp.where(active,
                         jnp.minimum(jnp.minimum(_pin(st.w / theta_now),
                                                 st.rate_cap), nic), 0.0)
@@ -390,8 +399,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         else:
             q_obs = hist_qoq[ohidx, path]
             mu_obs = qdot_obs = jnp.zeros_like(q_obs)
-        theta_obs = tau + jnp.sum(
-            jnp.where(valid, q_obs / b_hop, 0.0), axis=1)
+        theta_obs = tau + fluid._hop_sum(
+            jnp.where(valid, q_obs / b_hop, 0.0))
         wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                               1, D - 2)
         w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx]
@@ -411,20 +420,21 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         # -- control law (kernel-composable registry update) ------------
         law_state, w, rate_cap = law.update(
             st.law, obs, st.w, st.rate_cap, upd, cfg_slot, t_sec)
-        w = jnp.clip(w, MTU, _pin(8.0 * nic * tau) +
-                     _pin(8.0 * nic * theta_now))
+        w = jnp.clip(w, MTU, _nofma(_pin(8.0 * nic * tau)) +
+                     _nofma(_pin(8.0 * nic * theta_now)))
         period = jnp.where(cfg.update_period > 0.0, cfg.update_period,
                            theta_now)
         next_update = jnp.where(upd, t_sec + period, st.next_update)
         last_update = jnp.where(upd, t_sec, st.last_update)
 
         # -- flow progress; completions park in the pending buffer ------
-        remaining = jnp.where(active, st.remaining - _pin(lam * dt),
+        remaining = jnp.where(active, st.remaining - _nofma(_pin(lam * dt)),
                               st.remaining)
         done = active & (remaining <= 0.0)
         pend = PendingFCT(
             jnp.where(done, st.slot_flow, pend.flow),
-            jnp.where(done, t_sec + tau / 2.0 - st.start, pend.val))
+            jnp.where(done, t_sec + _nofma(tau / 2.0) - st.start,
+                      pend.val))
         expire = (occupied & (t_sec >= st.stop) &
                   (st.free_at == _INT32_MAX) & ~done)
         free_at = jnp.where(done | expire, st.t + hold + 1, st.free_at)
@@ -441,7 +451,7 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
 
     def tick(carry: MegaCarry, due_t):
         st = carry.state
-        t_sec = st.t.astype(jnp.float32) * dt
+        t_sec = _nofma(st.t.astype(jnp.float32) * dt)
         bw = fluid._bandwidth(topo, bw_fn, t_sec)
         ptr = jnp.mod(st.t, D)
         c = (st, carry.pend, carry.hold, carry.inv, carry.ovf)

@@ -1,14 +1,24 @@
 """Topology and scenario builders for the fluid simulator.
 
-Two fabrics:
-  * ``single_bottleneck`` — the paper's analytical model (one shared queue).
-  * ``leaf_spine``        — oversubscribed datacenter fabric for the FCT
-                            experiments (server 25G links, 100G fabric links,
-                            per-queue model of ToR uplinks / spine downlinks /
-                            host downlinks, ECMP by flow hash).
+Since the fabric-graph refactor (DESIGN.md section 14) every topology is
+an instance of the declarative fabric graph + routing compiler in
+``core/fabric.py``:
 
-All builders return (Topology, path-metadata) and helper closures to turn a
-set of (src, dst, size, start) tuples into a ``Flows`` batch.
+  * ``single_bottleneck`` — the paper's analytical model (one shared
+    queue), derived from ``fabric.single_bottleneck_fabric``.
+  * ``LeafSpine``          — a thin facade over
+    ``fabric.leaf_spine_fabric``: oversubscribed datacenter fabric for
+    the FCT experiments (server 25G links, 100G fabric links, per-queue
+    model of ToR uplinks / spine downlinks / host downlinks, ECMP by
+    deterministic per-flow hash). Multi-spine is just ``spines=N``.
+  * fat-tree and anything else — build straight through ``core.fabric``
+    (``fat_tree(k)``, or your own ``FabricBuilder`` graph).
+
+The facade keeps the historical queue layout and per-flow arithmetic
+bit-for-bit (tests/test_fabric.py anchors compiled-vs-legacy paths); the
+one behavioral change is sanctioned and documented there: multi-spine
+path selection is a seedable deterministic ECMP hash
+(``fabric.ecmp_hash``) instead of a hidden global-RNG draw.
 """
 from __future__ import annotations
 
@@ -18,6 +28,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from .fabric import (FabricRoutes, compile_routes, leaf_spine_fabric,
+                     single_bottleneck_fabric)
 from .types import Flows, FlowSchedule, Topology, GBPS, US
 
 
@@ -58,15 +70,10 @@ def schedule_as_flows(sched: FlowSchedule) -> Flows:
 def single_bottleneck(bandwidth: float = 25 * GBPS,
                       buffer: float = 6e6,
                       dt_alpha: float = 0.0) -> Topology:
-    return Topology(
-        num_queues=1,
-        bandwidth=jnp.asarray([bandwidth], jnp.float32),
-        buffer=jnp.asarray([buffer], jnp.float32),
-        switch_of_queue=jnp.asarray([0], jnp.int32),
-        num_switches=1,
-        switch_buffer=jnp.asarray([buffer], jnp.float32),
-        dt_alpha=dt_alpha,
-    )
+    """One shared queue — emitted by the fabric compiler (bit-identical
+    to the historical hand-built ``Topology``)."""
+    return single_bottleneck_fabric(bandwidth=bandwidth, buffer=buffer,
+                                    dt_alpha=dt_alpha).topology()
 
 
 def make_flows_single(n: int, tau: float, nic: float,
@@ -95,11 +102,15 @@ def make_flows_single(n: int, tau: float, nic: float,
 
 @dataclasses.dataclass
 class LeafSpine:
-    """Queue layout:
+    """Thin facade over ``fabric.leaf_spine_fabric`` (queue layout:
       up[r, s]      ToR r -> spine s uplink          idx = r*S + s
       down[s, r]    spine s -> ToR r downlink        idx = R*S + s*R + r
       host[r, h]    ToR r -> host (r,h) downlink     idx = 2*R*S + r*H + h
-    """
+    — preserved bit-for-bit by the compiler's queued-link declaration
+    order). Path compilation, forward delays, RTTs and ECMP live in
+    ``core.fabric``; this class only carries the parameterization and
+    the workload-facing protocol (``n_hosts`` / ``host_group`` /
+    ``load_capacity`` / ``make_flows``)."""
     racks: int = 4
     hosts_per_rack: int = 16
     spines: int = 1
@@ -110,83 +121,66 @@ class LeafSpine:
     buffer_per_port: float = 6e6
     switch_buffer: float = 24e6                  # Tofino-like shallow shared
     dt_alpha: float = 1.0
+    ecmp_seed: int = 0
 
     def __post_init__(self):
         R, S, H = self.racks, self.spines, self.hosts_per_rack
         self.n_hosts = R * H
         self.num_queues = 2 * R * S + R * H
+        self._routes: Optional[FabricRoutes] = None
+
+    def routes(self) -> FabricRoutes:
+        """The compiled fabric (built lazily, cached)."""
+        if self._routes is None:
+            self._routes = compile_routes(leaf_spine_fabric(
+                racks=self.racks, hosts_per_rack=self.hosts_per_rack,
+                spines=self.spines, host_bw=self.host_bw,
+                fabric_bw=self.fabric_bw, d_host=self.d_host,
+                d_fabric=self.d_fabric,
+                buffer_per_port=self.buffer_per_port,
+                switch_buffer=self.switch_buffer,
+                dt_alpha=self.dt_alpha), seed=self.ecmp_seed)
+        return self._routes
 
     def oversubscription(self) -> float:
         return (self.hosts_per_rack * self.host_bw) / (self.spines * self.fabric_bw)
 
     def topology(self) -> Topology:
-        R, S, H = self.racks, self.spines, self.hosts_per_rack
-        bw = np.concatenate([
-            np.full(R * S, self.fabric_bw),       # uplinks
-            np.full(S * R, self.fabric_bw),       # spine downlinks
-            np.full(R * H, self.host_bw),         # host downlinks
-        ]).astype(np.float32)
-        # switch ids: ToR r for uplinks & host downlinks; spine s for its ports
-        sw = np.concatenate([
-            np.repeat(np.arange(R), S),                       # up on ToR r
-            R + np.repeat(np.arange(S), R),                   # down on spine s
-            np.repeat(np.arange(R), H),                       # host on ToR r
-        ]).astype(np.int32)
-        nsw = R + S
-        return Topology(
-            num_queues=self.num_queues,
-            bandwidth=jnp.asarray(bw),
-            buffer=jnp.full((self.num_queues,), self.buffer_per_port,
-                            jnp.float32),
-            switch_of_queue=jnp.asarray(sw),
-            num_switches=nsw,
-            switch_buffer=jnp.full((nsw,), self.switch_buffer, jnp.float32),
-            dt_alpha=self.dt_alpha,
-        )
+        return self.routes().topology()
 
     def host_down_queue(self, r, h):
         R, S, H = self.racks, self.spines, self.hosts_per_rack
         return 2 * R * S + r * H + h
 
+    def host_group(self) -> np.ndarray:
+        """[n_hosts] rack id per host (the workload cross-group key)."""
+        return np.arange(self.n_hosts) // self.hosts_per_rack
+
+    def host_ingress_queue(self, host: int) -> int:
+        H = self.hosts_per_rack
+        return self.host_down_queue(host // H, host % H)
+
+    def load_capacity(self) -> float:
+        """Offered-load base: aggregate ToR uplink bandwidth (the paper's
+        load definition on this oversubscribed fabric — kept as the exact
+        historical product, not the compiler's link sum, so workload
+        arrival processes are bit-stable across the migration)."""
+        return self.racks * self.spines * self.fabric_bw
+
     def make_flows(self, src: np.ndarray, dst: np.ndarray, sizes: np.ndarray,
                    starts: np.ndarray, sim_dt: float,
                    weights: Optional[np.ndarray] = None,
-                   rng: Optional[np.random.Generator] = None) -> Flows:
-        """src/dst are host ids in [0, racks*hosts_per_rack)."""
-        R, S, H = self.racks, self.spines, self.hosts_per_rack
-        rng = rng or np.random.default_rng(0)
-        n = len(src)
-        r1, h1 = src // H, src % H
-        r2, h2 = dst // H, dst % H
-        spine = rng.integers(0, S, size=n)
-        PAD = self.num_queues
-        same_rack = r1 == r2
-        up = r1 * S + spine
-        down = R * S + spine * R + r2
-        host = 2 * R * S + r2 * H + h2
-        path = np.stack([
-            np.where(same_rack, host, up),
-            np.where(same_rack, PAD, down),
-            np.where(same_rack, PAD, host),
-        ], axis=1).astype(np.int32)
-        # forward propagation delay (seconds) to each hop's queue
-        d1 = np.where(same_rack, self.d_host, self.d_host)
-        d2 = np.where(same_rack, 0.0, self.d_host + self.d_fabric)
-        d3 = np.where(same_rack, 0.0, self.d_host + 2 * self.d_fabric)
-        tf = np.stack([d1, d2, d3], axis=1) / sim_dt
-        rtt = np.where(same_rack, 4 * self.d_host,
-                       2 * (2 * self.d_host + 2 * self.d_fabric))
-        if weights is None:
-            weights = np.ones(n)
-        return Flows(
-            path=jnp.asarray(path),
-            tf_steps=jnp.asarray(np.round(tf).astype(np.int32)),
-            rtt_steps=jnp.asarray(
-                np.maximum(np.round(rtt / sim_dt), 1).astype(np.int32)),
-            tau=jnp.asarray(rtt.astype(np.float32)),
-            nic_rate=jnp.full((n,), self.host_bw, jnp.float32),
-            size=jnp.asarray(sizes, jnp.float32),
-            start=jnp.asarray(starts, jnp.float32),
-            stop=jnp.full((n,), jnp.inf, jnp.float32),
-            weight=jnp.asarray(weights, jnp.float32),
-        )
+                   rng: Optional[np.random.Generator] = None,
+                   seed: Optional[int] = None) -> Flows:
+        """src/dst are host ids in [0, racks*hosts_per_rack).
+
+        Paths come from the routing compiler with deterministic per-flow
+        ECMP hashing (``fabric.ecmp_hash``; seedable via ``seed`` /
+        ``ecmp_seed``). ``rng`` is accepted for backwards compatibility
+        but no longer consulted — the historical implementation drew the
+        spine pick from it, which made compiled paths depend on global
+        RNG call order across processes.
+        """
+        del rng
+        return self.routes().make_flows(src, dst, sizes, starts, sim_dt,
+                                        weights=weights, seed=seed)

@@ -11,7 +11,14 @@ A ``SweepSpec`` names a grid over
                     (``rdcn.CircuitSchedule``),
   * ``backends``  — optional law-backend axis (reference / fused /
                     megakernel; structural like the law axis — one
-                    compiled program per (law, backend) pair).
+                    compiled program per (law, backend) pair),
+  * ``topologies``— optional STRUCTURAL fabric axis (DESIGN.md section
+                    14): one ``Topology`` per entry with its own group
+                    of scenarios (``flows[t]`` belongs to
+                    ``topologies[t]`` — flows are fabric-specific, they
+                    carry compiled paths), so one spec grids
+                    fabrics x laws x loads, one compiled program per
+                    (topology, law, backend) triple.
 
 ``run_sweep`` expands the grid, groups points by law, and runs each group
 as ONE jitted program through ``fluid.simulate_batch``: scenarios are
@@ -43,13 +50,15 @@ from .types import Flows, SimConfig, Topology
 class SweepPoint(NamedTuple):
     """One expanded grid point.
 
-    ``index`` is the global position (law-major, then backend-major, then
-    flows x overrides x schedules row-major); ``row`` is the position
-    inside the per-(law, backend) batch (the index along the batch axis
-    of ``SweepResult.states[group]``). ``sched_idx`` is -1 when the spec
+    ``index`` is the global position (topology-major, then law-major,
+    then backend-major, then flows x overrides x schedules row-major);
+    ``row`` is the position inside the per-(topology, law, backend)
+    batch (the index along the batch axis of
+    ``SweepResult.states[group]``). ``sched_idx`` is -1 when the spec
     has no schedule axis; ``backend``/``backend_idx`` name the point's
     law backend (the backend axis defaults to the spec's single
-    ``backend``).
+    ``backend``); ``topo_idx`` is 0 when the spec has no topology axis
+    (the historical single-fabric layout).
     """
     index: int
     row: int
@@ -60,12 +69,19 @@ class SweepPoint(NamedTuple):
     sched_idx: int
     backend: str = "reference"
     backend_idx: int = 0
+    topo_idx: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """Declarative grid; see module docstring. ``laws`` entries are registry
     names or ``Law`` instances (e.g. a custom wrapper).
+
+    ``topologies`` adds a structural fabric axis: ``flows`` then nests
+    one Sequence[Flows] per topology (a compiled path only means
+    something on its own fabric). Without it, ``flows`` is the flat
+    historical Sequence[Flows] and the fabric is ``run_sweep``'s
+    ``topo`` argument.
 
     ``slots`` switches the grid onto the flow-slot streaming engine
     (DESIGN.md section 12): each scenario's flows are sorted into a
@@ -84,6 +100,7 @@ class SweepSpec:
     backend: str = "reference"
     slots: Optional[int] = None
     backends: Optional[Sequence[str]] = None
+    topologies: Optional[Sequence[Topology]] = None
 
     def __post_init__(self):
         if not self.laws or not self.flows or not self.law_cfg_overrides:
@@ -95,6 +112,29 @@ class SweepSpec:
             raise ValueError("slots must be None or >= 1")
         if self.backends is not None and not self.backends:
             raise ValueError("backends must be None or non-empty")
+        if self.topologies is not None:
+            if not self.topologies:
+                raise ValueError("topologies must be None or non-empty")
+            # NB: a bare truthiness check cannot catch un-nested flows —
+            # a Flows NamedTuple is itself a non-empty tuple (the trap
+            # benchmarks/common.py documents), so check the nesting
+            # explicitly
+            nested_ok = (len(self.flows) == len(self.topologies) and
+                         all(isinstance(g, (list, tuple)) and
+                             not isinstance(g, Flows) and len(g) > 0
+                             for g in self.flows))
+            if not nested_ok:
+                raise ValueError(
+                    "with a topology axis, flows must be one non-empty "
+                    "Sequence[Flows] per topology (flows[t] belongs to "
+                    "topologies[t]) — got un-nested or mismatched flows")
+
+    @property
+    def flow_groups(self) -> Sequence[Sequence[Flows]]:
+        """Per-topology scenario groups: ``flows`` nested one level when
+        the spec has a topology axis, else the single historical group."""
+        return (tuple(self.flows) if self.topologies is not None
+                else (tuple(self.flows),))
 
     @property
     def backend_axis(self) -> Sequence[str]:
@@ -115,21 +155,24 @@ def _law_name(law: Union[str, Law]) -> str:
 
 
 def expand(spec: SweepSpec) -> List[SweepPoint]:
-    """Expanded grid, law-major then backend-major (one contiguous run of
-    rows per compiled (law, backend) program)."""
+    """Expanded grid, topology-major then law-major then backend-major
+    (one contiguous run of rows per compiled (topology, law, backend)
+    program). ``flows_idx`` indexes into the point's own topology group
+    (``spec.flow_groups[topo_idx]``)."""
     pts: List[SweepPoint] = []
     scheds = (range(len(spec.schedules)) if spec.schedules is not None
               else (-1,))
-    for li, law in enumerate(spec.laws):
-        for bi, be in enumerate(spec.backend_axis):
-            row = 0
-            for fi in range(len(spec.flows)):
-                for oi in range(len(spec.law_cfg_overrides)):
-                    for si in scheds:
-                        pts.append(SweepPoint(len(pts), row, li,
-                                              _law_name(law), fi, oi, si,
-                                              be, bi))
-                        row += 1
+    for ti, group in enumerate(spec.flow_groups):
+        for li, law in enumerate(spec.laws):
+            for bi, be in enumerate(spec.backend_axis):
+                row = 0
+                for fi in range(len(group)):
+                    for oi in range(len(spec.law_cfg_overrides)):
+                        for si in scheds:
+                            pts.append(SweepPoint(len(pts), row, li,
+                                                  _law_name(law), fi, oi,
+                                                  si, be, bi, ti))
+                            row += 1
     return pts
 
 
@@ -143,20 +186,25 @@ class SweepResult(NamedTuple):
     """Per-program batched results plus the point list to index them.
 
     ``states``/``records`` are keyed by compiled-program group —
-    ``law_idx`` when the spec has no backend axis (the historical
-    layout), ``(law_idx, backend_idx)`` otherwise — and carry the
-    per-group batch axis; ``state(i)``/``record(i)`` slice out global
-    point ``i`` without the caller knowing the keying. Padded tail flows
-    of a point (beyond its scenario's real flow count) stay inert
-    (``fct``/``size`` infinite) — see ``fluid.pad_flows``.
+    ``law_idx`` when the spec has neither a backend nor a topology axis
+    (the historical layout), ``(law_idx, backend_idx)`` with a backend
+    axis only, ``(topo_idx, law_idx, backend_idx)`` with a topology
+    axis — and carry the per-group batch axis; ``state(i)``/
+    ``record(i)`` slice out global point ``i`` without the caller
+    knowing the keying. Padded tail flows of a point (beyond its
+    scenario's real flow count) stay inert (``fct``/``size`` infinite)
+    — see ``fluid.pad_flows``.
     """
     points: Tuple[SweepPoint, ...]
     states: Dict[object, object]
     records: Dict[object, object]
 
     def _key(self, p: SweepPoint):
-        return (p.law_idx if p.law_idx in self.states
-                else (p.law_idx, p.backend_idx))
+        if p.law_idx in self.states:
+            return p.law_idx
+        if (p.law_idx, p.backend_idx) in self.states:
+            return (p.law_idx, p.backend_idx)
+        return (p.topo_idx, p.law_idx, p.backend_idx)
 
     def state(self, i: int):
         p = self.points[i]
@@ -167,56 +215,78 @@ class SweepResult(NamedTuple):
         return tree_index(self.records[self._key(p)], p.row)
 
 
-def run_sweep(spec: SweepSpec, topo: Topology,
+def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
               cfg: Optional[SimConfig] = None, record: bool = True,
               devices=None) -> SweepResult:
     """Expand ``spec`` and run it: one compiled, batched (and, with
-    ``devices``, sharded) program per (law, backend) pair covering that
-    pair's whole slab of the grid. ``devices`` is forwarded to
-    ``simulate_batch``."""
-    points = expand(spec)
-    nmax = max(int(f.tau.shape[0]) for f in spec.flows)
-    padded = [pad_flows(f, nmax, topo.num_queues) for f in spec.flows]
-    # slot path: schedules are per-scenario sorted views of the padded
-    # flows, so per-flow LawConfig vectors derive from the SORTED metadata
-    scheds = ([make_schedule(f) for f in padded]
-              if spec.slots is not None else None)
+    ``devices``, sharded) program per (topology, law, backend) triple
+    covering that triple's whole slab of the grid. ``devices`` is
+    forwarded to ``simulate_batch``. Pass ``topo`` for single-fabric
+    specs (the historical form); with a ``topologies`` axis on the spec
+    the fabrics come from the spec itself and ``topo`` must be None.
+    """
+    if spec.topologies is not None:
+        if topo is not None:
+            raise ValueError("spec carries a topology axis; pass topo=None")
+        topos = list(spec.topologies)
+    else:
+        if topo is None:
+            raise ValueError("pass topo (or give the spec a topology axis)")
+        topos = [topo]
 
+    points = expand(spec)
     states: Dict[object, object] = {}
     records: Dict[object, object] = {}
-    for li, law in enumerate(spec.laws):
-        for bi, be in enumerate(spec.backend_axis):
-            # historical single-backend specs keep their law_idx keys
-            key = li if spec.backends is None else (li, bi)
-            rows = [p for p in points
-                    if p.law_idx == li and p.backend_idx == bi]
-            lcfgs = []
-            for p in rows:
-                kw = dict(spec.law_cfg_overrides[p.override_idx])
+    for ti, (topo_t, group) in enumerate(zip(topos, spec.flow_groups)):
+        nmax = max(int(f.tau.shape[0]) for f in group)
+        padded = [pad_flows(f, nmax, topo_t.num_queues) for f in group]
+        # slot path: schedules are per-scenario sorted views of the padded
+        # flows, so per-flow LawConfig vectors derive from the SORTED
+        # metadata
+        scheds = ([make_schedule(f) for f in padded]
+                  if spec.slots is not None else None)
+        for li, law in enumerate(spec.laws):
+            for bi, be in enumerate(spec.backend_axis):
+                # historical single-fabric specs keep their historical
+                # keys (law_idx, or (law_idx, backend_idx) with a
+                # backend axis); topology-axis specs always key by the
+                # full (topo, law, backend) triple
+                if spec.topologies is not None:
+                    key = (ti, li, bi)
+                else:
+                    key = li if spec.backends is None else (li, bi)
+                rows = [p for p in points
+                        if p.topo_idx == ti and p.law_idx == li
+                        and p.backend_idx == bi]
+                lcfgs = []
+                for p in rows:
+                    kw = dict(spec.law_cfg_overrides[p.override_idx])
+                    if spec.schedules is not None:
+                        kw.setdefault("sched",
+                                      spec.schedules[p.sched_idx].params())
+                    src = (scheds if scheds is not None
+                           else padded)[p.flows_idx]
+                    lcfgs.append(default_law_config(
+                        src, expected_flows=spec.expected_flows, **kw))
+                bw_fn = bw_params = None
                 if spec.schedules is not None:
-                    kw.setdefault("sched",
-                                  spec.schedules[p.sched_idx].params())
-                src = (scheds if scheds is not None
-                       else padded)[p.flows_idx]
-                lcfgs.append(default_law_config(
-                    src, expected_flows=spec.expected_flows, **kw))
-            bw_fn = bw_params = None
-            if spec.schedules is not None:
-                bw_fn = circuit_bw_at
-                bw_params = stack_schedules(
-                    [spec.schedules[p.sched_idx] for p in rows])
-            if spec.slots is not None:
-                sb = stack_flow_schedules(
-                    [scheds[p.flows_idx] for p in rows], topo.num_queues)
-                states[key], records[key] = simulate_slots_batch(
-                    topo, sb, law, spec.slots, stack_law_configs(lcfgs),
-                    cfg, bw_fn=bw_fn, bw_params=bw_params, record=record,
-                    backend=be, devices=devices)
-            else:
-                fb = stack_flows([padded[p.flows_idx] for p in rows],
-                                 topo.num_queues)
-                states[key], records[key] = simulate_batch(
-                    topo, fb, law, stack_law_configs(lcfgs), cfg,
-                    bw_fn=bw_fn, bw_params=bw_params, record=record,
-                    backend=be, devices=devices)
+                    bw_fn = circuit_bw_at
+                    bw_params = stack_schedules(
+                        [spec.schedules[p.sched_idx] for p in rows])
+                if spec.slots is not None:
+                    sb = stack_flow_schedules(
+                        [scheds[p.flows_idx] for p in rows],
+                        topo_t.num_queues)
+                    states[key], records[key] = simulate_slots_batch(
+                        topo_t, sb, law, spec.slots,
+                        stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
+                        bw_params=bw_params, record=record,
+                        backend=be, devices=devices)
+                else:
+                    fb = stack_flows([padded[p.flows_idx] for p in rows],
+                                     topo_t.num_queues)
+                    states[key], records[key] = simulate_batch(
+                        topo_t, fb, law, stack_law_configs(lcfgs), cfg,
+                        bw_fn=bw_fn, bw_params=bw_params, record=record,
+                        backend=be, devices=devices)
     return SweepResult(tuple(points), states, records)

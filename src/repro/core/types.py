@@ -41,7 +41,17 @@ class Topology(NamedTuple):
 
 
 class Flows(NamedTuple):
-    """Static per-flow description (F flows)."""
+    """Static per-flow description (F flows).
+
+    Hop-padding contract (variable-hop fabrics, DESIGN.md section 14):
+    H is a property of the batch, not the simulator — a fabric's routing
+    compiler emits the fabric-wide maximum hop count and every engine
+    consumes whatever H the batch carries. Real hops occupy a contiguous
+    prefix of ``path``; padding (queue id == num_queues, the sentinel)
+    appears only after the final real hop and carries ``tf_steps == 0``.
+    Batches with different H combine via ``pad_hops`` (``stack_flows``
+    hop-harmonizes automatically).
+    """
     path: jnp.ndarray               # [F, H] int32 queue ids; pad == num_queues
     tf_steps: jnp.ndarray           # [F, H] int32 forward delay (steps) to each hop
     rtt_steps: jnp.ndarray          # [F] int32 base round-trip feedback delay in steps
@@ -80,6 +90,31 @@ class FlowSchedule(NamedTuple):
     stop: jnp.ndarray               # [N] hard stop time (inf => none)
     weight: jnp.ndarray             # [N] additive-increase weight multiplier
     order: jnp.ndarray              # [N] int32 original Flows index (-1 = pad)
+
+
+def pad_hops(x, hops: int, pad_queue: int):
+    """Pad the hop axis of a ``Flows``/``FlowSchedule`` to ``hops``.
+
+    Appends sentinel hops (queue id ``pad_queue`` == num_queues, forward
+    delay 0 — the compiler's padding convention) after the final real
+    hop of every flow, so batches compiled on fabrics with different
+    path depths stack into one engine program. Works on batched leaves
+    too (the hop axis is last).
+    """
+    H = int(x.path.shape[-1])
+    if H == hops:
+        return x
+    if H > hops:
+        raise ValueError(f"cannot shrink hop axis {H} -> {hops}")
+    add = hops - H
+
+    def cat(a, fill):
+        a = jnp.asarray(a)
+        pad = jnp.full(a.shape[:-1] + (add,), fill, a.dtype)
+        return jnp.concatenate([a, pad], axis=-1)
+
+    return x._replace(path=cat(x.path, pad_queue),
+                      tf_steps=cat(x.tf_steps, 0))
 
 
 class PathObs(NamedTuple):

@@ -1,5 +1,15 @@
-"""Traffic generation: web-search flow sizes, Poisson arrivals, incast, and a
-receiver-driven (HOMA-like) grant allocator.
+"""Traffic generation: web-search flow sizes, Poisson arrivals, incast
+(single-shot and repeated bursts), permutation and all-to-all matrices,
+and a receiver-driven (HOMA-like) grant allocator.
+
+Every generator takes a *fabric* — any object speaking the fabric
+protocol shared by the ``LeafSpine`` facade and the routing compiler's
+``FabricRoutes`` (``core.fabric``): ``n_hosts``, ``host_group()`` (the
+rack/edge attachment used for cross-group constraints),
+``load_capacity()`` (the offered-load byte-rate base) and
+``make_flows(src, dst, sizes, starts, sim_dt, seed=...)`` (deterministic
+ECMP path compilation). The same Poisson web-search trace therefore runs
+unchanged on a leaf-spine, a multi-spine leaf-spine or a fat-tree.
 
 The web-search distribution is a piecewise log-linear approximation of the
 flow-size CDF of Alizadeh et al. (DCTCP, SIGCOMM'10) as commonly re-used by
@@ -9,13 +19,13 @@ in DESIGN.md section 9.)
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .network import LeafSpine, make_schedule
+from .network import LeafSpine, make_schedule  # noqa: F401 (re-export)
 from .types import Flows, FlowSchedule, KB, MB
 
 # (size_bytes, cdf) anchor points
@@ -48,16 +58,23 @@ def websearch_sample(rng: np.random.Generator, n: int) -> np.ndarray:
     return np.exp(np.interp(u, c, np.log(s))).astype(np.float64)
 
 
-def poisson_websearch(fabric: LeafSpine, load: float, duration: float,
+def _groups(fabric) -> np.ndarray:
+    """[n_hosts] cross-group key (rack / edge attachment)."""
+    return np.asarray(fabric.host_group())
+
+
+def poisson_websearch(fabric, load: float, duration: float,
                       sim_dt: float, seed: int = 0,
                       cross_rack_only: bool = True) -> Flows:
     """Poisson flow arrivals sized by the web-search CDF.
 
-    ``load`` is the average utilization of the ToR uplinks (as in the paper):
-    arrival byte-rate = load * racks * spines * fabric_bw.
+    ``load`` scales ``fabric.load_capacity()`` — the aggregate uplink
+    bandwidth on oversubscribed fabrics (the paper's definition), the
+    hosts' injection capacity on non-blocking ones (fat-tree):
+    arrival byte-rate = load * load_capacity.
     """
     rng = np.random.default_rng(seed)
-    cap = fabric.racks * fabric.spines * fabric.fabric_bw
+    cap = fabric.load_capacity()
     lam = load * cap / websearch_mean()          # flows per second
     n = max(int(lam * duration * 1.2) + 16, 16)
     inter = rng.exponential(1.0 / lam, size=n)
@@ -68,30 +85,78 @@ def poisson_websearch(fabric: LeafSpine, load: float, duration: float,
     sizes = websearch_sample(rng, n)
     nh = fabric.n_hosts
     src = rng.integers(0, nh, size=n)
+    dst = rng.integers(0, nh, size=n)
     if cross_rack_only:
-        # re-draw destinations until cross-rack (vectorized best effort)
-        dst = rng.integers(0, nh, size=n)
-        H = fabric.hosts_per_rack
+        # re-draw destinations until cross-group (vectorized best effort)
+        grp = _groups(fabric)
         for _ in range(8):
-            same = (src // H) == (dst // H)
+            same = grp[src] == grp[dst]
             if not same.any():
                 break
             dst[same] = rng.integers(0, nh, size=int(same.sum()))
-    else:
-        dst = rng.integers(0, nh, size=n)
-    return fabric.make_flows(src, dst, sizes, starts, sim_dt, rng=rng)
+    # the routing compiler (rightly) refuses src == dst — a flow to self
+    # is not a network flow; shift any leftover self-pair to a neighbour
+    # (the legacy builder silently routed it to the host's own downlink)
+    dst = np.where(dst == src, (dst + 1) % nh, dst)
+    return fabric.make_flows(src, dst, sizes, starts, sim_dt, seed=seed)
 
 
-def incast_flows(fabric: LeafSpine, fan_in: int, req_bytes: float,
+def permutation_traffic(fabric, load: float, duration: float,
+                        sim_dt: float, seed: int = 0,
+                        cross_rack_only: bool = True) -> Flows:
+    """Poisson web-search arrivals over a fixed random permutation matrix.
+
+    A classic fabric stress pattern (each host talks to exactly one
+    other host, so per-pair ECMP polarization shows immediately): one
+    derangement ``perm`` is drawn per seed, senders arrive Poisson at
+    ``load * load_capacity()`` total byte-rate, and every flow from host
+    ``s`` goes to ``perm[s]``. With ``cross_rack_only`` the permutation
+    is re-drawn (best effort) until no host maps inside its own group.
+    """
+    rng = np.random.default_rng(seed)
+    nh = fabric.n_hosts
+    grp = _groups(fabric)
+    perm = rng.permutation(nh)
+    for _ in range(64):
+        bad = perm == np.arange(nh)
+        if cross_rack_only:
+            bad |= grp[perm] == grp
+        if not bad.any():
+            break
+        if bad.sum() == 1:
+            # a lone offender swaps with any other host (keeps perm a
+            # permutation; the swap partner's new target is cross-group
+            # with overwhelming probability, rechecked next iteration)
+            i = int(bad.nonzero()[0][0])
+            j = int(rng.integers(0, nh))
+            perm[[i, j]] = perm[[j, i]]
+        else:
+            # cyclic shift among the offenders fixes most of them at once
+            idx = bad.nonzero()[0]
+            perm[idx] = perm[np.roll(idx, 1)]
+    cap = fabric.load_capacity()
+    lam = load * cap / websearch_mean()
+    n = max(int(lam * duration * 1.2) + 16, 16)
+    starts = np.cumsum(rng.exponential(1.0 / lam, size=n))
+    starts = starts[starts < duration]
+    n = len(starts)
+    sizes = websearch_sample(rng, n)
+    src = rng.integers(0, nh, size=n)
+    dst = perm[src]
+    return fabric.make_flows(src, dst, sizes, starts, sim_dt, seed=seed)
+
+
+def incast_flows(fabric, fan_in: int, req_bytes: float,
                  sim_dt: float, victim: int = 0, start: float = 0.0,
                  long_flow: bool = True, seed: int = 0) -> Tuple[Flows, int]:
-    """``fan_in`` senders (cross-rack, distinct hosts) respond simultaneously
-    to ``victim``; optionally a pre-existing long-lived flow to the same
-    victim (paper Fig. 4 setup). Returns (flows, bottleneck_queue_id)."""
+    """``fan_in`` senders (cross-group, distinct hosts) respond
+    simultaneously to ``victim``; optionally a pre-existing long-lived
+    flow to the same victim (paper Fig. 4 setup). Returns
+    (flows, bottleneck_queue_id)."""
     rng = np.random.default_rng(seed)
-    H = fabric.hosts_per_rack
+    grp = _groups(fabric)
     nh = fabric.n_hosts
-    others = np.array([h for h in range(nh) if h // H != victim // H])
+    others = np.nonzero(grp != grp[victim])[0]
     senders = rng.choice(others, size=fan_in, replace=fan_in > len(others))
     src = senders
     dst = np.full(fan_in, victim)
@@ -105,27 +170,81 @@ def incast_flows(fabric: LeafSpine, fan_in: int, req_bytes: float,
         sizes = np.concatenate([[np.inf], sizes])
         starts = np.concatenate([[-1.0], starts])   # running before incast
     flows = fabric.make_flows(src.astype(np.int64), dst.astype(np.int64),
-                              sizes, starts, sim_dt, rng=rng)
-    bq = fabric.host_down_queue(victim // H, victim % H)
+                              sizes, starts, sim_dt, seed=seed)
+    bq = fabric.host_ingress_queue(victim)
     return flows, bq
 
 
-def synthetic_incast_workload(fabric: LeafSpine, request_rate: float,
+def incast_burst(fabric, fan_in: int, req_bytes: float, n_bursts: int,
+                 period: float, sim_dt: float, seed: int = 0,
+                 start: float = 0.0,
+                 rotate_victims: bool = True) -> Tuple[Flows, List[int]]:
+    """Repeated synchronized incast bursts (the Pulser-style workload).
+
+    Burst ``k`` fires at ``start + k * period``: a victim (rotating
+    round-robin across hosts by default, or fixed with
+    ``rotate_victims=False``) receives ``req_bytes`` from each of
+    ``fan_in`` distinct cross-group senders simultaneously — the
+    microburst pattern that motivates sub-RTT reaction in the paper's
+    related work. Returns (flows, victim ingress queue per burst).
+    """
+    rng = np.random.default_rng(seed)
+    grp = _groups(fabric)
+    nh = fabric.n_hosts
+    src_l, dst_l, sz_l, st_l, bqs = [], [], [], [], []
+    for k in range(n_bursts):
+        victim = int((k * max(nh // max(n_bursts, 1), 1)) % nh) \
+            if rotate_victims else 0
+        others = np.nonzero(grp != grp[victim])[0]
+        senders = rng.choice(others, size=fan_in,
+                             replace=fan_in > len(others))
+        src_l.append(senders)
+        dst_l.append(np.full(fan_in, victim))
+        sz_l.append(np.full(fan_in, req_bytes))
+        st_l.append(np.full(fan_in, start + k * period))
+        bqs.append(fabric.host_ingress_queue(victim))
+    flows = fabric.make_flows(np.concatenate(src_l).astype(np.int64),
+                              np.concatenate(dst_l).astype(np.int64),
+                              np.concatenate(sz_l), np.concatenate(st_l),
+                              sim_dt, seed=seed)
+    return flows, bqs
+
+
+def all_to_all_flows(fabric, bytes_per_pair: float, sim_dt: float,
+                     start: float = 0.0, stagger: float = 0.0,
+                     seed: int = 0) -> Flows:
+    """Every ordered host pair exchanges ``bytes_per_pair`` (shuffle /
+    collective-style matrix). ``stagger`` > 0 jitters starts uniformly
+    in [0, stagger) to avoid a perfectly synchronized step. Quadratic in
+    ``n_hosts`` — intended for small fabrics (k=4 fat-tree: 240 pairs).
+    """
+    rng = np.random.default_rng(seed)
+    nh = fabric.n_hosts
+    src, dst = np.nonzero(~np.eye(nh, dtype=bool))
+    n = len(src)
+    starts = np.full(n, start)
+    if stagger > 0:
+        starts = starts + rng.uniform(0.0, stagger, size=n)
+    return fabric.make_flows(src, dst, np.full(n, bytes_per_pair), starts,
+                             sim_dt, seed=seed)
+
+
+def synthetic_incast_workload(fabric, request_rate: float,
                               req_bytes: float, duration: float,
                               sim_dt: float, seed: int = 0) -> Flows:
-    """Distributed-file-system style workload (paper section 4.1): each request
-    picks a victim and a set of servers in other racks which all respond
-    simultaneously with req_bytes/fan_in each."""
+    """Distributed-file-system style workload (paper section 4.1): each
+    request picks a victim and a set of servers in other groups which all
+    respond simultaneously with req_bytes/fan_in each."""
     rng = np.random.default_rng(seed)
     fan_in = 16
     n_req = max(int(request_rate * duration), 1)
     req_t = np.sort(rng.uniform(0, duration, size=n_req))
     src_l, dst_l, sz_l, st_l = [], [], [], []
-    H = fabric.hosts_per_rack
+    grp = _groups(fabric)
     nh = fabric.n_hosts
     for t in req_t:
         victim = rng.integers(0, nh)
-        others = np.array([h for h in range(nh) if h // H != victim // H])
+        others = np.nonzero(grp != grp[victim])[0]
         senders = rng.choice(others, size=fan_in, replace=False)
         src_l.append(senders)
         dst_l.append(np.full(fan_in, victim))
@@ -133,10 +252,10 @@ def synthetic_incast_workload(fabric: LeafSpine, request_rate: float,
         st_l.append(np.full(fan_in, t))
     return fabric.make_flows(np.concatenate(src_l), np.concatenate(dst_l),
                              np.concatenate(sz_l), np.concatenate(st_l),
-                             sim_dt, rng=rng)
+                             sim_dt, seed=seed)
 
 
-def poisson_websearch_schedule(fabric: LeafSpine, load: float,
+def poisson_websearch_schedule(fabric, load: float,
                                duration: float, sim_dt: float, seed: int = 0,
                                cross_rack_only: bool = True) -> FlowSchedule:
     """``poisson_websearch`` emitted directly as a time-sorted

@@ -29,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from jax.experimental import pallas as pl
 
@@ -37,6 +38,12 @@ def _pin(x):
     """Identity optimization barrier (see ``core.laws._pin``; duplicated
     here so kernels stay importable without the core package)."""
     return jax.lax.optimization_barrier(x)
+
+
+def _nofma(x):
+    """FMA-contraction blocker (see ``core.laws._nofma``; duplicated for
+    the same importability reason)."""
+    return jnp.maximum(x, jnp.float32(-3e38))
 
 
 def ordered_scatter_add(zero: jnp.ndarray, idx: jnp.ndarray,
@@ -66,6 +73,33 @@ def ordered_scatter_add(zero: jnp.ndarray, idx: jnp.ndarray,
     for i in range(rows):
         acc = acc + jnp.where(qidx == idx[i], vals[i], 0.0)
     return acc
+
+
+def suggest_maxdeg(path, num_queues: int, slots: int, cap: int = 64,
+                   default: int = 32) -> int:
+    """Static CSR width for ``build_csr_gather`` from a compiled path set.
+
+    The true per-tick degree of a queue is bounded by BOTH the pool size
+    (at most ``slots`` flows are concurrently resident) and the static
+    degree of the whole schedule's hop table (a queue no flow in the
+    schedule ever traverses twice cannot exceed its static count — on a
+    routed fabric the victim downlink of an incast burst has degree
+    exactly fan-in + 1, and a lightly-shared fat-tree core queue far
+    less than S). Sizing the CSR to that bound keeps the unrolled
+    column adds short AND avoids the per-tick scatter fallback the old
+    fixed width forced whenever a hot queue's degree crossed it.
+
+    Degrees beyond ``cap`` would unroll into more straight-line adds
+    than they save, so those fabrics keep the historical ``default``
+    width and rely on the (bit-identical) runtime overflow fallback.
+    """
+    flat = np.asarray(path).reshape(-1)
+    flat = flat[(flat >= 0) & (flat < num_queues)]
+    d = int(np.bincount(flat, minlength=1).max()) if flat.size else 1
+    d = max(d, 1)
+    if d > cap:
+        d = default
+    return max(1, min(d, int(slots)))
 
 
 def build_csr_gather(path: jnp.ndarray, num_queues: int, maxdeg: int):
@@ -130,11 +164,11 @@ def csr_gather_arrivals(contrib: jnp.ndarray, inv: jnp.ndarray,
 def integrate_arrivals(arr: jnp.ndarray, q: jnp.ndarray, bw: jnp.ndarray,
                        caps: jnp.ndarray, *, dt: float):
     """The fluid-queue integration step shared by every sparse queue
-    form: mirrors ``fluid._queue_update`` exactly, pins included (the
-    barrier keeps program variants from contracting the integration into
-    an FMA, which would break cross-engine bit-equality). Returns
-    (out, q_new)."""
-    q_new = jnp.clip(q + _pin((arr - bw) * dt), 0.0, caps)
+    form: mirrors ``fluid._queue_update`` exactly, pins and contraction
+    blockers included (the barrier stops XLA rewrites, the ``_nofma``
+    stops LLVM from contracting the integration into an FMA — either
+    would break cross-engine bit-equality). Returns (out, q_new)."""
+    q_new = jnp.clip(q + _nofma(_pin((arr - bw) * dt)), 0.0, caps)
     out = jnp.where(q > 0.0, bw, jnp.minimum(arr, bw))
     return out, q_new.at[-1].set(0.0)
 

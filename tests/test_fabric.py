@@ -1,0 +1,358 @@
+"""Fabric-graph routing compiler (DESIGN.md section 14).
+
+Migration anchors: the compiled ``single_bottleneck`` and ``leaf_spine``
+must reproduce the legacy hand-built topologies and per-flow arithmetic
+BIT-FOR-BIT (paths, forward-delay steps, RTT steps, taus). Deterministic
+ECMP must be reproducible across processes (no global-RNG order
+dependence). Fat-tree paths (1/3/5 queued hops, (k/2)^2-way inter-pod
+ECMP) must run on all three engines — padded, flow-slot stream, and
+megakernel — with the PR-3/PR-4 bit-for-bit exactness discipline
+holding on >= 4-hop paths, web-search and incast-burst workloads alike.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, SimConfig, all_to_all_flows,
+                        compile_routes, default_law_config, ecmp_hash,
+                        fat_tree, incast_burst, incast_flows,
+                        leaf_spine_fabric, make_flows_single, make_schedule,
+                        pad_hops, permutation_traffic, poisson_websearch,
+                        schedule_as_flows, simulate, simulate_slots,
+                        single_bottleneck, single_bottleneck_fabric,
+                        stack_flows)
+from repro.core.network import LeafSpine
+
+DT = 1e-6
+
+
+# -------------------------------------------------------------------------
+# migration anchors: the legacy builders as compiler instances
+# -------------------------------------------------------------------------
+
+def test_single_bottleneck_topology_and_flows_bit_exact():
+    B = 25 * GBPS
+    fab = single_bottleneck_fabric(bandwidth=B, buffer=6e6, tau=20 * US,
+                                   dt_alpha=0.0)
+    t_new = fab.topology()
+    t_old = single_bottleneck(bandwidth=B, buffer=6e6)
+    for f in t_old._fields:
+        a, b = getattr(t_old, f), getattr(t_new, f)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f
+
+    routes = compile_routes(fab)
+    n = 6
+    sizes = np.linspace(1e5, 5e5, n)
+    starts = np.linspace(0, 1e-4, n)
+    fl_new = routes.make_flows(np.zeros(n, int), np.ones(n, int), sizes,
+                               starts, DT)
+    fl_old = make_flows_single(n, tau=20 * US, nic=B, sizes=sizes,
+                               starts=starts, sim_dt=DT)
+    for f in fl_old._fields:
+        assert np.array_equal(np.asarray(getattr(fl_old, f)),
+                              np.asarray(getattr(fl_new, f))), f
+
+
+@pytest.mark.parametrize("R,H,S", [(4, 16, 1), (2, 8, 1), (8, 32, 2)])
+def test_leaf_spine_compiles_to_legacy_paths(R, H, S):
+    """The compiled leaf-spine reproduces the legacy hand-rolled path
+    arithmetic bit-for-bit: queue blocks, per-hop forward delays, RTT
+    steps and taus. The legacy formulas are replicated here verbatim
+    (the one sanctioned change: the spine pick is the deterministic
+    ECMP choice, not a hidden RNG draw — with S == 1 both are 0 and the
+    equality also covers the pre-refactor builder output exactly)."""
+    ls = LeafSpine(racks=R, hosts_per_rack=H, spines=S)
+    routes = ls.routes()
+    rng = np.random.default_rng(7)
+    n = 300
+    src = rng.integers(0, ls.n_hosts, n)
+    dst = rng.integers(0, ls.n_hosts, n)
+    dst = np.where(dst == src, (dst + 1) % ls.n_hosts, dst)
+    sizes = rng.uniform(1e4, 1e6, n)
+    starts = rng.uniform(0, 1e-3, n)
+    fl = ls.make_flows(src, dst, sizes, starts, DT)
+    _, _, _, spine = routes.select(src, dst)
+    assert ((0 <= spine) & (spine < S)).all()
+
+    r1, r2, h2 = src // H, dst // H, dst % H
+    PAD = ls.num_queues
+    same = r1 == r2
+    up = r1 * S + spine
+    down = R * S + spine * R + r2
+    host = 2 * R * S + r2 * H + h2
+    opath = np.stack([np.where(same, host, up), np.where(same, PAD, down),
+                      np.where(same, PAD, host)], 1).astype(np.int32)
+    d1 = np.full(n, ls.d_host)
+    d2 = np.where(same, 0.0, ls.d_host + ls.d_fabric)
+    d3 = np.where(same, 0.0, ls.d_host + 2 * ls.d_fabric)
+    otf = np.round(np.stack([d1, d2, d3], 1) / DT).astype(np.int32)
+    ortt = np.where(same, 4 * ls.d_host,
+                    2 * (2 * ls.d_host + 2 * ls.d_fabric))
+    assert np.array_equal(np.asarray(fl.path), opath)
+    assert np.array_equal(np.asarray(fl.tf_steps), otf)
+    assert np.array_equal(np.asarray(fl.rtt_steps),
+                          np.maximum(np.round(ortt / DT), 1).astype(np.int32))
+    assert np.array_equal(np.asarray(fl.tau), ortt.astype(np.float32))
+
+    # topology emitted by the compiler == the legacy queue layout
+    fab = leaf_spine_fabric(racks=R, hosts_per_rack=H, spines=S)
+    t = fab.topology()
+    assert t.num_queues == 2 * R * S + R * H
+    assert int(t.switch_of_queue[0]) == 0                  # up[0,0] on ToR 0
+    assert int(t.switch_of_queue[R * S]) == R              # down[0,0] on spine
+    assert ls.host_ingress_queue(ls.n_hosts - 1) == t.num_queues - 1
+
+
+def test_legacy_rng_argument_is_inert():
+    """``rng=`` is still accepted but no longer consulted: the same
+    flows compile identically whatever generator (or None) is passed."""
+    ls = LeafSpine(racks=2, hosts_per_rack=4, spines=3)
+    src = np.arange(8)
+    dst = (src + 4) % 8
+    a = ls.make_flows(src, dst, np.full(8, 1e5), np.zeros(8), DT,
+                      rng=np.random.default_rng(0))
+    b = ls.make_flows(src, dst, np.full(8, 1e5), np.zeros(8), DT,
+                      rng=np.random.default_rng(12345))
+    c = ls.make_flows(src, dst, np.full(8, 1e5), np.zeros(8), DT)
+    for f in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(c, f)))
+
+
+# -------------------------------------------------------------------------
+# deterministic ECMP
+# -------------------------------------------------------------------------
+
+_SUBPROCESS_SNIPPET = """
+import json, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.core import fat_tree
+ft = fat_tree(4)
+src = np.arange(48) % ft.n_hosts
+dst = (np.arange(48) * 5 + 1) % ft.n_hosts
+dst = np.where(dst == src, (dst + 1) % ft.n_hosts, dst)
+fl = ft.make_flows(src, dst, np.full(48, 1e5), np.zeros(48), 1e-6, seed=9)
+print(json.dumps(np.asarray(fl.path).tolist()))
+"""
+
+
+def test_ecmp_paths_reproduce_across_processes():
+    """The same schedule compiles to the same paths in fresh interpreter
+    processes (different PYTHONHASHSEEDs): no hidden global-RNG or hash
+    order dependence anywhere in path compilation."""
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _SUBPROCESS_SNIPPET.format(src=os.path.abspath(src_dir))
+    outs = []
+    for hashseed in ("0", "424242"):
+        env = {**os.environ, "PYTHONHASHSEED": hashseed}
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, check=True)
+        outs.append(json.loads(r.stdout))
+    assert outs[0] == outs[1]
+    # and the parent process agrees too
+    from repro.core import fat_tree as ft_builder
+    ft = ft_builder(4)
+    src = np.arange(48) % ft.n_hosts
+    dst = (np.arange(48) * 5 + 1) % ft.n_hosts
+    dst = np.where(dst == src, (dst + 1) % ft.n_hosts, dst)
+    fl = ft.make_flows(src, dst, np.full(48, 1e5), np.zeros(48), DT, seed=9)
+    assert np.asarray(fl.path).tolist() == outs[0]
+
+
+def test_ecmp_hash_seedable_and_balanced():
+    n = 20000
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 128, n)
+    dst = rng.integers(0, 128, n)
+    fid = np.arange(n)
+    a = ecmp_hash(src, dst, fid, 0)
+    assert (a == ecmp_hash(src, dst, fid, 0)).all()
+    assert (a != ecmp_hash(src, dst, fid, 1)).any()
+    for P in (2, 4, 16):
+        h = np.bincount((a % np.uint64(P)).astype(int), minlength=P)
+        assert h.max() - h.min() < 0.1 * n / P    # well balanced
+
+
+# -------------------------------------------------------------------------
+# fat-tree structure
+# -------------------------------------------------------------------------
+
+def test_fat_tree_path_structure():
+    ft = fat_tree(4)
+    assert ft.n_hosts == 16
+    assert ft.num_queues == 80          # 5 blocks of 16
+    assert ft.H == 5
+    # same-edge pair: single host-downlink hop
+    p = ft.paths(0, 1)
+    assert (p.n_hops == 1).all()
+    # intra-pod, cross-edge: 3 hops, k/2 = 2 ECMP choices
+    p = ft.paths(0, 2)
+    assert (p.n_hops == 3).all() and len(p.links) == 2
+    # inter-pod: 5 hops, (k/2)^2 = 4 ECMP choices
+    p = ft.paths(0, ft.n_hosts - 1)
+    assert (p.n_hops == 5).all() and len(p.links) == 4
+    # RTT = 2 * (2 host links + 4 fabric links)
+    np.testing.assert_allclose(p.rtt, 2 * (2 * 1e-6 + 4 * 5e-6))
+    # pads strictly after the final hop, pad delay 0
+    assert (p.queues[:, :5] < ft.num_queues).all()
+    assert (p.tf[:, 1:] > p.tf[:, :-1]).all()   # fwd delays increase
+
+
+def test_fat_tree_k8_scale():
+    ft = fat_tree(8)
+    assert ft.n_hosts == 128
+    assert ft.H == 5
+    p = ft.paths(0, ft.n_hosts - 1)
+    assert len(p.links) == 16           # (k/2)^2 inter-pod ECMP paths
+
+
+# -------------------------------------------------------------------------
+# engines: >= 4-hop bit-for-bit exactness anchors
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", ["powertcp", "timely"])
+def test_fat_tree_three_engines_bitmatch_websearch(law):
+    """Web-search on the k=4 fat-tree (5-hop ECMP paths): the padded
+    reference, the S >= N flow-slot stream, and the megakernel must
+    produce BIT-IDENTICAL queue traces, FCT vectors and windows."""
+    ft = fat_tree(4)
+    topo = ft.topology()
+    flows = poisson_websearch(ft, 0.25, 0.003, DT, seed=3)
+    n = int(flows.tau.shape[0])
+    sched = make_schedule(flows)
+    assert int(np.max(np.sum(np.asarray(sched.path) < ft.num_queues,
+                             axis=1))) == 5
+    cfg = SimConfig(dt=DT, steps=6000, hist=512, update_period=2e-6)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg)
+    st_s, rec_s = simulate_slots(topo, sched, law, n + 4, lcfg, cfg)
+    st_m, rec_m = simulate_slots(topo, sched, law, n + 4, lcfg, cfg,
+                                 backend="megakernel")
+    assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+    assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_s.w[:n]), np.asarray(st_p.w))
+    assert np.array_equal(np.asarray(rec_m.q), np.asarray(rec_s.q))
+    assert np.array_equal(np.asarray(st_m.fct), np.asarray(st_s.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_m.w), np.asarray(st_s.w))
+    assert np.array_equal(np.asarray(rec_m.lam_f), np.asarray(rec_s.lam_f))
+
+
+def test_fat_tree_three_engines_bitmatch_incast_burst():
+    """Repeated incast bursts on the fat-tree: same three-engine
+    bit-identity, plus S < N slot recycling on the megakernel."""
+    ft = fat_tree(4)
+    topo = ft.topology()
+    flows, bqs = incast_burst(ft, fan_in=8, req_bytes=2e5, n_bursts=2,
+                              period=2e-3, sim_dt=DT, seed=1)
+    sched = make_schedule(flows)
+    n = int(sched.start.shape[0])
+    cfg = SimConfig(dt=DT, steps=7000, hist=512, update_period=2e-6)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), "powertcp",
+                           lcfg, cfg)
+    st_s, rec_s = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg)
+    st_m, rec_m = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg,
+                                 backend="megakernel")
+    assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+    assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(rec_m.q), np.asarray(rec_s.q))
+    assert np.array_equal(np.asarray(st_m.fct), np.asarray(st_s.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_m.w), np.asarray(st_s.w))
+    assert bool(np.isfinite(np.asarray(st_s.fct)).all())
+    # bursts actually hit their victims' downlinks
+    assert max(float(np.asarray(rec_s.q)[:, b].max()) for b in bqs) > 1e4
+    # S < N: recycled pool, FCT set still bit-identical across backends
+    st_r, _ = simulate_slots(topo, sched, "powertcp", 10, lcfg, cfg,
+                             record=False)
+    st_rm, _ = simulate_slots(topo, sched, "powertcp", 10, lcfg, cfg,
+                              record=False, backend="megakernel")
+    assert np.array_equal(np.asarray(st_rm.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+
+
+# -------------------------------------------------------------------------
+# workloads on compiled fabrics + hop padding
+# -------------------------------------------------------------------------
+
+def test_workloads_generalize_to_fat_tree():
+    ft = fat_tree(4)
+    grp = ft.host_group()
+    fl = poisson_websearch(ft, 0.3, 0.002, DT, seed=0)
+    assert int(fl.tau.shape[0]) > 0
+    p = np.asarray(fl.path)
+    assert ((p >= 0) & (p <= ft.num_queues)).all()
+
+    fl = permutation_traffic(ft, 0.3, 0.002, DT, seed=0)
+    assert int(fl.tau.shape[0]) > 0
+
+    fl, bq = incast_flows(ft, fan_in=6, req_bytes=1e5, sim_dt=DT)
+    assert 0 <= bq < ft.num_queues
+
+    fl = all_to_all_flows(ft, 1e4, DT, stagger=1e-4)
+    assert int(fl.tau.shape[0]) == ft.n_hosts * (ft.n_hosts - 1)
+
+
+def test_pad_hops_and_mixed_hop_stacking():
+    """Scenarios with different hop depths stack into one batch: the
+    shallow one is hop-padded with sentinel hops after its final hop."""
+    ft = fat_tree(4)
+    ls = LeafSpine(racks=2, hosts_per_rack=4)
+    deep = poisson_websearch(ft, 0.3, 0.001, DT, seed=0)      # H = 5
+    shallow = poisson_websearch(ls, 0.3, 0.001, DT, seed=0)   # H = 3
+    assert deep.path.shape[1] == 5 and shallow.path.shape[1] == 3
+    padded = pad_hops(shallow, 5, ls.num_queues)
+    assert padded.path.shape[1] == 5
+    assert (np.asarray(padded.path)[:, 3:] == ls.num_queues).all()
+    assert (np.asarray(padded.tf_steps)[:, 3:] == 0).all()
+    with pytest.raises(ValueError):
+        pad_hops(deep, 3, ft.num_queues)
+    # stack_flows hop-harmonizes automatically (same-fabric semantics
+    # require one topology; here we only check the shape contract)
+    stacked = stack_flows([pad_hops(shallow, 5, ls.num_queues),
+                           pad_hops(shallow, 5, ls.num_queues)],
+                          ls.num_queues)
+    assert stacked.path.shape[-1] == 5
+
+
+def test_hop_padded_flows_simulate_identically():
+    """Sentinel hop padding is inert: a 3-hop leaf-spine scenario padded
+    to H=5 produces bit-identical trajectories."""
+    ls = LeafSpine(racks=2, hosts_per_rack=4)
+    topo = ls.topology()
+    flows = poisson_websearch(ls, 0.4, 0.002, DT, seed=2)
+    cfg = SimConfig(dt=DT, steps=3000, hist=256, update_period=2e-6)
+    lcfg = default_law_config(flows, expected_flows=8.0)
+    st_a, rec_a = simulate(topo, flows, "powertcp", lcfg, cfg)
+    st_b, rec_b = simulate(topo, pad_hops(flows, 5, ls.num_queues),
+                           "powertcp", lcfg, cfg)
+    assert np.array_equal(np.asarray(rec_a.q), np.asarray(rec_b.q))
+    assert np.array_equal(np.asarray(st_a.fct), np.asarray(st_b.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_a.w), np.asarray(st_b.w))
+
+
+def test_suggest_maxdeg_from_compiled_paths():
+    from repro.kernels.queue_arrivals import suggest_maxdeg
+    ft = fat_tree(4)
+    flows, _ = incast_burst(ft, fan_in=8, req_bytes=1e5, n_bursts=1,
+                            period=1e-3, sim_dt=DT)
+    path = np.asarray(flows.path)
+    md = suggest_maxdeg(path, ft.num_queues, slots=32)
+    # victim downlink degree == fan_in -> CSR sized to cover it
+    deg = np.bincount(path[path < ft.num_queues].reshape(-1))
+    assert md == min(32, int(deg.max()))
+    # degrees beyond the unroll cap fall back to the historical width
+    wide = np.zeros((200, 1), np.int32)
+    assert suggest_maxdeg(wide, 4, slots=256) == 32
+    assert suggest_maxdeg(wide, 4, slots=8) == 8

@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) for the fabric routing compiler
+(DESIGN.md section 14).
+
+For any fabric the compiler can express, every compiled path must
+reference existing queues, pad strictly after its final hop, carry
+strictly increasing forward delays along real hops, and have an RTT of
+exactly twice the summed propagation delays of its link path.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — `pip install hypothesis` "
+           "(CI installs it from requirements.txt, so these run in CI)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (GBPS, US, compile_routes, fat_tree,  # noqa: E402
+                        leaf_spine_fabric)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@st.composite
+def fabrics(draw):
+    """A compiled fabric: leaf-spine with sampled shape/delays, or the
+    k=4 fat-tree with sampled delays."""
+    kind = draw(st.sampled_from(["leaf_spine", "fat_tree"]))
+    d_host = draw(st.sampled_from([0.5 * US, 1 * US, 2 * US]))
+    d_fabric = draw(st.sampled_from([2 * US, 5 * US, 7 * US]))
+    if kind == "leaf_spine":
+        fab = leaf_spine_fabric(
+            racks=draw(st.integers(2, 4)),
+            hosts_per_rack=draw(st.integers(2, 4)),
+            spines=draw(st.integers(1, 3)),
+            d_host=d_host, d_fabric=d_fabric)
+        return compile_routes(fab, seed=draw(st.integers(0, 100)))
+    return fat_tree(4, d_host=d_host, d_fabric=d_fabric,
+                    seed=draw(st.integers(0, 100)))
+
+
+@settings(**SETTINGS)
+@given(routes=fabrics(), data=st.data())
+def test_compiled_paths_reference_real_queues_and_pad_after_final_hop(
+        routes, data):
+    f = routes.fabric
+    s = data.draw(st.integers(0, f.n_hosts - 1))
+    d = data.draw(st.integers(0, f.n_hosts - 1))
+    if s == d:
+        d = (d + 1) % f.n_hosts
+    cp = routes.paths(s, d)
+    assert len(cp.links) >= 1
+    for p in range(len(cp.links)):
+        h = int(cp.n_hops[p])
+        assert 1 <= h <= routes.H
+        # real hops reference existing queues...
+        assert (cp.queues[p, :h] >= 0).all()
+        assert (cp.queues[p, :h] < f.num_queues).all()
+        # ...and padding appears only after the final hop
+        assert (cp.queues[p, h:] == f.num_queues).all()
+        assert (cp.tf[p, h:] == 0.0).all()
+
+
+@settings(**SETTINGS)
+@given(routes=fabrics(), data=st.data())
+def test_forward_delays_strictly_increase_along_each_path(routes, data):
+    f = routes.fabric
+    s = data.draw(st.integers(0, f.n_hosts - 1))
+    d = data.draw(st.integers(0, f.n_hosts - 1))
+    if s == d:
+        d = (d + 1) % f.n_hosts
+    cp = routes.paths(s, d)
+    for p in range(len(cp.links)):
+        h = int(cp.n_hops[p])
+        tf = cp.tf[p, :h]
+        assert (tf >= 0).all()
+        assert (np.diff(tf) > 0).all()
+
+
+@settings(**SETTINGS)
+@given(routes=fabrics(), data=st.data())
+def test_rtt_is_twice_summed_link_delays(routes, data):
+    f = routes.fabric
+    s = data.draw(st.integers(0, f.n_hosts - 1))
+    d = data.draw(st.integers(0, f.n_hosts - 1))
+    if s == d:
+        d = (d + 1) % f.n_hosts
+    cp = routes.paths(s, d)
+    for p, links in enumerate(cp.links):
+        total = 0.0
+        for l in links:
+            assert int(f.link_src[l]) >= 0
+            total = total + float(f.link_delay[l])
+        assert cp.rtt[p] == 2.0 * total
+        # link path is contiguous s -> d
+        assert int(f.link_src[links[0]]) == s
+        assert int(f.link_dst[links[-1]]) == d
+        for a, b in zip(links, links[1:]):
+            assert int(f.link_dst[a]) == int(f.link_src[b])
+
+
+@settings(**SETTINGS)
+@given(routes=fabrics(), seed=st.integers(0, 2**16), n=st.integers(1, 32))
+def test_selection_is_deterministic_and_in_range(routes, seed, n):
+    f = routes.fabric
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, f.n_hosts, n)
+    dst = rng.integers(0, f.n_hosts, n)
+    dst = np.where(dst == src, (dst + 1) % f.n_hosts, dst)
+    q1, tf1, rtt1, c1 = routes.select(src, dst, seed=seed)
+    q2, tf2, rtt2, c2 = routes.select(src, dst, seed=seed)
+    assert np.array_equal(q1, q2) and np.array_equal(c1, c2)
+    assert np.array_equal(tf1, tf2) and np.array_equal(rtt1, rtt2)
+    for i in range(n):
+        npaths = len(routes.paths(int(src[i]), int(dst[i])).links)
+        assert 0 <= int(c1[i]) < npaths

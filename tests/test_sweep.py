@@ -198,3 +198,49 @@ def test_sharded_bitmatches_vmap_on_8_devices():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "SHARDED-OK" in r.stdout
+
+
+def test_topology_axis_grids_fabrics_times_laws():
+    """``SweepSpec(topologies=...)`` is a structural fabric axis: one
+    compiled program per (topology, law) pair, flows nested per
+    topology, results keyed (topo_idx, law_idx, backend_idx) — and every
+    point must reproduce its serial ``simulate`` run exactly."""
+    from repro.core import (LeafSpine, fat_tree, poisson_websearch,
+                            stack_flows)
+
+    ls = LeafSpine(racks=2, hosts_per_rack=4)
+    ft = fat_tree(4)
+    dt = 1e-6
+    flows_ls = [poisson_websearch(ls, 0.4, 0.0015, dt, seed=s)
+                for s in (0, 1)]
+    flows_ft = [poisson_websearch(ft, 0.3, 0.0015, dt, seed=0)]
+    spec = SweepSpec(laws=["powertcp", "hpcc"],
+                     flows=[flows_ls, flows_ft],
+                     topologies=[ls.topology(), ft.topology()],
+                     expected_flows=8.0)
+    cfg = SimConfig(dt=dt, steps=2500, hist=256, update_period=2e-6)
+    res = run_sweep(spec, cfg=cfg, record=False)
+
+    pts = res.points
+    assert len(pts) == (2 + 1) * 2
+    assert set(res.states) == {(0, 0, 0), (0, 1, 0), (1, 0, 0), (1, 1, 0)}
+    # topology-major, then law-major; flows_idx is per-topology
+    assert [p.topo_idx for p in pts] == [0, 0, 0, 0, 1, 1]
+    assert max(p.flows_idx for p in pts if p.topo_idx == 1) == 0
+
+    for p in pts:
+        topo = spec.topologies[p.topo_idx]
+        fl = spec.flows[p.topo_idx][p.flows_idx]
+        lcfg = default_law_config(fl, expected_flows=8.0)
+        st_ref, _ = simulate(topo, fl, p.law, lcfg, cfg, record=False)
+        got = np.asarray(res.state(p.index).fct)[:int(fl.tau.shape[0])]
+        np.testing.assert_array_equal(got, np.asarray(st_ref.fct))
+
+    # misuse guards
+    with pytest.raises(ValueError):
+        run_sweep(spec, ls.topology(), cfg)         # topo + topology axis
+    with pytest.raises(ValueError):
+        SweepSpec(laws=["powertcp"], flows=[flows_ls],
+                  topologies=[ls.topology(), ft.topology()])
+    with pytest.raises(ValueError):
+        run_sweep(SweepSpec(laws=["powertcp"], flows=flows_ls), None, cfg)
