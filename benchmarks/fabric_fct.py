@@ -24,11 +24,16 @@ import time
 
 import numpy as np
 
-from repro.core import (SimConfig, default_law_config, ecmp_hash, fat_tree,
-                        incast_burst, make_schedule, poisson_websearch,
-                        schedule_as_flows, simulate, simulate_slots,
+import jax
+
+from repro.core import (CircuitSchedule, SimConfig, US, default_law_config,
+                        ecmp_hash, fat_tree, incast_burst, make_schedule,
+                        poisson_websearch, schedule_as_flows, simulate,
+                        simulate_slots, simulate_slots_sharded,
                         suggest_slots)
+from repro.core import LAWS as LAW_REGISTRY
 from repro.core.fabric import leaf_spine_fabric, compile_routes
+from repro.core.fluid import resolve_devices
 from repro.core.network import LeafSpine
 from .common import emit, fct_stats, run_law_slots, table
 
@@ -176,6 +181,137 @@ def smoke_fabric() -> dict:
         "fct_fabric_leafspine_paths_match": _leafspine_migration_anchor(),
         "fct_fabric_ecmp_deterministic": _ecmp_determinism(),
     }
+
+
+def fabric16_scenario(load: float = 0.6, duration: float = 0.085,
+                      fan_in: int = 16, n_bursts: int = 64, seed: int = 5):
+    """The headline sharded-scenario workload: one k=16 fat-tree (1024
+    hosts, 5120 queues) under a web-search + rotating-incast mix, >=100k
+    flows in one time-sorted schedule. Far too many ticks and flows for
+    a single whole-trace compile — the chunk-streamed sharded engine is
+    the only way through it."""
+    ft = fat_tree(16)
+    fl_w = poisson_websearch(ft, load, duration, DT, seed=seed)
+    fl_i, _ = incast_burst(ft, fan_in=fan_in, req_bytes=1.5e5,
+                           n_bursts=n_bursts, period=duration / n_bursts,
+                           sim_dt=DT, seed=seed + 1, start=1e-4)
+    fl = jax.tree_util.tree_map(
+        lambda a, b: np.concatenate([np.asarray(a), np.asarray(b)]),
+        fl_w, fl_i)
+    return ft, make_schedule(fl)
+
+
+def _fabric16_anchor_bitmatch(devices) -> bool:
+    """Sharded == reference slot engine, bit for bit, for EVERY law in
+    the registry at the 256-host leaf-spine anchor (the fig6 paper
+    fabric), plus a megakernel spot-check. Queue trace, FCT vector,
+    final windows and per-slot rate trajectories all compared with
+    ``array_equal`` — any reordered reduction or FMA contraction in the
+    sharded tick would trip this."""
+    ls = compile_routes(leaf_spine_fabric(racks=8, hosts_per_rack=32,
+                                          spines=2))
+    sched = make_schedule(poisson_websearch(ls, 0.3, 0.0012, DT, seed=11))
+    S = -(-suggest_slots(sched, DT) // 8) * 8
+    cfg = SimConfig(dt=DT, steps=3000, hist=512, update_period=2e-6)
+    topo = ls.topology()
+    sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=4).params()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              sched=sp)
+    ok = True
+    for law in LAW_REGISTRY:
+        st_r, rec_r = simulate_slots(topo, sched, law, S, lcfg, cfg)
+        st_d, rec_d = simulate_slots_sharded(topo, sched, law, S, lcfg,
+                                             cfg, devices=devices)
+        same = bool(
+            np.array_equal(np.asarray(rec_d.q), np.asarray(rec_r.q))
+            and np.array_equal(np.asarray(st_d.fct), np.asarray(st_r.fct),
+                               equal_nan=True)
+            and np.array_equal(np.asarray(st_d.w), np.asarray(st_r.w))
+            and np.array_equal(np.asarray(rec_d.lam_f),
+                               np.asarray(rec_r.lam_f)))
+        if not same:
+            print(f"fabric16 anchor MISMATCH: {law}")
+        ok &= same
+    st_m, rec_m = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                                 backend="megakernel")
+    st_d, rec_d = simulate_slots_sharded(topo, sched, "powertcp", S, lcfg,
+                                         cfg, devices=devices)
+    ok &= bool(
+        np.array_equal(np.asarray(rec_d.q), np.asarray(rec_m.q))
+        and np.array_equal(np.asarray(st_d.fct), np.asarray(st_m.fct),
+                           equal_nan=True)
+        and np.array_equal(np.asarray(st_d.w), np.asarray(st_m.w)))
+    return bool(ok)
+
+
+def smoke_fabric16(devices=None) -> dict:
+    """CI sharded-scenario leg: fct_fabric16_* fields for
+    BENCH_sweep.json.
+
+    One k=16 fat-tree scenario is chunk-streamed through the sharded
+    slot engine twice — across the device mesh and pinned to one
+    device — over a bounded tick horizon (the schedule itself spans
+    ~85 ms; the leg simulates the first 10 ms of it). Headline figures:
+    completed flows per wall-second and the sharded-vs-single-device
+    wall-clock speedup. ``fct_fabric16_devices_bitmatch`` additionally
+    pins the mesh run to the 1-device run bit-for-bit at full scale.
+
+    The timed mesh width is the largest power of two no wider than both
+    the local device count and the physical core count: the replicated
+    half of the tick (admission, queue integration) is recomputed per
+    device, so forcing more shards than cores (CI pins 8 XLA host
+    devices onto a 4-core runner) only oversubscribes it. The exactness
+    anchor still runs at the full forced device count — bit-identity
+    must hold on the widest mesh, not just the fastest one."""
+    import os
+    ndev = resolve_devices("auto" if devices is None else devices)
+    cores = os.cpu_count() or 1
+    width = 1
+    while width * 2 <= min(ndev, cores):
+        width *= 2
+    ft, sched = fabric16_scenario()
+    n = int(sched.start.shape[0])
+    S, steps, chunk = 1024, 10_000, 2048
+    cfg = SimConfig(dt=DT, steps=steps, hist=512, update_period=2e-6)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    topo = ft.topology()
+
+    t0 = time.time()
+    st_n, _ = simulate_slots_sharded(topo, sched, "powertcp", S, lcfg, cfg,
+                                     record=False, devices=width,
+                                     chunk=chunk)
+    wall_n = time.time() - t0
+    t0 = time.time()
+    st_1, _ = simulate_slots_sharded(topo, sched, "powertcp", S, lcfg, cfg,
+                                     record=False, devices=1, chunk=chunk)
+    wall_1 = time.time() - t0
+
+    completed = int(np.isfinite(np.asarray(st_n.fct)).sum())
+    dev_bits = bool(
+        np.array_equal(np.asarray(st_n.fct), np.asarray(st_1.fct),
+                       equal_nan=True)
+        and np.array_equal(np.asarray(st_n.w), np.asarray(st_1.w))
+        and np.array_equal(np.asarray(st_n.q), np.asarray(st_1.q)))
+    out = {
+        "fct_fabric16_hosts": ft.n_hosts,
+        "fct_fabric16_queues": ft.num_queues,
+        "fct_fabric16_flows": n,
+        "fct_fabric16_slots": S,
+        "fct_fabric16_steps": steps,
+        "fct_fabric16_chunk": chunk,
+        "fct_fabric16_devices": width,
+        "fct_fabric16_devices_avail": ndev,
+        "fct_fabric16_wall_s": round(wall_n, 3),
+        "fct_fabric16_wall_1dev_s": round(wall_1, 3),
+        "fct_fabric16_completed": completed,
+        "fct_fabric16_flows_per_wall_s": round(completed / wall_n, 1),
+        "fct_fabric16_shard_speedup": round(wall_1 / wall_n, 3),
+        "fct_fabric16_devices_bitmatch": dev_bits,
+        "fct_fabric16_exact_bitmatch": _fabric16_anchor_bitmatch(ndev),
+    }
+    for k, v in out.items():
+        emit(k, v)
+    return out
 
 
 def run_fat_tree_fct(k: int, load: float, duration: float, laws, seeds,

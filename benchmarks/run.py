@@ -371,8 +371,9 @@ def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
     data = smoke_sweep(devices=devices)
     data.update(smoke_slots())
     data.update(smoke_rdcn())
-    from .fabric_fct import smoke_fabric
+    from .fabric_fct import smoke_fabric, smoke_fabric16
     data.update(smoke_fabric())
+    data.update(smoke_fabric16(devices=devices))
     out = os.path.join(os.path.dirname(__file__), "..", out_name)
     with open(out, "w") as f:
         json.dump(data, f, indent=2)
@@ -444,7 +445,20 @@ def main():
               and data["fct_fabric_incast_mega_bitmatch"]
               and data["fct_fabric_incast_completed_all"]
               and data["fct_fabric_leafspine_paths_match"]
-              and data["fct_fabric_ecmp_deterministic"])
+              and data["fct_fabric_ecmp_deterministic"]
+              # sharded-scenario leg (DESIGN.md section 15): the k=16
+              # fat-tree must stream >=100k flows, the 256-host anchor
+              # must bit-match the reference engine for every registry
+              # law on the full mesh, and the mesh run must bit-match
+              # the 1-device run at full scale. The speedup floor only
+              # applies when the timed mesh is actually parallel (>= 2
+              # physical cores backing >= 2 shards) — on a 1-core host
+              # the two timed runs are the same program.
+              and data["fct_fabric16_flows"] >= 100_000
+              and data["fct_fabric16_exact_bitmatch"]
+              and data["fct_fabric16_devices_bitmatch"]
+              and (data["fct_fabric16_devices"] < 2
+                   or data["fct_fabric16_shard_speedup"] > 1.0))
         return 0 if ok else 1
 
     from . import (fabric_fct, fig3_phase, fig4_incast, fig5_fairness,

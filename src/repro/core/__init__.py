@@ -14,6 +14,7 @@ from .fluid import (FluidSim, SlotSim, build_incidence, default_law_config,
 from .fluid import audit_carry_dtypes
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from . import megakernel  # noqa: F401  (whole-tick fused slot engine)
+from .shardslots import simulate_slots_sharded
 from .network import (LeafSpine, make_flows_single, make_schedule,
                       schedule_as_flows, single_bottleneck)
 from .fabric import (CompiledPaths, Fabric, FabricBuilder, FabricRoutes,
@@ -46,7 +47,8 @@ __all__ = [
     "default_law_config",
     "init_slot_state", "init_state", "pad_flows", "pad_schedule",
     "resolve_devices", "simulate", "simulate_batch", "simulate_slots",
-    "simulate_slots_batch", "slot_step", "stack_flow_schedules",
+    "simulate_slots_batch", "simulate_slots_sharded", "slot_step",
+    "stack_flow_schedules",
     "stack_flows", "stack_law_configs", "step",
     "LeafSpine", "make_flows_single", "make_schedule", "schedule_as_flows",
     "single_bottleneck",

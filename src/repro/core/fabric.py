@@ -292,30 +292,69 @@ class FabricRoutes:
     # -- graph machinery ---------------------------------------------------
 
     def _dist_to(self, dst: int) -> np.ndarray:
-        """[n_nodes] BFS link-hop distance to ``dst`` (INT32_MAX = cut)."""
+        """[n_nodes] BFS link-hop distance to ``dst`` (INT32_MAX = cut).
+
+        Level-synchronous over the whole link array — one numpy pass per
+        BFS level instead of a Python loop per link, which is what makes
+        per-destination compilation viable on 1024-host fabrics.
+        """
         if dst in self._dist:
             return self._dist[dst]
         f = self.fabric
         INF = np.iinfo(np.int32).max
+        ls = np.asarray(f.link_src, np.int64)
+        ld = np.asarray(f.link_dst, np.int64)
         dist = np.full(f.n_nodes, INF, np.int64)
         dist[dst] = 0
-        frontier = [dst]
-        # reverse adjacency built lazily once
-        if not hasattr(self, "_radj"):
-            self._radj = [[] for _ in range(f.n_nodes)]
-            for l in range(len(f.link_src)):
-                self._radj[int(f.link_dst[l])].append(l)
-        while frontier:
-            nxt = []
-            for v in frontier:
-                for l in self._radj[v]:
-                    u = int(f.link_src[l])
-                    if dist[u] > dist[v] + 1:
-                        dist[u] = dist[v] + 1
-                        nxt.append(u)
-            frontier = nxt
+        d = 0
+        while True:
+            hit = ls[(dist[ld] == d) & (dist[ls] == INF)]
+            if not len(hit):
+                break
+            d += 1
+            dist[hit] = d
         self._dist[dst] = dist
         return dist
+
+    def _padded_adj(self) -> np.ndarray:
+        """[n_nodes, D] outgoing link ids, ascending, -1 padded (cached)."""
+        if not hasattr(self, "_padj"):
+            deg = max((len(a) for a in self._adj), default=1)
+            padj = np.full((self.fabric.n_nodes, max(deg, 1)), -1, np.int64)
+            for u, ls in enumerate(self._adj):
+                padj[u, :len(ls)] = ls
+            self._padj = padj
+        return self._padj
+
+    def _unrank_tables(self, dst: int):
+        """Shortest-path-DAG counting tables for one destination.
+
+        Returns ``(dist [n_nodes], counts [n_nodes], counts_cum
+        [n_nodes, D])`` where ``counts[u]`` is the number of shortest
+        u->dst paths and ``counts_cum[u, j]`` the cumulative path count
+        over ``u``'s first ``j+1`` outgoing links (invalid / non-DAG
+        links count 0). Because adjacency is sorted by link id, the
+        lexicographic rank of a path decomposes along these cumsums —
+        ``select`` unranks a flow's ECMP index hop by hop without ever
+        materializing the pair's full path set.
+        """
+        f = self.fabric
+        adj = self._padded_adj()
+        dist = self._dist_to(dst)
+        INF = np.iinfo(np.int32).max
+        vdst = np.asarray(f.link_dst, np.int64)[np.maximum(adj, 0)]
+        valid = (adj >= 0) & (dist[vdst] == dist[:, None] - 1)
+        counts = np.zeros(f.n_nodes, np.int64)
+        counts[dst] = 1
+        finite = dist < INF
+        if finite.any():
+            for lev in range(1, int(dist[finite].max()) + 1):
+                nodes = np.nonzero(finite & (dist == lev))[0]
+                if len(nodes):
+                    counts[nodes] = np.where(valid[nodes],
+                                             counts[vdst[nodes]], 0).sum(1)
+        return dist, counts, np.cumsum(np.where(valid, counts[vdst], 0),
+                                       axis=1)
 
     def _enumerate(self, u: int, dst: int,
                    dist: np.ndarray) -> List[Tuple[int, ...]]:
@@ -334,23 +373,27 @@ class FabricRoutes:
     def _max_hops(self) -> int:
         """Fabric-wide max queued-hop count over all host pairs: DP over
         each destination's shortest-path DAG (max queued links on any
-        shortest path from any host)."""
+        shortest path from any host), level-vectorized per destination."""
         f = self.fabric
+        INF = np.iinfo(np.int32).max
+        adj = self._padded_adj()
+        vdst = np.asarray(f.link_dst, np.int64)[np.maximum(adj, 0)]
+        qhop = (self._qid[np.maximum(adj, 0)] >= 0).astype(np.int64)
         best = 1
         for d in range(f.n_hosts):
             dist = self._dist_to(d)
-            order = np.argsort(dist, kind="stable")
+            valid = (adj >= 0) & (dist[vdst] == dist[:, None] - 1)
             maxq = np.full(f.n_nodes, -1, np.int64)
             maxq[d] = 0
-            for u in order:
-                u = int(u)
-                if u == d or dist[u] >= np.iinfo(np.int32).max:
+            finite = dist < INF
+            for lev in range(1, int(dist[finite].max()) + 1):
+                nodes = np.nonzero(finite & (dist == lev))[0]
+                if not len(nodes):
                     continue
-                for l in self._adj[u]:
-                    v = int(f.link_dst[l])
-                    if dist[v] == dist[u] - 1 and maxq[v] >= 0:
-                        q = maxq[v] + int(self._qid[l] >= 0)
-                        maxq[u] = max(maxq[u], q)
+                up = maxq[vdst[nodes]]
+                cand = np.where(valid[nodes] & (up >= 0),
+                                up + qhop[nodes], -1)
+                maxq[nodes] = cand.max(1)
             reach = maxq[:f.n_hosts]
             if (reach >= 0).any():
                 best = max(best, int(reach[reach >= 0].max()))
@@ -397,7 +440,18 @@ class FabricRoutes:
                flow_ids: Optional[np.ndarray] = None,
                seed: Optional[int] = None):
         """Vectorized per-flow path selection: (queues [n,H] int32,
-        tf [n,H] float64 s, rtt [n] float64 s, choice [n] int32)."""
+        tf [n,H] float64 s, rtt [n] float64 s, choice [n] int32).
+
+        Flows are grouped by destination and walk the shortest-path DAG
+        hop by hop, unranking their hashed lexicographic path index
+        against ``_unrank_tables`` cumsums. This visits O(hops) links
+        per flow instead of enumerating every ECMP path of every pair
+        (64 paths/pair on a k=16 fat-tree), and reproduces the exact
+        path the enumerating compiler would have picked: same
+        lexicographic order, same hash, same float64 delay accumulation
+        order (tests/test_fabric.py pins the equivalence against
+        ``paths()``).
+        """
         src = np.asarray(src, np.int64)
         dst = np.asarray(dst, np.int64)
         n = len(src)
@@ -405,19 +459,52 @@ class FabricRoutes:
                else np.asarray(flow_ids, np.int64))
         seed = self.seed if seed is None else int(seed)
         f = self.fabric
-        pair_key = src * f.n_hosts + dst
-        uniq, inverse = np.unique(pair_key, return_inverse=True)
-        sets = [self.paths(int(k // f.n_hosts), int(k % f.n_hosts))
-                for k in uniq]
-        counts = np.asarray([len(s.links) for s in sets], np.int64)
-        offsets = np.concatenate([[0], np.cumsum(counts)])
-        cat_q = np.concatenate([s.queues for s in sets], axis=0)
-        cat_tf = np.concatenate([s.tf for s in sets], axis=0)
-        cat_rtt = np.concatenate([s.rtt for s in sets], axis=0)
-        choice = (ecmp_hash(src, dst, fid, seed)
-                  % counts[inverse].astype(np.uint64)).astype(np.int64)
-        row = offsets[inverse] + choice
-        return cat_q[row], cat_tf[row], cat_rtt[row], choice.astype(np.int32)
+        if ((src < 0) | (src >= f.n_hosts)
+                | (dst < 0) | (dst >= f.n_hosts)).any():
+            raise ValueError(f"hosts must be in [0, {f.n_hosts})")
+        if (src == dst).any():
+            raise ValueError("src == dst has no network path")
+        H = self.H
+        adj = self._padded_adj()
+        ldst = np.asarray(f.link_dst, np.int64)
+        ldelay = np.asarray(f.link_delay, np.float64)
+        queues = np.full((n, H), f.num_queues, np.int32)
+        tf = np.zeros((n, H), np.float64)
+        rtt = np.zeros(n, np.float64)
+        choice_out = np.zeros(n, np.int64)
+        for d in np.unique(dst):
+            m = np.nonzero(dst == d)[0]
+            dist_t, counts, ccum = self._unrank_tables(int(d))
+            total = counts[src[m]]
+            if (total == 0).any():
+                bad = int(src[m][total == 0][0])
+                raise ValueError(f"no path {bad} -> {int(d)}")
+            ch = (ecmp_hash(src[m], dst[m], fid[m], seed)
+                  % total.astype(np.uint64)).astype(np.int64)
+            choice_out[m] = ch
+            u = src[m].copy()
+            rank = ch.copy()
+            h = np.zeros(len(m), np.int64)
+            cum = np.zeros(len(m), np.float64)
+            for _ in range(int(dist_t[src[m]].max())):
+                active = u != d
+                cc = ccum[u]
+                b = np.minimum((cc <= rank[:, None]).sum(1),
+                               adj.shape[1] - 1)
+                prev = np.take_along_axis(
+                    cc, np.maximum(b - 1, 0)[:, None], 1)[:, 0]
+                rank = np.where(active, rank - np.where(b > 0, prev, 0),
+                                rank)
+                link = np.maximum(adj[u, b], 0)
+                lq = np.where(active, self._qid[link], -1)
+                rows = np.nonzero(active & (lq >= 0))[0]
+                queues[m[rows], h[rows]] = lq[rows]
+                tf[m[rows], h[rows]] = cum[rows]
+                h = h + (active & (lq >= 0))
+                cum = np.where(active, cum + ldelay[link], cum)
+                u = np.where(active, ldst[link], u)
+            rtt[m] = 2.0 * cum
+        return queues, tf, rtt, choice_out.astype(np.int32)
 
     def make_flows(self, src: np.ndarray, dst: np.ndarray,
                    sizes: np.ndarray, starts: np.ndarray, sim_dt: float,

@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.queue_arrivals import (ordered_scatter_add, queue_arrivals,
-                                      update_incidence)
+                                      suggest_maxdeg, update_incidence)
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
 from .laws import Law, LawConfig, get_law, _nofma, _pin
@@ -463,6 +463,15 @@ class SlotSim(NamedTuple):
     the fused incidence is [H, S, Q+1]-sized and lives in the scan state
     (rebuilt by masked dynamic-update on admission, see
     ``kernels.queue_arrivals.update_incidence``).
+
+    Chunk-streamed runs (``simulate_slots(..., chunk=)``, DESIGN.md
+    section 15) bind ``sched`` to a C-sized WINDOW of the full schedule
+    instead of the whole trace: ``win_off`` is then the window's global
+    base index (an int32 scalar, traced) and ``n_flows`` the full
+    schedule's flow count N — sentinels (``slot_flow == N``), the [N]
+    FCT output and the [N]-leaf LawConfig gathers all keep their global
+    meaning while the O(N * H) hop table streams through in windows.
+    Both stay None on whole-trace runs.
     """
     topo: Topology
     sched: FlowSchedule
@@ -471,6 +480,16 @@ class SlotSim(NamedTuple):
     cfg: SimConfig
     slots: int
     backend: str = "reference"
+    n_flows: Optional[int] = None
+    win_off: Optional[jnp.ndarray] = None
+
+
+def _slot_n(sim: SlotSim) -> int:
+    """Global flow count N: the full schedule's, even when ``sim.sched``
+    is a chunk window."""
+    if sim.n_flows is not None:
+        return int(sim.n_flows)
+    return int(sim.sched.start.shape[0])
 
 
 def _gather_law_cfg(law_cfg: LawConfig, gf: jnp.ndarray, n_flows: int):
@@ -490,7 +509,7 @@ def init_slot_state(sim: SlotSim) -> SlotState:
     ``pad_flows`` so empty slots never send and never NaN."""
     topo, sched, cfg = sim.topo, sim.sched, sim.cfg
     S = int(sim.slots)
-    N = int(sched.start.shape[0])
+    N = _slot_n(sim)
     H = int(sched.path.shape[1])
     Q = topo.num_queues
     D = cfg.hist
@@ -546,10 +565,18 @@ def _admit_retire(sim: SlotSim, state: SlotState, t_sec, due=None):
     Admitted slots gather the flow's metadata, reset window/config state
     exactly as ``init_state`` would, and re-init the law's state pytree
     entries (``law.init`` against the slot-gathered config).
+
+    Chunk windows (``sim.win_off`` set): the binary search runs against
+    the C-sized window and is rebased by the window's global offset —
+    bit-identical to the full-schedule search whenever no entry beyond
+    the window is due, which the chunk driver guarantees by segment
+    construction (DESIGN.md section 15). Metadata gathers use the
+    window-local index; the LawConfig gather keeps the global index
+    (those [N] leaves stay resident, see ``SlotSim``).
     """
     sched = sim.sched
     S = int(state.w.shape[0])
-    N = int(sched.start.shape[0])
+    N = _slot_n(sim)
     sidx = jnp.arange(S, dtype=jnp.int32)
 
     occupied = state.slot_flow < N
@@ -560,6 +587,8 @@ def _admit_retire(sim: SlotSim, state: SlotState, t_sec, due=None):
     if due is None:
         due = jnp.searchsorted(sched.start, t_sec,
                                side="right").astype(jnp.int32)
+        if sim.win_off is not None:
+            due = sim.win_off + due
     n_free = S - jnp.sum(occupied.astype(jnp.int32))
     n_admit = jnp.minimum(due - state.cursor, n_free)
     free = ~occupied
@@ -574,14 +603,21 @@ def _admit_retire(sim: SlotSim, state: SlotState, t_sec, due=None):
     slot_flow = jnp.where(admit, state.cursor + rank, slot_flow)
 
     gf = jnp.clip(slot_flow, 0, N - 1)
+    if sim.win_off is None:
+        gw = gf
+    else:
+        # window-local gather index; rows not admitted this tick may
+        # gather arbitrary window entries, all masked out by ``sel``
+        gw = jnp.clip(slot_flow - sim.win_off, 0,
+                      int(sched.start.shape[0]) - 1)
 
     def sel(new, old):
         m = admit.reshape(admit.shape + (1,) * (old.ndim - 1))
         return jnp.where(m, new, old)
 
-    tau = sel(sched.tau[gf], state.tau)
-    nic = sel(sched.nic_rate[gf], state.nic_rate)
-    start = sel(sched.start[gf], state.start)
+    tau = sel(sched.tau[gw], state.tau)
+    nic = sel(sched.nic_rate[gw], state.nic_rate)
+    start = sel(sched.start[gw], state.start)
     cfg_slot = _gather_law_cfg(sim.law_cfg, gf, N)
     fresh_law = sim.law.init(S, cfg_slot)
     law_state = jax.tree_util.tree_map(
@@ -594,14 +630,14 @@ def _admit_retire(sim: SlotSim, state: SlotState, t_sec, due=None):
         hw=state.hw + n_fresh,
         admit_t=jnp.where(admit, state.t, state.admit_t),
         free_at=jnp.where(admit, _INT32_MAX, state.free_at),
-        path=sel(sched.path[gf], state.path),
-        tf_steps=sel(sched.tf_steps[gf], state.tf_steps),
-        rtt_steps=sel(sched.rtt_steps[gf], state.rtt_steps),
+        path=sel(sched.path[gw], state.path),
+        tf_steps=sel(sched.tf_steps[gw], state.tf_steps),
+        rtt_steps=sel(sched.rtt_steps[gw], state.rtt_steps),
         tau=tau, nic_rate=nic, start=start,
-        stop=sel(sched.stop[gf], state.stop),
+        stop=sel(sched.stop[gw], state.stop),
         w=sel(nic * tau, state.w),
         rate_cap=sel(jnp.full((S,), jnp.inf, jnp.float32), state.rate_cap),
-        remaining=sel(sched.size[gf].astype(jnp.float32), state.remaining),
+        remaining=sel(sched.size[gw].astype(jnp.float32), state.remaining),
         next_update=sel((start + tau).astype(jnp.float32),
                         state.next_update),
         last_update=sel(start.astype(jnp.float32), state.last_update),
@@ -632,7 +668,7 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
         raise ValueError("alloc_fn is not supported on the slot path")
     topo, cfg = sim.topo, sim.cfg
     S = int(state.w.shape[0])
-    N = int(sim.sched.start.shape[0])
+    N = _slot_n(sim)
     D = cfg.hist
     dt = cfg.dt
     t_sec = _nofma(state.t.astype(jnp.float32) * dt)   # mirror of step()
@@ -736,13 +772,176 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     return new_state, rec
 
 
+# --------------------------------------------------------------------------
+# Chunk-streamed schedules (DESIGN.md section 15)
+# --------------------------------------------------------------------------
+
+def _host_window(sched_np: FlowSchedule, w0: int, chunk: int,
+                 pad_queue: int) -> FlowSchedule:
+    """C-sized window ``sched[w0:w0+C]`` (host-side slice), padded with
+    inert ``pad_schedule`` entries past the schedule's end so every
+    segment program shares one shape."""
+    n = int(sched_np.start.shape[0])
+    end = min(w0 + chunk, n)
+    win = jax.tree_util.tree_map(lambda x: x[w0:end], sched_np)
+    if end - w0 < chunk:
+        win = pad_schedule(win, chunk, pad_queue)
+    return win
+
+
+def _safe_ticks(start_np: np.ndarray, w0: int, chunk: int, t0: int,
+                t_end: int, dt: float) -> int:
+    """Ticks from ``t0`` during which no schedule entry beyond the window
+    ``[w0, w0+C)`` becomes due — within them the window-rebased admission
+    search is bit-identical to the full-schedule search. 0 means entry
+    ``w0+C`` is already due at ``t0``; the driver then runs a single tick
+    (exact because C >= S caps the per-tick admission count at the free
+    pool, see ``simulate_slots``)."""
+    n = int(start_np.shape[0])
+    if w0 + chunk >= n:
+        return t_end - t0
+    lim = np.float32(start_np[w0 + chunk])
+    if not np.isfinite(lim):
+        return t_end - t0
+    # t_sec(t) = f32(t) * f32(dt): the exact product the engines compute
+    # (monotone nondecreasing in t); find the first due tick by bisection
+    dtf = np.float32(dt)
+
+    def f(t):
+        return np.float32(t) * dtf
+
+    if f(t0) >= lim:
+        return 0
+    if f(t_end - 1) < lim:
+        return t_end - t0
+    lo, hi = t0, t_end - 1            # f(lo) < lim <= f(hi)
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if f(mid) >= lim:
+            hi = mid
+        else:
+            lo = mid
+    return hi - t0
+
+
+_CHUNK_SEG_MAX = 4096                 # longest single segment (ticks)
+
+
+def _simulate_slots_chunked(sim: SlotSim, chunk: int, bw_fn, record: bool):
+    """Host-driven segment loop: the jitted inner program advances L ticks
+    against a C-sized schedule window; between segments the cursor is
+    fetched and the window re-anchored at it. Segment lengths are chosen
+    so the window-rebased admission is provably bit-identical to the
+    single-shot run (``_safe_ticks``), and are rounded down to powers of
+    two so the whole trace compiles at most log2(seg_max) inner programs.
+    Carried state (pool, queues, telemetry rings, megakernel carry)
+    crosses segment boundaries unchanged — only the O(N * H) schedule is
+    windowed; the [N] FCT output and [N]-leaf LawConfig stay resident
+    (the knife-edge constraint of ``megakernel.MegaCarry`` forbids
+    routing the float config gather through carried state).
+    """
+    cfg = sim.cfg
+    if record and int(cfg.record_every) > 1:
+        raise ValueError("chunk-streamed runs record every tick; "
+                         "record_every > 1 is not supported with chunk=")
+    if sim.backend == "fused":
+        raise ValueError("chunk= is not supported on the fused backend")
+    mega = sim.backend == "megakernel"
+    sched_np = jax.tree_util.tree_map(np.asarray, sim.sched)
+    N = int(sched_np.start.shape[0])
+    S = int(sim.slots)
+    Q = int(sim.topo.num_queues)
+    T = int(cfg.steps)
+    # C >= S makes the 1-tick fallback exact: one tick admits at most
+    # n_free <= S entries, which the C-clamped due count never truncates
+    C = min(max(int(chunk), S), max(N, 1))
+    start_np = np.asarray(sched_np.start, np.float32)
+
+    def make_simw(win, w0):
+        return sim._replace(sched=win, n_flows=N, win_off=w0)
+
+    if mega:
+        from .megakernel import make_tick, _unpack_state
+        maxdeg = suggest_maxdeg(sched_np.path, Q, S)
+
+    @jax.jit
+    def init(win):
+        simw = make_simw(win, jnp.asarray(0, jnp.int32))
+        state = init_slot_state(simw)
+        audit_carry_dtypes(state)
+        if mega:
+            return make_tick(simw, bw_fn, gate=True,
+                             maxdeg=maxdeg).init_carry(state)
+        return state
+
+    seg_cache = {}
+
+    def get_seg(L):
+        if L in seg_cache:
+            return seg_cache[L]
+
+        @jax.jit
+        def seg(carry, win, w0):
+            simw = make_simw(win, w0)
+            if mega:
+                tick = make_tick(simw, bw_fn, gate=True, maxdeg=maxdeg)
+                # global tick indices: bit-identical to _due_table's
+                # f32(t) * dt grid, rebased by the window offset
+                t_grid = ((carry.state.t +
+                           jnp.arange(L, dtype=jnp.int32))
+                          .astype(jnp.float32) * cfg.dt)
+                due = w0 + jnp.searchsorted(
+                    win.start, t_grid, side="right").astype(jnp.int32)
+
+                def body(c, d):
+                    c, rec = tick(c, d)
+                    return c, (rec if record else None)
+
+                return jax.lax.scan(body, carry, due)
+
+            def body(st, _):
+                st, rec = slot_step(simw, st, bw_fn=bw_fn)
+                return st, (rec if record else None)
+
+            return jax.lax.scan(body, carry, None, length=L)
+
+        seg_cache[L] = seg
+        return seg
+
+    carry = init(_host_window(sched_np, 0, C, Q))
+    recs = []
+    t0 = 0
+    while t0 < T:
+        cursor = (carry.state.cursor if mega else carry.cursor)
+        w0 = int(jax.device_get(cursor))
+        safe = _safe_ticks(start_np, w0, C, t0, T, cfg.dt)
+        allowed = max(1, min(max(safe, 1), T - t0, _CHUNK_SEG_MAX))
+        L = 1 << (allowed.bit_length() - 1)       # pow2 floor, >= 1
+        win = _host_window(sched_np, w0, C, Q)
+        carry, rec = get_seg(L)(carry, win, jnp.asarray(w0, jnp.int32))
+        if record:
+            recs.append(rec)
+        t0 += L
+
+    if record:
+        recs = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+            *recs)
+    else:
+        recs = None
+    if mega:
+        return _unpack_state(carry, N, Q + 1), recs
+    return carry, recs
+
+
 def simulate_slots(topo: Topology, sched: FlowSchedule,
                    law_name: Union[str, Law], slots: int,
                    law_cfg: Optional[LawConfig] = None,
                    cfg: Optional[SimConfig] = None,
                    bw_fn: Optional[Callable] = None,
                    record: bool = True,
-                   backend: str = "reference"):
+                   backend: str = "reference",
+                   chunk: Optional[int] = None):
     """Run a schedule through a bounded pool of ``slots`` active slots.
 
     Returns (final ``SlotState``, ``Record`` pytree); ``final.fct`` is [N]
@@ -764,11 +963,22 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
     across state leaves, which ``donate_argnums`` would reject) and its
     dtypes are audited (``audit_carry_dtypes``) so a stray wide leaf
     cannot silently double the carried footprint.
+
+    ``chunk=C`` streams the schedule through the scan in C-entry windows
+    (reference and megakernel backends; DESIGN.md section 15): trace
+    length then no longer bounds device memory — only O(C * H) schedule
+    rows plus the fixed pool/ring state are resident per segment, so
+    100k+-flow traces fit. The trajectory is bit-for-bit identical to
+    the single-shot run for EVERY chunk size (C is clamped up to S
+    internally; tests/test_chunk_stream.py holds the property). Not
+    compatible with ``record_every > 1`` or the fused backend.
     """
     cfg = cfg or SimConfig()
     law = _resolve_law(law_name, backend)
     law_cfg = law_cfg or default_law_config(sched)
     sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend)
+    if chunk is not None:
+        return _simulate_slots_chunked(sim, int(chunk), bw_fn, record)
     if backend == "megakernel":
         from .megakernel import simulate_slots_mega
         return simulate_slots_mega(sim, bw_fn=bw_fn, record=record)

@@ -181,7 +181,8 @@ def _flush_pending(fct: jnp.ndarray, pend: PendingFCT, mask, N: int):
 
 
 def make_tick(sim, bw_fn=None, gate: bool = True,
-              quiet: bool = False) -> Callable:
+              quiet: bool = False,
+              maxdeg: Optional[int] = None) -> Callable:
     """Build the megakernel tick: ``tick(carry, due_t) -> (carry', rec)``.
 
     The arithmetic mirrors ``fluid.slot_step`` op for op (pins included)
@@ -195,7 +196,9 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
     writes — value-preserving for laws with ``masked_updates``, but a
     net loss on current CPU measurements (the branch operands include
     the rings), so it is off by default; the TPU kernel, where
-    predication is cheap, is its intended user.
+    predication is cheap, is its intended user. ``maxdeg`` overrides the
+    CSR width (the chunk driver passes the FULL schedule's static degree
+    — the window visible to this tick would understate it).
 
     Returns the tick plus ``tick.init_carry(state0) -> MegaCarry`` for
     the matching initial carry.
@@ -203,7 +206,7 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
     topo, cfg, law = sim.topo, sim.cfg, sim.law
     sched = sim.sched
     S = int(sim.slots)
-    N = int(sched.start.shape[0])
+    N = fluid._slot_n(sim)
     Q = int(topo.num_queues)
     Q1 = Q + 1
     D = int(cfg.hist)
@@ -224,8 +227,9 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
     # schedule is a tracer (no concrete hop table at trace time) — keep
     # the historical fixed width there; the runtime overflow fallback
     # stays bit-identical either way.
-    maxdeg = (min(S, 32) if isinstance(sched.path, jax.core.Tracer)
-              else suggest_maxdeg(sched.path, Q, S))
+    if maxdeg is None:
+        maxdeg = (min(S, 32) if isinstance(sched.path, jax.core.Tracer)
+                  else suggest_maxdeg(sched.path, Q, S))
     use_csr = gate and S * H > 128
 
     def slot_hold(st):
@@ -543,7 +547,7 @@ def simulate_slots_mega(sim, bw_fn=None, record: bool = True,
     impl = impl or default_impl()
     gate = True if gate is None else gate
     tick = make_tick(sim, bw_fn, gate=gate, quiet=quiet)
-    N = int(sim.sched.start.shape[0])
+    N = fluid._slot_n(sim)
     Q1 = int(sim.topo.num_queues) + 1
 
     if impl == "pallas":

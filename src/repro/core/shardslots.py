@@ -1,0 +1,559 @@
+"""Device-parallel single-scenario slot engine (DESIGN.md section 15).
+
+Every other engine in the repo scales by batching *scenarios*; one large
+scenario was still bounded by a single device. This module shards ONE
+scenario's slot-pool tick over the device mesh: the flow-slot axis (and
+the queue-arrival accumulation) are partitioned over the mesh's ``data``
+axis via the ``"slot"``/``"queue"`` rules in ``sharding/axes.py``, while
+the cheap-but-sequential parts of the tick stay replicated. The result
+is bit-for-bit identical to the single-device slot engine
+(``fluid.slot_step``) — the exactness anchor of the whole repo — which
+pins the layout:
+
+Replicated on every shard (identical computation per tick):
+  * the admit/retire pass's integer bookkeeping and the [S] slot
+    metadata it selects (``_admit_global`` mirrors ``_admit_retire``'s
+    code line for line) — cumsum-based slot assignment is inherently
+    sequential in slot order and costs O(S) int ops;
+  * queue state ``q``/``out_rate`` [Q+1], their telemetry rings
+    [D, Q+1], and the fluid integration (elementwise in Q);
+  * the CSR *build* (one stable sort on admission ticks).
+
+Sharded [Sl = S/ndev] per shard (the per-tick float work):
+  * window/rate/law state and the per-slot rings [D, Sl] — send rates,
+    delayed observations, the control-law update;
+  * the CSR *gather* rows: each shard owns a contiguous queue block of
+    the inverted incidence and accumulates its queues' arrival sums
+    (each queue's in-order add chain lives wholly on one shard, so the
+    accumulation order — and hence every bit — matches the reference
+    scatter);
+  * the [N] FCT output (each flow is admitted to exactly one shard's
+    slot; per-shard buffers merge by first-finite).
+
+Halo exchange: ``jax.lax.all_gather(..., tiled=True)`` on (a) the
+per-slot hop contributions [Sl, H] before the queue accumulation — a
+slot's compiled fabric path may cross any shard's queue block — and
+(b) the per-queue-block arrival sums after it. A ``psum`` of per-shard
+partial sums would be cheaper but is NOT bit-safe (float addition does
+not associate); the all-gather keeps the exact single-device add order.
+
+Chunk-streamed schedules compose: the host driver re-anchors a C-entry
+schedule window at the replicated cursor between segments, exactly as
+``fluid._simulate_slots_chunked`` (same ``_safe_ticks`` proof), so
+100k+-flow traces run sharded without resident O(N*H) hop tables.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.queue_arrivals import (build_csr_gather_padded,
+                                      csr_gather_arrivals,
+                                      ordered_scatter_add, suggest_maxdeg)
+from ..sharding.axes import axes_to_pspec
+from ..sharding.compat import shard_map
+from .fluid import (_CHUNK_SEG_MAX, _INT32_MAX, _bandwidth, _buffer_caps,
+                    _gather_law_cfg, _hop_sum, _host_window, _marking,
+                    _resolve_law, _safe_ticks, _slot_n, SlotSim,
+                    audit_carry_dtypes, default_law_config, resolve_devices)
+from .laws import Law, LawConfig, _nofma, _pin
+from .types import (MTU, FlowSchedule, PathObs, Record, SimConfig,
+                    SlotState, Topology)
+
+_AX = "data"
+
+
+class ShardInfo(NamedTuple):
+    """Static shard geometry, fixed at trace time."""
+    ndev: int
+    Sl: int          # slots per shard (S / ndev)
+    Qb: int          # CSR rows per shard (Q+1 rounded up to ndev blocks)
+    use_csr: bool    # small pools keep the unrolled scatter, replicated
+    maxdeg: int
+
+
+class ShardGlob(NamedTuple):
+    """Replicated tick state: identical bits on every shard."""
+    t: jnp.ndarray
+    cursor: jnp.ndarray
+    hw: jnp.ndarray
+    slot_flow: jnp.ndarray       # [S]
+    admit_t: jnp.ndarray         # [S]
+    free_at: jnp.ndarray         # [S]
+    path: jnp.ndarray            # [S, H]
+    tf_steps: jnp.ndarray        # [S, H]
+    rtt_steps: jnp.ndarray       # [S]
+    tau: jnp.ndarray             # [S]
+    nic_rate: jnp.ndarray        # [S]
+    start: jnp.ndarray           # [S]
+    stop: jnp.ndarray            # [S]
+    q: jnp.ndarray               # [Q+1]
+    out_rate: jnp.ndarray        # [Q+1]
+    hist_q: jnp.ndarray          # [D, Q+1]
+    hist_out: jnp.ndarray        # [D, Q+1]
+
+
+class ShardLoc(NamedTuple):
+    """Shard-local tick state: this shard's contiguous [Sl] slot block."""
+    w: jnp.ndarray               # [Sl]
+    rate_cap: jnp.ndarray        # [Sl]
+    remaining: jnp.ndarray       # [Sl]
+    next_update: jnp.ndarray     # [Sl]
+    last_update: jnp.ndarray     # [Sl]
+    hist_lam: jnp.ndarray        # [D, Sl]
+    hist_w: jnp.ndarray          # [D, Sl]
+    law: object                  # law-state pytree of [Sl] leaves
+    fct: jnp.ndarray             # [1, N] per-shard buffer (merged outside)
+
+
+class ShardCarry(NamedTuple):
+    g: ShardGlob
+    l: ShardLoc
+    inv: Optional[jnp.ndarray]   # [Qb, maxdeg] shard-owned CSR row block
+    ovf: Optional[jnp.ndarray]   # replicated overflow flag
+
+
+def _admit_global(simw: SlotSim, g: ShardGlob, t_sec):
+    """The replicated half of ``fluid._admit_retire``: integer slot
+    bookkeeping plus the [S] metadata selects, identical on every shard
+    (all inputs replicated). Returns the updated globals and the masks
+    the local half needs. Float dynamic state and the law re-init are
+    applied per shard by ``_shard_tick`` on its own slice."""
+    sched = simw.sched
+    S = int(g.slot_flow.shape[0])
+    N = _slot_n(simw)
+    sidx = jnp.arange(S, dtype=jnp.int32)
+
+    occupied = g.slot_flow < N
+    freeable = occupied & (g.t >= g.free_at)
+    slot_flow = jnp.where(freeable, N, g.slot_flow)
+    occupied = slot_flow < N
+
+    due = jnp.searchsorted(sched.start, t_sec,
+                           side="right").astype(jnp.int32)
+    if simw.win_off is not None:
+        due = simw.win_off + due
+    n_free = S - jnp.sum(occupied.astype(jnp.int32))
+    n_admit = jnp.minimum(due - g.cursor, n_free)
+    free = ~occupied
+    fresh = free & (sidx >= g.hw)
+    n_fresh = jnp.minimum(n_admit, jnp.sum(fresh.astype(jnp.int32)))
+    take_fresh = fresh & (jnp.cumsum(fresh.astype(jnp.int32)) - 1 < n_fresh)
+    recycled = free & (sidx < g.hw)
+    take_rec = recycled & (jnp.cumsum(recycled.astype(jnp.int32)) - 1 <
+                           n_admit - n_fresh)
+    admit = take_fresh | take_rec
+    rank = jnp.cumsum(admit.astype(jnp.int32)) - 1
+    slot_flow = jnp.where(admit, g.cursor + rank, slot_flow)
+
+    gf = jnp.clip(slot_flow, 0, N - 1)
+    if simw.win_off is None:
+        gw = gf
+    else:
+        gw = jnp.clip(slot_flow - simw.win_off, 0,
+                      int(sched.start.shape[0]) - 1)
+
+    def sel(new, old):
+        m = admit.reshape(admit.shape + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    g = g._replace(
+        slot_flow=slot_flow,
+        cursor=g.cursor + n_admit,
+        hw=g.hw + n_fresh,
+        admit_t=jnp.where(admit, g.t, g.admit_t),
+        free_at=jnp.where(admit, _INT32_MAX, g.free_at),
+        path=sel(sched.path[gw], g.path),
+        tf_steps=sel(sched.tf_steps[gw], g.tf_steps),
+        rtt_steps=sel(sched.rtt_steps[gw], g.rtt_steps),
+        tau=sel(sched.tau[gw], g.tau),
+        nic_rate=sel(sched.nic_rate[gw], g.nic_rate),
+        start=sel(sched.start[gw], g.start),
+        stop=sel(sched.stop[gw], g.stop),
+    )
+    return g, occupied | admit, admit, gw, gf
+
+
+def _shard_tick(simw: SlotSim, mi: ShardInfo, off, blk0,
+                carry: ShardCarry, bw_fn, record: bool):
+    """One tick, sharded: mirrors ``fluid.slot_step`` operation for
+    operation — every local float computation is an elementwise/gather
+    slice of the single-device [S] computation (bit-equal under the
+    repo's pin/_nofma discipline), and every cross-shard value moves by
+    all-gather so full-order arithmetic never reassociates."""
+    g, loc = carry.g, carry.l
+    topo, cfg = simw.topo, simw.cfg
+    N = _slot_n(simw)
+    D = cfg.hist
+    dt = cfg.dt
+    Q = topo.num_queues
+    Sl = mi.Sl
+    t_sec = _nofma(g.t.astype(jnp.float32) * dt)      # mirror of slot_step
+    ptr = jnp.mod(g.t, D)
+    bw = _bandwidth(topo, bw_fn, t_sec)               # [Q+1]
+
+    def sl(x):
+        return jax.lax.dynamic_slice_in_dim(x, off, Sl, 0)
+
+    # -- admit / retire: replicated bookkeeping, local float resets -------
+    g2, occupied, admit, gw, gf = _admit_global(simw, g, t_sec)
+
+    if mi.use_csr:
+        def rebuild(path):
+            inv_full, ovf = build_csr_gather_padded(path, Q, mi.maxdeg,
+                                                    mi.Qb * mi.ndev)
+            return (jax.lax.dynamic_slice_in_dim(inv_full, blk0, mi.Qb, 0),
+                    ovf)
+        inv, ovf = jax.lax.cond(g2.cursor > g.cursor, rebuild,
+                                lambda _: (carry.inv, carry.ovf), g2.path)
+    else:
+        inv, ovf = None, None
+
+    adm_l = sl(admit)
+    gw_l, gf_l = sl(gw), sl(gf)
+    tau_l, nic_l = sl(g2.tau), sl(g2.nic_rate)
+    start_l, stop_l = sl(g2.start), sl(g2.stop)
+    path_l, tf_l = sl(g2.path), sl(g2.tf_steps)
+    rtt_l, admit_t_l = sl(g2.rtt_steps), sl(g2.admit_t)
+    free_at_l, occ_l = sl(g2.free_at), sl(occupied)
+    sched = simw.sched
+    cfg_slot = _gather_law_cfg(simw.law_cfg, gf_l, N)
+
+    def _sel(new, old):
+        m = adm_l.reshape(adm_l.shape + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    law_state = jax.tree_util.tree_map(
+        _sel, simw.law.init(Sl, cfg_slot), loc.law)
+    w_cur = _sel(nic_l * tau_l, loc.w)
+    rate_cap = _sel(jnp.full((Sl,), jnp.inf, jnp.float32), loc.rate_cap)
+    remaining = _sel(sched.size[gw_l].astype(jnp.float32), loc.remaining)
+    next_update = _sel((start_l + tau_l).astype(jnp.float32),
+                       loc.next_update)
+    last_update = _sel(start_l.astype(jnp.float32), loc.last_update)
+
+    # -- instantaneous RTT and send rates (this shard's slot block) -------
+    sidx_l = jnp.arange(Sl)
+    active = (occ_l & (t_sec >= start_l) & (remaining > 0.0) &
+              (t_sec < stop_l))
+    q_hop = g2.q[path_l]                              # [Sl, H]
+    b_hop = _pin(bw[path_l])
+    valid = path_l < Q
+    theta_now = tau_l + _hop_sum(jnp.where(valid, q_hop / b_hop, 0.0))
+    lam = jnp.where(active,
+                    jnp.minimum(jnp.minimum(_pin(w_cur / theta_now),
+                                            rate_cap),
+                                nic_l), 0.0)
+    hist_lam = loc.hist_lam.at[ptr].set(lam)
+    hist_w = loc.hist_w.at[ptr].set(w_cur)
+
+    hop_delay_idx = jnp.mod(ptr - tf_l, D)            # [Sl, H]
+    lam_del = hist_lam[hop_delay_idx, sidx_l[:, None]]
+    lam_del = jnp.where(g.t - tf_l >= admit_t_l[:, None], lam_del, 0.0)
+    contrib_l = jnp.where(valid, lam_del, 0.0)
+
+    # -- halo exchange: every shard's hop contributions, in slot order ----
+    contrib, act_f, lam_full = jax.lax.all_gather(
+        (contrib_l, active.astype(jnp.float32), lam), _AX,
+        axis=0, tiled=True)
+
+    # -- queue update (mirror of fluid._queue_update, reference path) -----
+    caps = _buffer_caps(topo, g2.q)
+    if mi.use_csr:
+        q1p = mi.Qb * mi.ndev
+
+        def _csr(c):
+            return csr_gather_arrivals(
+                c, inv, jnp.zeros((mi.Qb,), jnp.float32))
+
+        def _scatter(c):
+            arr_full = ordered_scatter_add(jnp.zeros_like(g2.q),
+                                           g2.path, c)
+            if q1p > Q + 1:
+                arr_full = jnp.concatenate(
+                    [arr_full, jnp.zeros((q1p - Q - 1,), jnp.float32)])
+            return jax.lax.dynamic_slice_in_dim(arr_full, blk0, mi.Qb, 0)
+
+        arr_blk = jax.lax.cond(ovf, _scatter, _csr, contrib)
+        arr = jax.lax.all_gather(arr_blk, _AX, axis=0, tiled=True)[:Q + 1]
+    else:
+        arr = ordered_scatter_add(jnp.zeros_like(g2.q), g2.path, contrib)
+    q_new = jnp.clip(g2.q + _nofma(_pin((arr - bw) * dt)), 0.0, caps)
+    out = jnp.where(g2.q > 0.0, bw, jnp.minimum(arr, bw))
+    q_new = q_new.at[-1].set(0.0)
+    hist_q = g2.hist_q.at[ptr].set(q_new)
+    hist_out = g2.hist_out.at[ptr].set(out)
+
+    # -- delayed observation (local reads of replicated rings) ------------
+    tb_steps = jnp.clip(rtt_l[:, None] - tf_l, 1, D - 2)
+    ohidx = jnp.mod(ptr - tb_steps, D)                # [Sl, H]
+    ohprev = jnp.mod(ohidx - 1, D)
+    q_obs = hist_q[ohidx, path_l]
+    q_obs_prev = hist_q[ohprev, path_l]
+    qdot_obs = _nofma((q_obs - q_obs_prev) * (1.0 / dt))
+    mu_obs = hist_out[ohidx, path_l]
+    theta_obs = tau_l + _hop_sum(jnp.where(valid, q_obs / b_hop, 0.0))
+    wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
+                          1, D - 2)
+    w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx_l]
+    w_old = jnp.where(g.t - wold_delay >= admit_t_l, w_old,
+                      nic_l * tau_l)
+    buf_hop = jnp.concatenate(
+        [topo.buffer, jnp.asarray([1e30], jnp.float32)])[path_l]
+    ecn = jnp.max(jnp.where(valid, _marking(q_obs, buf_hop, cfg_slot),
+                            0.0), axis=1)
+
+    upd = active & (t_sec >= next_update)
+    dt_obs = jnp.maximum(t_sec - last_update, dt)
+    obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
+                  valid=valid, theta=theta_obs, w_old=w_old,
+                  dt_obs=dt_obs, ecn_frac=ecn)
+
+    # -- control-law update (shard-local) ---------------------------------
+    law_state, w_new, rate_cap = simw.law.update(
+        law_state, obs, w_cur, rate_cap, upd, cfg_slot, t_sec)
+    w_new = jnp.clip(w_new, MTU, _nofma(_pin(8.0 * nic_l * tau_l)) +
+                     _nofma(_pin(8.0 * nic_l * theta_now)))
+    period = jnp.where(cfg.update_period > 0.0, cfg.update_period,
+                       theta_now)
+    next_update = jnp.where(upd, t_sec + period, next_update)
+    last_update = jnp.where(upd, t_sec, last_update)
+
+    # -- flow progress; FCT scatters into this shard's [N] buffer ---------
+    remaining = jnp.where(active, remaining - _nofma(_pin(lam * dt)),
+                          remaining)
+    done = active & (remaining <= 0.0)
+    fct = loc.fct.at[0, jnp.where(done, sl(g2.slot_flow), N)].set(
+        jnp.where(done, t_sec + _nofma(tau_l / 2.0) - start_l, jnp.nan),
+        mode="drop")
+    hold = jnp.max(jnp.where(valid, tf_l, 0), axis=1)
+    expire = (occ_l & (t_sec >= stop_l) & (free_at_l == _INT32_MAX) &
+              ~done)
+    de_full, hold_full = jax.lax.all_gather(
+        ((done | expire).astype(jnp.int32), hold), _AX,
+        axis=0, tiled=True)
+    free_at = jnp.where(de_full > 0, g.t + hold_full + 1, g2.free_at)
+
+    new_carry = ShardCarry(
+        g=g2._replace(t=g.t + 1, q=q_new, out_rate=out, hist_q=hist_q,
+                      hist_out=hist_out, free_at=free_at),
+        l=ShardLoc(w=w_new, rate_cap=rate_cap, remaining=remaining,
+                   next_update=next_update, last_update=last_update,
+                   hist_lam=hist_lam, hist_w=hist_w, law=law_state,
+                   fct=fct),
+        inv=inv, ovf=ovf)
+    if record:
+        w_act = jax.lax.all_gather(jnp.where(active, w_new, 0.0), _AX,
+                                   axis=0, tiled=True)
+        rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(w_act), thru=out,
+                     lam=jnp.sum(lam_full), lam_f=lam_full,
+                     n_active=jnp.sum(act_f.astype(jnp.int32)))
+    else:
+        rec = None
+    return new_carry, rec
+
+
+def _init_carry(simw: SlotSim, mi: ShardInfo, blk0) -> ShardCarry:
+    """Mirror of ``fluid.init_slot_state``, split into the replicated and
+    shard-local halves (identical inert values)."""
+    topo, cfg = simw.topo, simw.cfg
+    S = int(simw.slots)
+    N = _slot_n(simw)
+    H = int(simw.sched.path.shape[1])
+    Q = topo.num_queues
+    D = cfg.hist
+    Sl = mi.Sl
+    g = ShardGlob(
+        t=jnp.asarray(0, jnp.int32),
+        cursor=jnp.asarray(0, jnp.int32),
+        hw=jnp.asarray(0, jnp.int32),
+        slot_flow=jnp.full((S,), N, jnp.int32),
+        admit_t=jnp.zeros((S,), jnp.int32),
+        free_at=jnp.zeros((S,), jnp.int32),
+        path=jnp.full((S, H), Q, jnp.int32),
+        tf_steps=jnp.ones((S, H), jnp.int32),
+        rtt_steps=jnp.ones((S,), jnp.int32),
+        tau=jnp.full((S,), 20e-6, jnp.float32),
+        nic_rate=jnp.full((S,), 1e9, jnp.float32),
+        start=jnp.full((S,), jnp.inf, jnp.float32),
+        stop=jnp.full((S,), jnp.inf, jnp.float32),
+        q=jnp.zeros((Q + 1,), jnp.float32),
+        out_rate=jnp.zeros((Q + 1,), jnp.float32),
+        hist_q=jnp.zeros((D, Q + 1), jnp.float32),
+        hist_out=jnp.zeros((D, Q + 1), jnp.float32))
+    tau0 = jnp.full((Sl,), 20e-6, jnp.float32)
+    nic0 = jnp.full((Sl,), 1e9, jnp.float32)
+    w0 = nic0 * tau0
+    cfg0 = _gather_law_cfg(simw.law_cfg, jnp.zeros((Sl,), jnp.int32), N)
+    loc = ShardLoc(
+        w=w0,
+        rate_cap=jnp.full((Sl,), jnp.inf, jnp.float32),
+        remaining=jnp.full((Sl,), jnp.inf, jnp.float32),
+        next_update=jnp.full((Sl,), jnp.inf, jnp.float32),
+        last_update=jnp.zeros((Sl,), jnp.float32),
+        hist_lam=jnp.zeros((D, Sl), jnp.float32),
+        hist_w=jnp.broadcast_to(w0, (D, Sl)).astype(jnp.float32),
+        law=simw.law.init(Sl, cfg0),
+        fct=jnp.full((1, N), jnp.nan, jnp.float32))
+    if mi.use_csr:
+        inv, ovf = build_csr_gather_padded(g.path, Q, mi.maxdeg,
+                                           mi.Qb * mi.ndev)
+        inv = jax.lax.dynamic_slice_in_dim(inv, blk0, mi.Qb, 0)
+    else:
+        inv, ovf = None, None
+    return ShardCarry(g=g, l=loc, inv=inv, ovf=ovf)
+
+
+def _carry_specs(mesh, law_template, use_csr: bool) -> ShardCarry:
+    """PartitionSpec tree for a ShardCarry on ``mesh``: globals
+    replicated, slot-axis leaves on the ``"slot"`` rule, CSR rows on
+    ``"queue"``."""
+    slot = axes_to_pspec(("slot",), mesh)
+    hist = axes_to_pspec((None, "slot"), mesh)
+    rep = P()
+    g = ShardGlob(*([rep] * len(ShardGlob._fields)))
+    law = jax.tree_util.tree_map(lambda _: slot, law_template)
+    loc = ShardLoc(w=slot, rate_cap=slot, remaining=slot,
+                   next_update=slot, last_update=slot,
+                   hist_lam=hist, hist_w=hist, law=law, fct=slot)
+    return ShardCarry(g=g, l=loc,
+                      inv=axes_to_pspec(("queue",), mesh) if use_csr
+                      else None,
+                      ovf=rep if use_csr else None)
+
+
+def _merge_fct(fct_parts: jnp.ndarray) -> jnp.ndarray:
+    """[ndev, N] per-shard FCT buffers -> [N]: every flow is admitted to
+    exactly one shard's slot, so at most one row is finite per column;
+    nanmax selects it without arithmetic (all-NaN columns stay NaN)."""
+    return jnp.nanmax(fct_parts, axis=0)
+
+
+def simulate_slots_sharded(topo: Topology, sched: FlowSchedule,
+                           law_name: Union[str, Law], slots: int,
+                           law_cfg: Optional[LawConfig] = None,
+                           cfg: Optional[SimConfig] = None,
+                           bw_fn: Optional[Callable] = None,
+                           record: bool = True,
+                           devices=None,
+                           chunk: Optional[int] = None):
+    """Run one schedule with the slot pool sharded over ``devices``.
+
+    Same contract and BIT-IDENTICAL results as
+    ``fluid.simulate_slots(topo, sched, law_name, slots, ...)`` on the
+    reference backend, for every device count (tests/test_shard_scenario
+    holds the property; benchmarks gate it at the 256-host anchor for
+    every registry law). ``slots`` must divide evenly over the resolved
+    device count. ``chunk=C`` streams the schedule in C-entry windows
+    exactly as ``simulate_slots(..., chunk=)`` — the two features
+    compose, which is what lets a 100k-flow fat-tree trace run sharded.
+
+    ``devices``: None/1 build the same sharded program on a 1-device
+    mesh (the collectives no-op; this is the honest single-device
+    baseline for scaling numbers), ``"auto"`` uses every local device.
+    """
+    cfg = cfg or SimConfig()
+    law = _resolve_law(law_name, "reference")
+    law_cfg = law_cfg or default_law_config(sched)
+    ndev = resolve_devices(devices)
+    S = int(slots)
+    if S % ndev:
+        raise ValueError(f"slots={S} must divide over {ndev} devices")
+    if record and int(cfg.record_every) > 1:
+        raise ValueError("sharded runs record every tick; record_every "
+                         "> 1 is not supported")
+    sim = SlotSim(topo, sched, law, law_cfg, cfg, S, "reference")
+    sched_np = jax.tree_util.tree_map(np.asarray, sched)
+    N = int(sched_np.start.shape[0])
+    Q = int(topo.num_queues)
+    H = int(sched_np.path.shape[1])
+    T = int(cfg.steps)
+    use_csr = S * H > 128
+    mi = ShardInfo(ndev=ndev, Sl=S // ndev,
+                   Qb=-(-(Q + 1) // ndev), use_csr=use_csr,
+                   maxdeg=(suggest_maxdeg(sched_np.path, Q, S)
+                           if use_csr else 1))
+    # C >= S keeps the 1-tick fallback exact (see _safe_ticks)
+    C = N if chunk is None else min(max(int(chunk), S), max(N, 1))
+    start_np = np.asarray(sched_np.start, np.float32)
+
+    mesh = jax.make_mesh((ndev,), (_AX,))
+    law_template = jax.eval_shape(
+        lambda: law.init(1, _gather_law_cfg(
+            law_cfg, jnp.zeros((1,), jnp.int32), N)))
+    cspecs = _carry_specs(mesh, law_template, use_csr)
+    rep = P()
+
+    def init_fn(win, w0):
+        simw = sim._replace(sched=win, n_flows=N, win_off=w0)
+        carry = _init_carry(simw, mi, jax.lax.axis_index(_AX) * mi.Qb)
+        audit_carry_dtypes(carry)
+        return carry
+
+    init_j = jax.jit(shard_map(init_fn, mesh=mesh, in_specs=(rep, rep),
+                               out_specs=cspecs, check_vma=False))
+
+    seg_cache = {}
+
+    def get_seg(L):
+        if L in seg_cache:
+            return seg_cache[L]
+
+        def seg_fn(carry, win, w0):
+            simw = sim._replace(sched=win, n_flows=N, win_off=w0)
+            ax = jax.lax.axis_index(_AX)
+            off = ax * mi.Sl
+            blk0 = ax * mi.Qb
+
+            def body(c, _):
+                return _shard_tick(simw, mi, off, blk0, c, bw_fn, record)
+
+            return jax.lax.scan(body, carry, None, length=L)
+
+        f = jax.jit(shard_map(seg_fn, mesh=mesh,
+                              in_specs=(cspecs, rep, rep),
+                              out_specs=(cspecs, rep), check_vma=False))
+        seg_cache[L] = f
+        return f
+
+    carry = init_j(_host_window(sched_np, 0, C, Q),
+                   jnp.asarray(0, jnp.int32))
+    recs = []
+    t0 = 0
+    while t0 < T:
+        w0 = int(jax.device_get(carry.g.cursor))
+        safe = _safe_ticks(start_np, w0, C, t0, T, cfg.dt)
+        if w0 + C >= N:
+            L = T - t0        # window covers the tail: one segment
+        else:
+            allowed = max(1, min(max(safe, 1), T - t0, _CHUNK_SEG_MAX))
+            L = 1 << (allowed.bit_length() - 1)
+        win = _host_window(sched_np, w0, C, Q)
+        carry, rec = get_seg(L)(carry, win, jnp.asarray(w0, jnp.int32))
+        if record:
+            recs.append(rec)
+        t0 += L
+
+    if record:
+        recs = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+            *recs)
+    else:
+        recs = None
+    g, loc = carry.g, carry.l
+    state = SlotState(
+        t=g.t, cursor=g.cursor, hw=g.hw, slot_flow=g.slot_flow,
+        admit_t=g.admit_t, free_at=g.free_at, path=g.path,
+        tf_steps=g.tf_steps, rtt_steps=g.rtt_steps, tau=g.tau,
+        nic_rate=g.nic_rate, start=g.start, stop=g.stop, w=loc.w,
+        rate_cap=loc.rate_cap, q=g.q, out_rate=g.out_rate,
+        hist_lam=loc.hist_lam, hist_q=g.hist_q, hist_out=g.hist_out,
+        hist_w=loc.hist_w, remaining=loc.remaining,
+        next_update=loc.next_update, last_update=loc.last_update,
+        law=loc.law, fct=_merge_fct(loc.fct), incidence=None)
+    return state, recs

@@ -41,6 +41,7 @@ import jax
 from .fluid import (default_law_config, pad_flows, simulate_batch,
                     simulate_slots_batch, stack_flow_schedules, stack_flows,
                     stack_law_configs)
+from .shardslots import simulate_slots_sharded
 from .laws import Law
 from .network import make_schedule
 from .rdcn import CircuitSchedule, circuit_bw_at, stack_schedules
@@ -217,14 +218,35 @@ class SweepResult(NamedTuple):
 
 def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
               cfg: Optional[SimConfig] = None, record: bool = True,
-              devices=None) -> SweepResult:
+              devices=None, shard_scenario: bool = False,
+              chunk: Optional[int] = None) -> SweepResult:
     """Expand ``spec`` and run it: one compiled, batched (and, with
     ``devices``, sharded) program per (topology, law, backend) triple
     covering that triple's whole slab of the grid. ``devices`` is
     forwarded to ``simulate_batch``. Pass ``topo`` for single-fabric
     specs (the historical form); with a ``topologies`` axis on the spec
     the fabrics come from the spec itself and ``topo`` must be None.
+
+    ``shard_scenario=True`` flips what ``devices`` parallelizes: instead
+    of sharding the BATCH axis (many scenarios, one per device slice),
+    each grid point runs alone with its slot pool and queue-arrival
+    accumulation sharded across the mesh
+    (``shardslots.simulate_slots_sharded``, DESIGN.md section 15) —
+    the mode for scenarios too large for one device. Requires a slot
+    spec (``spec.slots``), the reference backend, and no RDCN schedule
+    axis; points run sequentially, bit-identical to the batched slot
+    path. ``chunk`` streams each point's schedule in C-entry windows.
     """
+    if shard_scenario:
+        if spec.slots is None:
+            raise ValueError("shard_scenario requires a slot spec "
+                             "(spec.slots)")
+        if any(be != "reference" for be in spec.backend_axis):
+            raise ValueError("shard_scenario supports the reference "
+                             "backend only")
+        if spec.schedules is not None:
+            raise ValueError("shard_scenario does not support an RDCN "
+                             "schedule axis")
     if spec.topologies is not None:
         if topo is not None:
             raise ValueError("spec carries a topology axis; pass topo=None")
@@ -274,6 +296,21 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
                     bw_params = stack_schedules(
                         [spec.schedules[p.sched_idx] for p in rows])
                 if spec.slots is not None:
+                    if shard_scenario:
+                        sts, rcs = [], []
+                        for p, lcfg in zip(rows, lcfgs):
+                            st_i, rec_i = simulate_slots_sharded(
+                                topo_t, scheds[p.flows_idx], law,
+                                spec.slots, lcfg, cfg, record=record,
+                                devices=devices, chunk=chunk)
+                            sts.append(st_i)
+                            rcs.append(rec_i)
+                        states[key] = jax.tree_util.tree_map(
+                            lambda *xs: jax.numpy.stack(xs), *sts)
+                        records[key] = (jax.tree_util.tree_map(
+                            lambda *xs: jax.numpy.stack(xs), *rcs)
+                            if record else None)
+                        continue
                     sb = stack_flow_schedules(
                         [scheds[p.flows_idx] for p in rows],
                         topo_t.num_queues)

@@ -144,6 +144,29 @@ def build_csr_gather(path: jnp.ndarray, num_queues: int, maxdeg: int):
     return inv[:-1].reshape(num_queues + 1, maxdeg), overflow
 
 
+def build_csr_gather_padded(path: jnp.ndarray, num_queues: int,
+                            maxdeg: int, rows: int):
+    """``build_csr_gather`` padded to ``rows`` queue rows.
+
+    The sharded single-scenario engine (core/shardslots.py) partitions
+    the inverted incidence row-wise over the device mesh; ``rows`` is the
+    queue count rounded up to a multiple of the shard count so every
+    shard owns an equal block. Pad rows hold only the sentinel index
+    (``S*H``), which ``csr_gather_arrivals`` maps to +0.0 — a shard that
+    owns pad rows accumulates exact zeros for them. ``overflow`` keeps
+    its whole-table meaning. ``csr_gather_arrivals`` works unchanged on
+    a row block: each queue's in-order column-add chain lives entirely
+    within the row that owns it.
+    """
+    inv, overflow = build_csr_gather(path, num_queues, maxdeg)
+    extra = rows - (num_queues + 1)
+    if extra > 0:
+        nnz = int(path.reshape(-1).shape[0])
+        inv = jnp.concatenate(
+            [inv, jnp.full((extra, maxdeg), nnz, jnp.int32)])
+    return inv, overflow
+
+
 def csr_gather_arrivals(contrib: jnp.ndarray, inv: jnp.ndarray,
                         zero: jnp.ndarray) -> jnp.ndarray:
     """Arrival sums from the inverted incidence: one [Q+1, maxdeg] gather

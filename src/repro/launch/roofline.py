@@ -94,6 +94,32 @@ def roofline_terms(cell: Dict) -> Dict:
     }
 
 
+def tick_roofline(flops: float, bytes_accessed: float,
+                  peak_flops: float = PEAK_FLOPS,
+                  hbm_bw: float = HBM_BW) -> Dict:
+    """Roofline terms for one simulator tick from raw XLA cost analysis.
+
+    ``tools/profile_tick.py`` feeds the compiled scan body's
+    flops/bytes-per-tick here: the result is the time the tick's
+    arithmetic and memory traffic would take on the reference
+    accelerator (mesh.py constants), which of the two binds, and the
+    arithmetic intensity — the gap between ``roofline_us`` and the
+    measured CPU wall-clock is the fusion/dispatch overhead a kernel
+    PR can actually recover.
+    """
+    compute_s = flops / peak_flops
+    memory_s = bytes_accessed / hbm_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s}
+    return {
+        "compute_us": compute_s * 1e6,
+        "memory_us": memory_s * 1e6,
+        "bound": max(terms, key=terms.get).replace("_s", ""),
+        "intensity_flops_per_byte": (flops / bytes_accessed
+                                     if bytes_accessed else 0.0),
+        "roofline_us": max(terms.values()) * 1e6,
+    }
+
+
 def render_row(cell: Dict) -> str:
     r = roofline_terms(cell)
     return (f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "

@@ -19,9 +19,15 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> mesh axis (None = replicated). "batch" expands to all
-# data-parallel axes present in the mesh.
+# data-parallel axes present in the mesh. "slot" and "queue" carry the
+# simulator's device-parallel single-scenario layout (core/shardslots.py,
+# DESIGN.md section 15): the flow-slot pool and the queue-arrival blocks
+# are partitioned over the data axis, everything else in the tick state is
+# replicated.
 DEFAULT_RULES = {
     "batch": ("pod", "data"),
+    "slot": "data",
+    "queue": "data",
     "vocab": "model",
     "heads": "model",
     "kv": "model",

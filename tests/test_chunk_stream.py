@@ -1,0 +1,136 @@
+"""Chunk-streamed schedule windows (DESIGN.md section 15).
+
+The contract under test: ``simulate_slots(..., chunk=C)`` reproduces the
+single-shot trajectory BIT-FOR-BIT for EVERY chunk size — the window
+carry (cursor, ring history, occupancy, per-slot law state) crosses
+segment boundaries without perturbing a single ulp. A bounded pool
+(S < N) forces admission queueing and slot retirement to straddle
+window boundaries, and the occupancy/ring invariants are asserted on
+the same runs.
+
+The property runs over a fixed adversarial chunk grid everywhere; when
+``hypothesis`` is installed it additionally fuzzes arbitrary chunk
+sizes (the package is optional — the container image does not ship it).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, SimConfig, default_law_config,
+                        make_flows_single, make_schedule,
+                        schedule_as_flows, simulate_slots,
+                        single_bottleneck)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+B = 100 * GBPS
+S = 8          # bounded pool: 18 flows stream through 8 slots
+N = 18
+
+# C < S (clamped up), C == S, primes, C == N, C > N (single window)
+CHUNK_GRID = [1, 3, 7, 8, 13, 18, 29, 40]
+
+
+def _scenario(steps=2500, seed=2):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(N, tau=20 * US, nic=B,
+                              sizes=rng.uniform(6e4, 3e5, N),
+                              starts=rng.uniform(0.0, 1.2e-3, N),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, sched, cfg
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    topo, sched, cfg = _scenario()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    st0, rec0 = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg)
+    return topo, sched, cfg, lcfg, st0, rec0
+
+
+def _assert_bitmatch(chunked, single):
+    st_c, rec_c = chunked
+    st_0, rec_0 = single
+    assert np.array_equal(np.asarray(rec_c.q), np.asarray(rec_0.q))
+    assert np.array_equal(np.asarray(st_c.fct), np.asarray(st_0.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_c.w), np.asarray(st_0.w))
+    assert np.array_equal(np.asarray(rec_c.lam_f), np.asarray(rec_0.lam_f))
+    assert np.array_equal(np.asarray(rec_c.w_sum), np.asarray(rec_0.w_sum))
+    assert np.array_equal(np.asarray(rec_c.n_active),
+                          np.asarray(rec_0.n_active))
+    assert int(st_c.cursor) == int(st_0.cursor)
+
+
+def _check_bitmatch(baseline, chunk):
+    topo, sched, cfg, lcfg, st0, rec0 = baseline
+    out = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                         chunk=chunk)
+    _assert_bitmatch(out, (st0, rec0))
+
+
+def _check_invariants(baseline, chunk):
+    """Occupancy and ring invariants across every segment boundary: the
+    active set never exceeds the pool, queues stay within physical
+    bounds, every flow is eventually admitted and completed, and the
+    tick counter equals the horizon."""
+    topo, sched, cfg, lcfg, _, _ = baseline
+    st_c, rec_c = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                                 chunk=chunk)
+    assert int(np.asarray(rec_c.n_active).max()) <= S
+    assert float(np.asarray(rec_c.q).min()) >= 0.0
+    assert int(st_c.cursor) == N          # every entry admitted
+    assert int(st_c.hw) <= S
+    assert np.isfinite(np.asarray(st_c.fct)).all()   # all completed
+    assert int(st_c.t) == cfg.steps
+
+
+@pytest.mark.parametrize("chunk", CHUNK_GRID)
+def test_any_chunk_size_bitmatches_single_shot(baseline, chunk):
+    """Window size is a pure performance knob: any C (clamped to [S, N]
+    internally) yields the identical trajectory."""
+    _check_bitmatch(baseline, chunk)
+
+
+@pytest.mark.parametrize("chunk", [1, 13, 29])
+def test_chunk_boundary_invariants(baseline, chunk):
+    _check_invariants(baseline, chunk)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=8,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(chunk=hst.integers(min_value=1, max_value=N + 22))
+    def test_fuzzed_chunk_size_bitmatches_single_shot(baseline, chunk):
+        _check_bitmatch(baseline, chunk)
+
+    @settings(deadline=None, max_examples=6,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(chunk=hst.integers(min_value=1, max_value=N + 10))
+    def test_fuzzed_chunk_boundary_invariants(baseline, chunk):
+        _check_invariants(baseline, chunk)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, N])
+def test_megakernel_chunk_bitmatches_single_shot(baseline, chunk):
+    """The fused whole-tick backend honours the same carry contract."""
+    topo, sched, cfg, lcfg, _, _ = baseline
+    single = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                            backend="megakernel")
+    out = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                         backend="megakernel", chunk=chunk)
+    _assert_bitmatch(out, single)
+
+
+def test_chunk_rejects_coarse_recording(baseline):
+    topo, sched, _, lcfg, _, _ = baseline
+    cfg = SimConfig(dt=1e-6, steps=512, hist=256, record_every=8)
+    with pytest.raises(ValueError):
+        simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8)

@@ -1,0 +1,162 @@
+"""Device-parallel single-scenario sharding (DESIGN.md section 15).
+
+``simulate_slots_sharded`` partitions ONE scenario's slot pool and
+queue-arrival blocks over the device mesh and must reproduce the
+reference slot engine bit-for-bit — the halo exchange is an ordered
+all-gather precisely so no float reduction is reassociated. In-process
+tests pin the 1-device mesh (shard_map plumbing, windowed admission,
+CSR rebuild) against the reference engine; the forced-8-CPU-device
+checks run in a subprocess because ``XLA_FLAGS`` must be set before
+jax imports.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, SimConfig, SweepSpec, default_law_config,
+                        make_flows_single, make_schedule, run_sweep,
+                        schedule_as_flows, simulate_slots,
+                        simulate_slots_sharded, single_bottleneck)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+B = 100 * GBPS
+
+
+def _scenario(n=12, steps=2500, seed=0):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=20 * US, nic=B,
+                              sizes=rng.uniform(8e4, 4e5, n),
+                              starts=rng.uniform(0.0, 1.5e-3, n),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, sched, cfg
+
+
+def _assert_bitmatch(sharded, reference):
+    st_d, rec_d = sharded
+    st_r, rec_r = reference
+    assert np.array_equal(np.asarray(rec_d.q), np.asarray(rec_r.q))
+    assert np.array_equal(np.asarray(st_d.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_d.w), np.asarray(st_r.w))
+    assert np.array_equal(np.asarray(rec_d.lam_f), np.asarray(rec_r.lam_f))
+    assert np.array_equal(np.asarray(rec_d.w_sum), np.asarray(rec_r.w_sum))
+    assert np.array_equal(np.asarray(rec_d.n_active),
+                          np.asarray(rec_r.n_active))
+
+
+@pytest.mark.parametrize("law", ["powertcp", "hpcc", "timely"])
+def test_sharded_bitmatches_reference_1device(law):
+    topo, sched, cfg = _scenario()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    ref = simulate_slots(topo, sched, law, 12, lcfg, cfg)
+    shd = simulate_slots_sharded(topo, sched, law, 12, lcfg, cfg,
+                                 devices=1)
+    _assert_bitmatch(shd, ref)
+
+
+def test_sharded_bounded_pool_with_chunk_1device():
+    """Bounded pool (S < N) + chunk streaming composed with sharding."""
+    topo, sched, cfg = _scenario(n=12)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    ref = simulate_slots(topo, sched, "powertcp", 8, lcfg, cfg)
+    shd = simulate_slots_sharded(topo, sched, "powertcp", 8, lcfg, cfg,
+                                 devices=1, chunk=9)
+    _assert_bitmatch(shd, ref)
+
+
+def test_sharded_rejects_coarse_recording():
+    topo, sched, _ = _scenario()
+    cfg = SimConfig(dt=1e-6, steps=512, hist=256, record_every=8)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    with pytest.raises(ValueError):
+        simulate_slots_sharded(topo, sched, "powertcp", 12, lcfg, cfg,
+                               devices=1)
+
+
+def test_sweep_shard_scenario_matches_batched_slots():
+    """``run_sweep(..., shard_scenario=True)`` == the batched slot path
+    point for point."""
+    topo, sched, cfg = _scenario(n=10, steps=1500)
+    flows = schedule_as_flows(sched)
+    spec = SweepSpec(laws=["powertcp", "hpcc"], flows=[flows], slots=10,
+                     expected_flows=8.0)
+    base = run_sweep(spec, topo, cfg, record=False)
+    shd = run_sweep(spec, topo, cfg, record=False, shard_scenario=True)
+    assert [p for p in base.points] == [p for p in shd.points]
+    for li in base.states:
+        for a, b in zip(np.asarray(base.states[li].fct),
+                        np.asarray(shd.states[li].fct)):
+            np.testing.assert_array_equal(a, b)
+
+
+_SHARD8_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+    assert jax.local_device_count() == 8, jax.local_device_count()
+
+    from repro.core import (GBPS, SimConfig, default_law_config,
+                            make_flows_single, make_schedule,
+                            schedule_as_flows, simulate_slots,
+                            simulate_slots_sharded, single_bottleneck)
+
+    B = 100 * GBPS
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(0)
+    n = 20
+    flows = make_flows_single(n, tau=20e-6, nic=B,
+                              sizes=rng.uniform(8e4, 4e5, n),
+                              starts=rng.uniform(0.0, 1.5e-3, n),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=2500, hist=256)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+
+    # bounded pool, 8-way mesh: 2 slots per shard
+    st_r, rec_r = simulate_slots(topo, sched, "powertcp", 16, lcfg, cfg)
+    st_d, rec_d = simulate_slots_sharded(topo, sched, "powertcp", 16,
+                                         lcfg, cfg, devices="auto")
+    assert np.array_equal(np.asarray(rec_d.q), np.asarray(rec_r.q))
+    assert np.array_equal(np.asarray(st_d.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_d.w), np.asarray(st_r.w))
+    assert np.array_equal(np.asarray(rec_d.lam_f), np.asarray(rec_r.lam_f))
+
+    # chunk streaming composes with the 8-way mesh
+    st_c, rec_c = simulate_slots_sharded(topo, sched, "powertcp", 16,
+                                         lcfg, cfg, devices="auto",
+                                         chunk=9)
+    assert np.array_equal(np.asarray(rec_c.q), np.asarray(rec_r.q))
+    assert np.array_equal(np.asarray(st_c.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+
+    # the pool must split evenly over the mesh
+    try:
+        simulate_slots_sharded(topo, sched, "powertcp", 12, lcfg, cfg,
+                               devices="auto")
+        raise SystemExit("expected ValueError for S % ndev != 0")
+    except ValueError:
+        pass
+    print("SHARD8-OK")
+""")
+
+
+def test_sharded_bitmatches_reference_on_8_devices():
+    """Acceptance: the 8-way mesh reproduces the reference engine
+    bit-for-bit (queue trace, FCTs, windows, per-slot rates), chunked
+    and unchunked, and rejects non-divisible pools."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep +
+                         env.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", _SHARD8_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARD8-OK" in r.stdout

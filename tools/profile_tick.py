@@ -150,6 +150,21 @@ def profile_backend(topo, sched, law: str, slots: int, steps: int,
         "body_non_fusible": {k: v for k, v in sorted(body.items())
                              if any(s in k for s in NON_FUSIBLE)},
     }
+    # accelerator roofline for the same tick (launch/roofline.py): what
+    # the per-tick flops/bytes would cost compute- and memory-bound on
+    # the reference chip — the measured-vs-roofline ratio separates
+    # "the tick is doing too much work" from "CPU dispatch overhead"
+    from repro.launch.roofline import tick_roofline
+    rf = tick_roofline(out["flops_per_tick"], out["bytes_per_tick"])
+    out["roofline"] = {
+        "compute_us": round(rf["compute_us"], 4),
+        "memory_us": round(rf["memory_us"], 4),
+        "bound": rf["bound"],
+        "intensity_flops_per_byte": round(
+            rf["intensity_flops_per_byte"], 3),
+        "measured_over_roofline": round(
+            out["us_per_tick"] / max(rf["roofline_us"], 1e-9), 1),
+    }
     if trace_dir:
         with jax.profiler.trace(trace_dir):
             jax.block_until_ready(compiled(arg0))
@@ -197,7 +212,8 @@ def main(argv=None):
         results.append(r)
         print(f"\n== {be} ==")
         for k, v in r.items():
-            if k in ("body_non_fusible", "thunks_us_per_tick"):
+            if k in ("body_non_fusible", "thunks_us_per_tick",
+                     "roofline"):
                 print(f"  {k}:")
                 for kk, vv in v.items():
                     print(f"    {kk:42s} {vv}")
@@ -205,6 +221,8 @@ def main(argv=None):
                 print(f"  {k}: {v}")
         print(f"BENCH,profile_tick.{be}.us_per_tick,"
               f"{r['us_per_tick']},us")
+        print(f"BENCH,profile_tick.{be}.roofline_{r['roofline']['bound']}"
+              f"_bound_us,{max(r['roofline']['compute_us'], r['roofline']['memory_us']):.4f},us")
     if len(results) == 2:
         sp = results[0]["wall_s"] / max(results[1]["wall_s"], 1e-9)
         print(f"\nBENCH,profile_tick.speedup,{sp:.2f},x")
