@@ -1,0 +1,119 @@
+"""Feedback-channel law benchmarks (DESIGN.md section 16).
+
+``run`` is the fig6/fig7-style comparison for the four feedback-channel
+families (fncc, pulser, backpressure, pcc — core/feedback.py) against
+the receiver-echo baselines (powertcp, hpcc, timely) on the two fabric
+legs where their feedback models matter: the k=4 fat-tree web-search
+workload (5-hop ECMP paths, where fncc's congestion-point feedback runs
+a strictly shorter control loop than the receiver echo) and the
+repeated incast-burst workload (where pulser's sender-count channel
+snaps straight to the fair share instead of searching for it).
+
+``smoke_feedback`` is the CI leg (run.py --smoke): every feedback law
+runs the SAME two anchors on all three engines — padded reference,
+flow-slot stream and megakernel — and the per-law cross-engine bitmatch
+flags land in BENCH_sweep.json as ``fct_feedback_*`` fields, gated by
+ci.yml next to the fabric legs (benchmarks/README.md has the field
+reference).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (SimConfig, incast_burst, make_schedule,
+                        suggest_slots)
+from .common import emit, fct_stats, run_law_slots, table
+from .fabric_fct import DT, _bitmatch_three_engines, anchor_scenario
+
+FEEDBACK_LAWS = ["fncc", "pulser", "backpressure", "pcc"]
+BASELINES = ["powertcp", "hpcc", "timely"]
+
+
+def incast_scenario(ft, fan_in: int = 8, req_bytes: float = 2e5,
+                    n_bursts: int = 3):
+    """Repeated fan-in bursts on the fat-tree (the fig7-style leg)."""
+    flows, bqs = incast_burst(ft, fan_in=fan_in, req_bytes=req_bytes,
+                              n_bursts=n_bursts, period=2e-3, sim_dt=DT,
+                              seed=1)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=DT, steps=9000, hist=512, update_period=2e-6)
+    return sched, cfg, bqs
+
+
+def _fct_us(st, sched):
+    s = fct_stats(st, sched)
+    return {k: (round(v * 1e6, 3) if np.isfinite(v) else None)
+            for k, v in s.items()}
+
+
+def smoke_feedback() -> dict:
+    """CI feedback leg: fct_feedback_* fields for BENCH_sweep.json."""
+    ft, ws_sched, ws_cfg = anchor_scenario()
+    topo = ft.topology()
+    inc_sched, inc_cfg, _ = incast_scenario(ft)
+
+    data: dict = {"fct_feedback_laws": ",".join(FEEDBACK_LAWS)}
+    all_ok = True
+    for law in FEEDBACK_LAWS:
+        _, (ws_rs, ws_m), _, st_ws = _bitmatch_three_engines(
+            topo, ws_sched, ws_cfg, law=law)
+        _, (in_rs, in_m), _, st_in = _bitmatch_three_engines(
+            topo, inc_sched, inc_cfg, law=law)
+        ok = bool(ws_rs and ws_m and in_rs and in_m)
+        all_ok &= ok
+        data[f"fct_feedback_bitmatch_{law}"] = ok
+        data[f"fct_feedback_ws_mean_us_{law}"] = _fct_us(
+            st_ws, ws_sched)["all_mean"]
+        data[f"fct_feedback_incast_p_us_{law}"] = _fct_us(
+            st_in, inc_sched)["all_p"]
+    data["fct_feedback_bitmatch_all"] = bool(all_ok)
+
+    # baseline FCTs on the identical anchors, for the fig6/fig7-style
+    # comparison (slot engine only — the baselines' three-engine gates
+    # already run in the fabric leg)
+    for law in BASELINES:
+        st_ws, _, _ = run_law_slots(topo, ws_sched, law, ws_cfg,
+                                    suggest_slots(ws_sched, DT),
+                                    expected_flows=8.0)
+        st_in, _, _ = run_law_slots(topo, inc_sched, law, inc_cfg,
+                                    int(inc_sched.start.shape[0]),
+                                    expected_flows=8.0)
+        data[f"fct_feedback_ws_mean_us_{law}"] = _fct_us(
+            st_ws, ws_sched)["all_mean"]
+        data[f"fct_feedback_incast_p_us_{law}"] = _fct_us(
+            st_in, inc_sched)["all_p"]
+    return data
+
+
+def run(quick: bool = False, devices=None):
+    """Fig6/fig7-style FCT tables: feedback laws vs baselines on the
+    fat-tree web-search and incast-burst legs."""
+    ft, ws_sched, ws_cfg = anchor_scenario(
+        load=0.25, duration=0.002 if quick else 0.004)
+    topo = ft.topology()
+    inc_sched, inc_cfg, _ = incast_scenario(
+        ft, n_bursts=2 if quick else 3)
+    laws = FEEDBACK_LAWS + BASELINES
+    ws_rows, inc_rows = [], []
+    for law in laws:
+        st, _, wall = run_law_slots(topo, ws_sched, law, ws_cfg,
+                                    suggest_slots(ws_sched, DT),
+                                    expected_flows=8.0)
+        s = _fct_us(st, ws_sched)
+        ws_rows.append({"law": law, "short_p": s["short_p"],
+                        "all_mean": s["all_mean"], "wall_s": wall})
+        emit(f"feedback.ws.{law}.all_mean_us", s["all_mean"], "us")
+        st, _, wall = run_law_slots(topo, inc_sched, law, inc_cfg,
+                                    int(inc_sched.start.shape[0]),
+                                    expected_flows=8.0)
+        s = _fct_us(st, inc_sched)
+        inc_rows.append({"law": law, "all_p": s["all_p"],
+                         "all_mean": s["all_mean"], "wall_s": wall})
+        emit(f"feedback.incast.{law}.p_us", s["all_p"], "us")
+    print(table(ws_rows, ["law", "short_p", "all_mean", "wall_s"],
+                "feedback laws: fat-tree web-search FCT (us)"))
+    print(table(inc_rows, ["law", "all_p", "all_mean", "wall_s"],
+                "feedback laws: fat-tree incast-burst FCT (us)"))
+    # scoreboard claim: every feedback law completes every flow on both
+    # legs (None = some flow never finished)
+    return all(r["all_mean"] is not None for r in ws_rows + inc_rows)

@@ -374,6 +374,8 @@ def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
     from .fabric_fct import smoke_fabric, smoke_fabric16
     data.update(smoke_fabric())
     data.update(smoke_fabric16(devices=devices))
+    from .feedback_fct import smoke_feedback
+    data.update(smoke_feedback())
     out = os.path.join(os.path.dirname(__file__), "..", out_name)
     with open(out, "w") as f:
         json.dump(data, f, indent=2)
@@ -458,11 +460,22 @@ def main():
               and data["fct_fabric16_exact_bitmatch"]
               and data["fct_fabric16_devices_bitmatch"]
               and (data["fct_fabric16_devices"] < 2
-                   or data["fct_fabric16_shard_speedup"] > 1.0))
+                   or data["fct_fabric16_shard_speedup"] > 1.0)
+              # feedback-channel laws (DESIGN.md section 16): every new
+              # family bit-for-bit across all three engines on the
+              # web-search AND incast anchors, with finite mean FCTs
+              and data["fct_feedback_bitmatch_all"]
+              and data["fct_feedback_bitmatch_fncc"]
+              and data["fct_feedback_bitmatch_pulser"]
+              and data["fct_feedback_bitmatch_backpressure"]
+              and data["fct_feedback_bitmatch_pcc"]
+              and all(data[f"fct_feedback_ws_mean_us_{l}"] is not None
+                      for l in ("fncc", "pulser", "backpressure", "pcc")))
         return 0 if ok else 1
 
-    from . import (fabric_fct, fig3_phase, fig4_incast, fig5_fairness,
-                   fig6_fct, fig7_load_sweep, fig8_rdcn, tab_commsched)
+    from . import (fabric_fct, feedback_fct, fig3_phase, fig4_incast,
+                   fig5_fairness, fig6_fct, fig7_load_sweep, fig8_rdcn,
+                   tab_commsched)
     def sharded(fn):
         return lambda quick: fn(quick=quick, devices=devices)
 
@@ -474,6 +487,7 @@ def main():
         "fig7": sharded(fig7_load_sweep.run),
         "fig8": sharded(fig8_rdcn.run),
         "fabric": sharded(fabric_fct.run),
+        "feedback": feedback_fct.run,
         "commsched": tab_commsched.run,
     }
     only = set(a.only.split(",")) if a.only else set(suite)

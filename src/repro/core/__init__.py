@@ -30,6 +30,7 @@ from .rdcn import (CircuitSchedule, ScheduleParams, circuit_bw_at,
                    circuit_up, circuit_utilization, make_retcp_law,
                    queuing_latency_percentile, stack_schedules,
                    voq_topology)
+from . import feedback  # noqa: F401  (registers the feedback-channel laws)
 from .sweep import SweepPoint, SweepResult, SweepSpec, expand, run_sweep
 from . import analysis
 

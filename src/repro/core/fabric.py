@@ -170,6 +170,21 @@ class Fabric:
         leaf-spine is uplink-limited)."""
         return min(self.uplink_capacity(), float(self.host_nic_rate().sum()))
 
+    def reverse_links(self) -> np.ndarray:
+        """[L] int32 id of each link's reverse link — the link declared
+        between the same node pair in the opposite direction — or -1 when
+        the fabric has none. Every builder in this module declares links
+        in symmetric pairs EXCEPT ``single_bottleneck_fabric`` (one-way
+        spine, no return path), so hop-by-hop feedback derivations
+        (``FabricRoutes.reverse_path`` / ``notify_delays``) raise there
+        instead of inventing a path the fabric does not have."""
+        idx = {(int(s), int(d)): l for l, (s, d)
+               in enumerate(zip(self.link_src, self.link_dst))}
+        out = np.full(len(self.link_src), -1, np.int32)
+        for l, (s, d) in enumerate(zip(self.link_src, self.link_dst)):
+            out[l] = idx.get((int(d), int(s)), -1)
+        return out
+
 
 class FabricBuilder:
     """Imperative construction helper. Add ALL hosts before any switch
@@ -435,6 +450,56 @@ class FabricRoutes:
                            rtt=rtt, n_hops=n_hops)
         self._pairs[key] = cp
         return cp
+
+    def reverse_path(self, links) -> Tuple[int, ...]:
+        """The reverse-path walk of a forward link path: the reverse link
+        of each forward link, traversed destination-first (the order a
+        congestion-point notification actually travels). Raises
+        ``ValueError`` if any hop lacks a reverse link (one-way fabrics
+        like ``single_bottleneck_fabric`` cannot carry hop feedback)."""
+        rev = self.fabric.reverse_links()
+        out = []
+        for l in reversed(tuple(links)):
+            r = int(rev[int(l)])
+            if r < 0:
+                raise ValueError(
+                    f"link {int(l)} has no reverse link; fabric "
+                    f"'{self.fabric.name}' cannot route hop-by-hop "
+                    f"feedback")
+            out.append(r)
+        return tuple(out)
+
+    def notify_delays(self, src: int, dst: int) -> np.ndarray:
+        """[P, H] congestion-point notification delay of each hop of each
+        ECMP path of one pair: the reverse-path latency from hop h's
+        queue back to the sender (``Law.feedback == "hop"`` semantics,
+        DESIGN.md section 16).
+
+        Accumulated in FORWARD hop order (``cum += link_delay[rev[l]]``
+        while walking the forward path), the exact float64 order
+        ``paths()`` uses for ``tf`` — so on symmetric fabrics (equal
+        delays both ways, every builder here) the notify delay equals the
+        forward INT delay bitwise, which is the identity the engines'
+        ``tf_steps``-based hop-feedback clock relies on. Padded hops keep
+        delay 0. Raises on fabrics without reverse links."""
+        f = self.fabric
+        rev = f.reverse_links()
+        cp = self.paths(src, dst)
+        nd = np.zeros((len(cp.links), self.H), np.float64)
+        for p, lp in enumerate(cp.links):
+            cum = 0.0
+            h = 0
+            for l in lp:
+                r = int(rev[l])
+                if r < 0:
+                    raise ValueError(
+                        f"link {l} has no reverse link; fabric "
+                        f"'{f.name}' cannot route hop-by-hop feedback")
+                if self._qid[l] >= 0:
+                    nd[p, h] = cum
+                    h += 1
+                cum = cum + float(f.link_delay[r])
+        return nd
 
     def select(self, src: np.ndarray, dst: np.ndarray,
                flow_ids: Optional[np.ndarray] = None,

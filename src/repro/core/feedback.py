@@ -1,0 +1,231 @@
+"""Feedback-channel law families (DESIGN.md section 16).
+
+Four congestion-control families the classic receiver-echo INT loop
+cannot express, each exercising one axis of the feedback-path model the
+engines grew for them (``Law.feedback`` / ``uses_pause`` /
+``uses_incast``):
+
+  fncc          congestion-point feedback: the congested switch notifies
+                the sender directly over the reverse path, so hop h's
+                telemetry is tf_h old instead of rtt - tf_h — an
+                HPCC-style utilization MIMD on a strictly shorter control
+                loop (FNCC, PAPERS.md).
+  pulser        incast notification fast response: switches report the
+                live sender count per queue; when it crosses a threshold
+                the sender snaps its window straight to the fair share
+                b*tau/n in ONE update instead of searching for it
+                (Pulser, PAPERS.md).
+  backpressure  hop-by-hop per-queue pausing: queues raise XOFF at a high
+                watermark and clear it at a low one (engine-side
+                hysteresis, ``fluid._pause_step``); senders cut
+                multiplicatively while any path hop is paused and
+                additively increase otherwise (PFC-style).
+  pcc           online utility racing: each update evaluates a rational
+                delay-penalized utility at a batch of candidate rates
+                (``jax.vmap`` over the probe axis — the law's inner loop
+                is itself a batched experiment) and moves to the argmax
+                (PCC, PAPERS.md). The utility is transcendental-free by
+                construction: cross-engine bit-equality of an argmax
+                needs every probe utility to round identically, and
+                divisions/multiplies pin (laws._pin/_nofma) where logs
+                would not.
+
+All four register through ``laws.register_law`` on import (this module is
+imported by ``core/__init__``), so the registry-driven conformance suites
+(tests/test_backends.py, tests/test_megakernel.py, tests/test_fabric.py)
+and golden-trace tooling enroll them with zero per-law test edits.
+
+Closed-form operating points (asserted in tests/test_laws_equilibrium.py,
+N long-lived flows at one bottleneck b, base RTT tau, BDP = b*tau):
+
+  fncc          w_sum = eta*BDP + sum(beta);  q = w_sum - BDP when > 0
+  pulser        w_i = b*tau/N (fair share in one pulse), q -> 0, full util
+  backpressure  sawtooth around bp_xoff (no closed fixed point; the test
+                asserts the oscillation band + no deadlock)
+  pcc           q = (N*host_bw/b)^2 * b*tau / pcc_b  (utility stationary
+                point r* = host_bw / sqrt(pcc_b * excess), summed to b)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .laws import Law, _ewma, _nofma, _pin, _smooth, register_law
+from .types import MTU
+
+
+# --------------------------------------------------------------------------
+# FNCC — congestion-point feedback (hop-delay telemetry)
+# --------------------------------------------------------------------------
+
+class FNCCState(NamedTuple):
+    u: jnp.ndarray                  # EWMA max-link utilization proxy
+
+
+def fncc_init(n, cfg):
+    return FNCCState(jnp.ones((n,), jnp.float32))
+
+
+def fncc_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """HPCC-style utilization MIMD driven by congestion-point feedback.
+
+    Identical per-link utilization estimator to hpcc (q/BDP + mu/b), but
+    the observation arrives over the reverse path from the congested hop
+    (``feedback="hop"``) — tf_h old instead of rtt - tf_h — and the
+    window target is the direct fixed-point form w/(u/eta) + beta (no
+    wc/stage machinery), which gives the clean closed-form equilibrium
+    asserted in the fixed-point suite."""
+    tau = cfg.tau[:, None]
+    u_link = jnp.where(obs.valid,
+                       obs.q / jnp.maximum(obs.b * tau, 1.0) +
+                       obs.mu / jnp.maximum(obs.b, 1.0), 0.0)
+    u_max = jnp.max(u_link, axis=1)
+    u = jnp.where(upd_mask, _smooth(state.u, u_max, obs.dt_obs, cfg.tau),
+                  state.u)
+    target = obs.w_old / jnp.maximum(u / cfg.fncc_eta, 1e-6) + cfg.beta
+    w_new = _ewma(cfg.gamma, target, w)
+    w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+    return FNCCState(u), w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# Pulser — incast notification fast response
+# --------------------------------------------------------------------------
+
+class PulserState(NamedTuple):
+    dummy: jnp.ndarray
+
+
+def pulser_init(n, cfg):
+    return PulserState(jnp.zeros((n,), jnp.float32))
+
+
+def pulser_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """Snap to fair share when a path hop reports an incast.
+
+    ``obs.incast`` carries each hop's live sender count (hop-delayed —
+    the switch notifies directly). When any hop's count reaches
+    ``pulser_n`` the window clamps to the tightest fair share
+    min_h(b_h/n_h) * tau in one update (never raising w); otherwise plain
+    additive increase. With N >= pulser_n long-lived flows at one
+    bottleneck every sender lands on w_i = b*tau/N immediately, which is
+    the zero-queue full-utilization operating point."""
+    n_hop = obs.incast                                   # [F,H]
+    n_max = jnp.max(jnp.where(obs.valid, n_hop, 0.0), axis=1)
+    share = jnp.min(jnp.where(obs.valid & (n_hop > 0.0),
+                              obs.b / jnp.maximum(n_hop, 1.0), jnp.inf),
+                    axis=1)
+    w_fair = jnp.maximum(_nofma(_pin(share * cfg.tau)), MTU)
+    pulse = n_max >= cfg.pulser_n
+    w_new = jnp.where(pulse, jnp.minimum(w, w_fair), w + cfg.beta)
+    w = jnp.where(upd_mask, jnp.maximum(w_new, MTU), w)
+    return state, w, rate_cap
+
+
+# --------------------------------------------------------------------------
+# Backpressure — hop-by-hop per-queue pausing
+# --------------------------------------------------------------------------
+
+class BackpressureState(NamedTuple):
+    last_cut: jnp.ndarray
+
+
+def backpressure_init(n, cfg):
+    return BackpressureState(jnp.zeros((n,), jnp.float32))
+
+
+def backpressure_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """AI/MD against the engine-side XON/XOFF pause channel.
+
+    ``obs.pause`` is the hop-delayed per-queue pause state
+    (``fluid._pause_step`` hysteresis between bp_xon and bp_xoff). While
+    any path hop is paused the window halves (``bp_md``), at most once
+    per RTT (the reno cut-cooldown pattern); unpaused updates add beta.
+    The pause channel can never deadlock a drained queue — draining below
+    bp_xon structurally clears the pause, which re-enables increase (the
+    property suite asserts this end to end)."""
+    paused = jnp.max(jnp.where(obs.valid, obs.pause, 0.0), axis=1) > 0.5
+    can_cut = upd_mask & paused & (t - state.last_cut > obs.theta)
+    w_new = jnp.where(can_cut, w * cfg.bp_md,
+                      jnp.where(upd_mask & ~paused, w + cfg.beta, w))
+    w_new = jnp.maximum(w_new, MTU)
+    last = jnp.where(can_cut, t, state.last_cut)
+    return BackpressureState(last), w_new, rate_cap
+
+
+# --------------------------------------------------------------------------
+# PCC — online utility racing (vmapped rate experiments)
+# --------------------------------------------------------------------------
+
+class PCCState(NamedTuple):
+    rate: jnp.ndarray
+
+
+def pcc_init(n, cfg):
+    return PCCState(jnp.asarray(cfg.host_bw, jnp.float32) * jnp.ones((n,)))
+
+
+# symmetric probe ladder: rate multipliers 1 + pcc_eps * {-2..2}
+_PCC_PROBES = (-2.0, -1.0, 0.0, 1.0, 2.0)
+
+
+def pcc_update(state, obs, w, rate_cap, upd_mask, cfg, t):
+    """Rate racing on a rational delay-penalized utility.
+
+    Each update runs a batch of rate experiments — the five probe rates
+    r*m are scored concurrently via ``jax.vmap`` over the probe axis —
+    and jumps to the winner:
+
+        u(r) = -host_bw/r - (pcc_b/host_bw) * excess * r
+        excess = max(theta - tau, 0) / tau        (queueing-delay ratio)
+
+    -host_bw/r is strictly increasing in r (throughput term), the
+    penalty strictly decreasing; the stationary point is
+    r* = host_bw / sqrt(pcc_b * excess). Both terms are divisions and
+    pinned multiplies — no logs — so all three engines round every probe
+    utility, and therefore the argmax, identically. At zero excess the
+    utility is strictly increasing in r: probing always escalates until
+    queueing appears, giving the standing-queue equilibrium
+    q = (N*host_bw/b)^2 * b*tau / pcc_b."""
+    excess = (jnp.maximum(obs.theta - cfg.tau, 0.0) /
+              jnp.maximum(cfg.tau, 1e-12))
+    penalty = cfg.pcc_b / jnp.maximum(cfg.host_bw, 1.0)
+    mults = 1.0 + cfg.pcc_eps * jnp.asarray(_PCC_PROBES, jnp.float32)
+
+    def utility(m):
+        r = _pin(state.rate * m)
+        waste = cfg.host_bw / jnp.maximum(r, 1.0)
+        cost = _nofma(_pin(_pin(excess * r) * penalty))
+        return -waste - cost
+
+    scores = jax.vmap(utility)(mults)                    # [P, F]
+    best = jnp.argmax(scores, axis=0)                    # [F]
+    r_new = jnp.clip(state.rate * mults[best],
+                     0.001 * cfg.host_bw, cfg.host_bw)
+    rate = jnp.where(upd_mask, r_new, state.rate)
+    w = jnp.where(upd_mask, jnp.maximum(rate * obs.theta, MTU), w)
+    return PCCState(rate), w, rate
+
+
+# --------------------------------------------------------------------------
+# Registration — importing this module enrolls the four families in the
+# registry-driven conformance/golden/benchmark suites.
+# --------------------------------------------------------------------------
+
+FEEDBACK_LAWS = (
+    Law("fncc", fncc_init, fncc_update, feedback="hop",
+        uses_qdot=False, uses_ecn=False),
+    Law("pulser", pulser_init, pulser_update, feedback="hop",
+        uses_qdot=False, uses_mu=False, uses_ecn=False, uses_incast=True),
+    Law("backpressure", backpressure_init, backpressure_update,
+        feedback="hop", uses_qdot=False, uses_mu=False, uses_ecn=False,
+        uses_pause=True),
+    Law("pcc", pcc_init, pcc_update, rate_based=True,
+        uses_qdot=False, uses_mu=False, uses_ecn=False),
+)
+
+for _law in FEEDBACK_LAWS:
+    register_law(_law)
+del _law

@@ -110,6 +110,31 @@ def _marking(q: jnp.ndarray, buf: jnp.ndarray, cfg: LawConfig) -> jnp.ndarray:
     return jnp.where(hard, 1.0, p)
 
 
+def _pause_step(q_new: jnp.ndarray, pause: jnp.ndarray,
+                cfg: LawConfig) -> jnp.ndarray:
+    """Per-queue XON/XOFF pause hysteresis (laws with ``uses_pause``).
+
+    Raises pause at ``bp_xoff``, clears it at ``bp_xon``, holds in
+    between. Pure comparisons on the already-integrated queue level —
+    no arithmetic, so the channel is trivially bit-identical across
+    engines. A drained queue (q <= bp_xon) ALWAYS clears its pause, which
+    is the no-deadlock guarantee the property suite asserts: pausing
+    senders drains the queue, the drain clears the pause, additive
+    increase resumes. The sentinel queue stays 0 (bp_xon >= 0)."""
+    return jnp.where(q_new >= cfg.bp_xoff, 1.0,
+                     jnp.where(q_new <= cfg.bp_xon, 0.0, pause))
+
+
+def _incast_count(q: jnp.ndarray, path: jnp.ndarray, valid: jnp.ndarray,
+                  lam_del: jnp.ndarray) -> jnp.ndarray:
+    """Per-queue count of flows currently contributing traffic (laws with
+    ``uses_incast``). Counts are integer-valued f32 sums of 1.0 — exactly
+    representable and associativity-free, so scatter order differences
+    between engines cannot flip a bit."""
+    sending = jnp.where(valid & (lam_del > 0.0), 1.0, 0.0)
+    return ordered_scatter_add(jnp.zeros_like(q), path, sending)
+
+
 class FluidSim(NamedTuple):
     """One scenario bound to a backend.
 
@@ -161,6 +186,15 @@ def init_state(sim: FluidSim) -> SimState:
         next_update=(flows.start + flows.tau).astype(jnp.float32),
         last_update=flows.start.astype(jnp.float32),
         law=law_state,
+        # feedback channels only materialize when the law declares them —
+        # None leaves keep the carry (and the compiled program) identical
+        # for every pre-existing law
+        pause=(jnp.zeros((Q + 1,), jnp.float32)
+               if sim.law.uses_pause else None),
+        hist_pause=(jnp.zeros((D, Q + 1), jnp.float32)
+                    if sim.law.uses_pause else None),
+        hist_inc=(jnp.zeros((D, Q + 1), jnp.float32)
+                  if sim.law.uses_incast else None),
     )
 
 
@@ -277,6 +311,18 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
+    # -- feedback channels (only traced when the law declares them) --------
+    if sim.law.uses_pause:
+        pause_new = _pause_step(q_new, state.pause, law_cfg)
+        hist_pause = state.hist_pause.at[ptr].set(pause_new)
+    else:
+        pause_new, hist_pause = None, None
+    if sim.law.uses_incast:
+        inc = _incast_count(state.q, flows.path, valid, lam_del)
+        hist_inc = state.hist_inc.at[ptr].set(inc)
+    else:
+        hist_inc = None
+
     # -- delayed observation ------------------------------------------------
     # INT metadata of hop h is stamped when a segment *dequeues* there and
     # reaches the sender after the backward propagation delay
@@ -284,8 +330,16 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # the time when the packet is scheduled for transmission"). The RTT the
     # sender measures is reconstructed from the same snapshot:
     # theta = tau + sum_h q_obs_h / b_h. w_old (GETCWND of the acked seq) is
-    # the window one measured-RTT ago.
-    tb_steps = jnp.clip(flows.rtt_steps[:, None] - flows.tf_steps, 1, D - 2)
+    # the window one measured-RTT ago. Laws with congestion-point feedback
+    # (``Law.feedback == "hop"``) skip the receiver echo: the congested
+    # switch notifies the sender directly over the reverse path, so hop h's
+    # telemetry is only tf_h old — strictly younger than the receiver echo
+    # on every real hop (DESIGN.md section 16).
+    if sim.law.feedback == "hop":
+        tb_steps = jnp.clip(flows.tf_steps, 1, D - 2)
+    else:
+        tb_steps = jnp.clip(flows.rtt_steps[:, None] - flows.tf_steps,
+                            1, D - 2)
     ohidx = jnp.mod(ptr - tb_steps, D)                        # [F,H]
     ohprev = jnp.mod(ohidx - 1, D)
     fidx = jnp.arange(F)
@@ -314,7 +368,11 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     dt_obs = jnp.maximum(t_sec - state.last_update, dt)
     obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
                   valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
-                  ecn_frac=ecn)
+                  ecn_frac=ecn,
+                  pause=(hist_pause[ohidx, flows.path]
+                         if sim.law.uses_pause else None),
+                  incast=(hist_inc[ohidx, flows.path]
+                          if sim.law.uses_incast else None))
 
     # -- control-law update (dispatches through the law's bound backend) ---
     law_state, w, rate_cap = sim.law.update(
@@ -345,7 +403,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         t=state.t + 1, w=w, rate_cap=rate_cap, q=q_new, out_rate=out,
         hist_lam=hist_lam, hist_q=hist_q, hist_out=hist_out, hist_w=hist_w,
         remaining=remaining, fct=fct,
-        next_update=next_update, last_update=last_update, law=law_state)
+        next_update=next_update, last_update=last_update, law=law_state,
+        pause=pause_new, hist_pause=hist_pause, hist_inc=hist_inc)
     rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(jnp.where(active, w, 0.0)),
                  thru=out, lam=jnp.sum(lam), lam_f=lam,
                  n_active=jnp.sum(active.astype(jnp.int32)))
@@ -546,6 +605,13 @@ def init_slot_state(sim: SlotSim) -> SlotState:
         law=sim.law.init(S, cfg0),
         fct=jnp.full((N,), jnp.nan, jnp.float32),
         incidence=incidence,
+        # feedback channels (mirror of init_state: None unless declared)
+        pause=(jnp.zeros((Q + 1,), jnp.float32)
+               if sim.law.uses_pause else None),
+        hist_pause=(jnp.zeros((D, Q + 1), jnp.float32)
+                    if sim.law.uses_pause else None),
+        hist_inc=(jnp.zeros((D, Q + 1), jnp.float32)
+                  if sim.law.uses_incast else None),
     )
 
 
@@ -712,9 +778,24 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
+    # -- feedback channels (mirror of step: gated at trace time) ----------
+    if sim.law.uses_pause:
+        pause_new = _pause_step(q_new, state.pause, cfg_slot)
+        hist_pause = state.hist_pause.at[ptr].set(pause_new)
+    else:
+        pause_new, hist_pause = None, None
+    if sim.law.uses_incast:
+        inc = _incast_count(state.q, path, valid, lam_del)
+        hist_inc = state.hist_inc.at[ptr].set(inc)
+    else:
+        hist_inc = None
+
     # -- delayed observation (see step; w_old before admission is the
     #    occupant's initial window, the padded engine's ring-init) --------
-    tb_steps = jnp.clip(state.rtt_steps[:, None] - tf_steps, 1, D - 2)
+    if sim.law.feedback == "hop":
+        tb_steps = jnp.clip(tf_steps, 1, D - 2)
+    else:
+        tb_steps = jnp.clip(state.rtt_steps[:, None] - tf_steps, 1, D - 2)
     ohidx = jnp.mod(ptr - tb_steps, D)                        # [S,H]
     ohprev = jnp.mod(ohidx - 1, D)
     q_obs = hist_q[ohidx, path]
@@ -737,7 +818,11 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     dt_obs = jnp.maximum(t_sec - state.last_update, dt)
     obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
                   valid=valid, theta=theta_obs, w_old=w_old, dt_obs=dt_obs,
-                  ecn_frac=ecn)
+                  ecn_frac=ecn,
+                  pause=(hist_pause[ohidx, path]
+                         if sim.law.uses_pause else None),
+                  incast=(hist_inc[ohidx, path]
+                          if sim.law.uses_incast else None))
 
     # -- control-law update (slot-gathered config) ------------------------
     law_state, w, rate_cap = sim.law.update(
@@ -765,7 +850,8 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
         t=state.t + 1, w=w, rate_cap=rate_cap, q=q_new, out_rate=out,
         hist_lam=hist_lam, hist_q=hist_q, hist_out=hist_out, hist_w=hist_w,
         remaining=remaining, fct=fct, free_at=free_at,
-        next_update=next_update, last_update=last_update, law=law_state)
+        next_update=next_update, last_update=last_update, law=law_state,
+        pause=pause_new, hist_pause=hist_pause, hist_inc=hist_inc)
     rec = Record(t=t_sec, q=q_new, w_sum=jnp.sum(jnp.where(active, w, 0.0)),
                  thru=out, lam=jnp.sum(lam), lam_f=lam,
                  n_active=jnp.sum(active.astype(jnp.int32)))

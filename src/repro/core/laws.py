@@ -118,6 +118,14 @@ class LawConfig(NamedTuple):
     # retcp (rdcn.py): circuit schedule + prebuffer as batchable config data
     sched: tuple = None             # ScheduleParams pytree (scalar leaves)
     retcp_prebuffer: float = 0.0    # seconds of early window scale-up
+    # feedback-channel laws (core/feedback.py, DESIGN.md section 16)
+    fncc_eta: float = 0.95          # fncc target utilization
+    pulser_n: float = 8.0           # incast count that triggers a pulse cut
+    bp_xoff: float = 2e6            # bytes; queue level that raises pause
+    bp_xon: float = 1e6             # bytes; queue level that clears pause
+    bp_md: float = 0.5              # backpressure multiplicative decrease
+    pcc_eps: float = 0.05           # pcc probe step (rate multiplier spread)
+    pcc_b: float = 512.0            # pcc latency-penalty coefficient
 
 
 # --------------------------------------------------------------------------
@@ -464,6 +472,20 @@ class Law(NamedTuple):
     megakernel's quiescent-pool fast tick relies on this; a law with a
     documented every-step deviation (reTCP's circuit-state multiplier)
     must set it False.
+
+    ``feedback`` selects the delay model of the feedback path (DESIGN.md
+    section 16): ``"receiver"`` is the classic receiver-echo loop (INT
+    metadata rides to the receiver and returns with the ack — hop h's
+    telemetry is ``rtt - tf_h`` old), ``"hop"`` is congestion-point
+    feedback (the congested switch notifies the sender directly over the
+    reverse path — hop h's telemetry is only ``tf_h`` old, a strictly
+    shorter control loop on symmetric fabrics). ``uses_pause`` asks the
+    engines to run per-queue XON/XOFF pause hysteresis and deliver the
+    delayed per-hop pause state as ``PathObs.pause``; ``uses_incast``
+    asks for per-queue live-sender counts as ``PathObs.incast``. All
+    channel flags are validated at registration time against
+    ``ENGINE_CHANNELS`` — a flag naming a channel no engine provides
+    raises instead of being silently ignored.
     """
     name: str
     init: Callable
@@ -474,6 +496,9 @@ class Law(NamedTuple):
     uses_mu: bool = True            # reads PathObs.mu (egress txRate)
     uses_ecn: bool = True           # reads PathObs.ecn_frac (marking)
     masked_updates: bool = True     # strict upd_mask passthrough contract
+    feedback: str = "receiver"      # feedback-path delay model (see above)
+    uses_pause: bool = False        # reads PathObs.pause (XON/XOFF state)
+    uses_incast: bool = False       # reads PathObs.incast (sender counts)
 
 
 LAWS = {
@@ -546,6 +571,33 @@ LAW_BACKENDS: dict = {name: {"reference": law.update,
                              "megakernel": law.update}
                       for name, law in LAWS.items()}
 
+# Telemetry channels the engines can actually provide, i.e. the legal
+# ``uses_<channel>`` declarations on a Law, and the legal feedback-path
+# delay models. Validated at registration time (``register_law``) so a
+# typo'd flag (``uses_quot``) raises immediately instead of being
+# silently ignored by every engine.
+ENGINE_CHANNELS = ("qdot", "mu", "ecn", "pause", "incast")
+FEEDBACK_MODELS = ("receiver", "hop")
+
+
+def _validate_law(law) -> None:
+    """Raise ``ValueError`` if a law declares a channel no engine provides
+    or an unknown feedback-path model. Scans the law's own fields so Law
+    extensions (extra ``uses_*`` fields on a subclassed NamedTuple) are
+    caught too."""
+    name = getattr(law, "name", "<unnamed>")
+    for field in getattr(law, "_fields", ()):
+        if field.startswith("uses_") and field[5:] not in ENGINE_CHANNELS:
+            raise ValueError(
+                f"law '{name}' declares '{field}' but no engine provides a "
+                f"'{field[5:]}' channel; available channels: "
+                f"{ENGINE_CHANNELS}")
+    fb = getattr(law, "feedback", "receiver")
+    if fb not in FEEDBACK_MODELS:
+        raise ValueError(
+            f"law '{name}' declares feedback={fb!r}; engines implement "
+            f"{FEEDBACK_MODELS}")
+
 
 def register_law(law: Law) -> None:
     """Add a new law to the registry (its ``update`` becomes both the
@@ -554,7 +606,9 @@ def register_law(law: Law) -> None:
     resolvable through ``get_law`` and listable backends.
     Re-registering a name replaces the law AND resets its backends table —
     alternative backends of the old law would otherwise stay resolvable
-    and silently pair the new law with the old implementation."""
+    and silently pair the new law with the old implementation.
+    Channel declarations are validated eagerly (``_validate_law``)."""
+    _validate_law(law)
     LAWS[law.name] = law
     LAW_BACKENDS[law.name] = {"reference": law.update,
                               "megakernel": law.update}
@@ -591,3 +645,10 @@ def get_law(name: str, backend: str = "reference") -> Law:
         raise KeyError(f"law '{name}' has no backend '{backend}'; "
                        f"have {sorted(impls)}")
     return LAWS[name]._replace(update=impls[backend], backend=backend)
+
+
+# The builtin table above predates registration-time validation; check it
+# once at import so the module can never load with an invalid builtin.
+for _law in LAWS.values():
+    _validate_law(_law)
+del _law

@@ -231,6 +231,13 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         maxdeg = (min(S, 32) if isinstance(sched.path, jax.core.Tracer)
                   else suggest_maxdeg(sched.path, Q, S))
     use_csr = gate and S * H > 128
+    # Packed-ring layout (DESIGN.md section 16): feedback channels APPEND
+    # to the [q | out | qdot] row — existing column offsets never move, so
+    # ring growth cannot perturb the compiled program of a law that does
+    # not declare the new channels.
+    nchan = 3 + int(law.uses_pause) + int(law.uses_incast)
+    off_pause = 3 * Q1
+    off_inc = (3 + int(law.uses_pause)) * Q1
 
     def slot_hold(st):
         return jnp.max(jnp.where(st.path < Q, st.tf_steps, 0), axis=1)
@@ -244,12 +251,15 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         hold0, inv0, ovf0 = ((slot_hold(state0),) +
                              incidence_extras(state0))
         return MegaCarry(
-            # [q | out | qdot] telemetry packs into ONE ring (see
-            # integrate_queues); hist_out rides as its middle third and
-            # is restored by the driver on exit
-            state=state0._replace(hist_q=jnp.zeros((D, 3 * Q1),
+            # [q | out | qdot | pause? | inc?] telemetry packs into ONE
+            # ring (see integrate_queues); hist_out rides as its middle
+            # third and is restored by the driver on exit, and the
+            # feedback-channel rings (when the law declares them) ride as
+            # appended columns instead of separate [D, Q+1] leaves
+            state=state0._replace(hist_q=jnp.zeros((D, nchan * Q1),
                                                    jnp.float32),
-                                  hist_out=None),
+                                  hist_out=None, hist_pause=None,
+                                  hist_inc=None),
             pend=PendingFCT(jnp.full((S,), N, jnp.int32),
                             jnp.full((S,), jnp.nan, jnp.float32)),
             hold=hold0, inv=inv0, ovf=ovf0)
@@ -276,19 +286,28 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
             inv, ovf = None, None
         return st2, pend, occupied, slot_hold(st2), inv, ovf
 
-    def integrate_queues(st, bw, arr):
+    def integrate_queues(st, bw, arr, inc=None):
         """``kernels.queue_arrivals.integrate_arrivals`` (the pinned
         integration shared with the standalone sparse form) plus the
         packed telemetry row: the queue gradient is computed at WRITE
         time — ``(q_new - q)/dt`` over exactly the stored operands the
         reference engine subtracts at read time — so the delayed
         observation later costs one gather instead of three,
-        bit-identically."""
+        bit-identically. Declared feedback channels append their columns
+        (pause hysteresis evaluated here, on the integrated queue level,
+        mirroring ``fluid._pause_step``; ``inc`` is the caller's sender
+        count)."""
         caps = _buffer_caps_csr(topo, st.q, csr)
         out, q_new = integrate_arrivals(arr, st.q, bw, caps, dt=dt)
-        row = jnp.concatenate([q_new, out,
-                               _nofma((q_new - st.q) * (1.0 / dt))])
-        return q_new, out, row
+        parts = [q_new, out, _nofma((q_new - st.q) * (1.0 / dt))]
+        pause_new = None
+        if law.uses_pause:
+            pause_new = fluid._pause_step(q_new, st.pause, sim.law_cfg)
+            parts.append(pause_new)
+        if law.uses_incast:
+            parts.append(inc)
+        row = jnp.concatenate(parts)
+        return q_new, out, row, pause_new
 
     def quiet_tick(c, bw, ptr):
         """Quiescent-pool fast tick: no slot occupied, nothing due.
@@ -296,8 +315,11 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         the every-tick window clamp is provably frozen (laws honour the
         upd_mask passthrough and retirement/admission cannot fire)."""
         st, pend, hold, inv, ovf = c
-        q_new, out, row = integrate_queues(st, bw,
-                                           jnp.zeros_like(st.q))
+        # a quiescent pool contributes no traffic: the sender count is
+        # structurally zero, and pause still evolves with the drain
+        q_new, out, row, pause_new = integrate_queues(
+            st, bw, jnp.zeros_like(st.q),
+            inc=(jnp.zeros_like(st.q) if law.uses_incast else None))
         q_hop = st.q[st.path]
         b_hop = _pin(bw[st.path])
         valid = st.path < Q
@@ -310,6 +332,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
             hist_lam=st.hist_lam.at[ptr].set(jnp.zeros((S,), jnp.float32)),
             hist_w=st.hist_w.at[ptr].set(st.w),
             hist_q=st.hist_q.at[ptr].set(row))
+        if law.uses_pause:
+            st = st._replace(pause=pause_new)
         return st, pend, hold, inv, ovf, jnp.zeros((), jnp.float32), \
             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)
 
@@ -382,24 +406,45 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
                 contrib)
         else:
             arr = ordered_scatter_add(jnp.zeros_like(st.q), path, contrib)
-        q_new, out, row = integrate_queues(st, bw, arr)
+        inc = (fluid._incast_count(st.q, path, valid, lam_del)
+               if law.uses_incast else None)
+        q_new, out, row, pause_new = integrate_queues(st, bw, arr, inc)
         hist_qoq = st.hist_q.at[ptr].set(row)
 
         # -- delayed observation: ONE packed gather covers queue length,
-        #    egress rate and queue gradient ------------------------------
-        tb_steps = jnp.clip(st.rtt_steps[:, None] - tf_steps, 1, D - 2)
+        #    egress rate, queue gradient and any declared feedback
+        #    channels (appended columns, see make_tick) -------------------
+        if law.feedback == "hop":
+            tb_steps = jnp.clip(tf_steps, 1, D - 2)
+        else:
+            tb_steps = jnp.clip(st.rtt_steps[:, None] - tf_steps, 1, D - 2)
         ohidx = jnp.mod(ptr - tb_steps, D)
         cols = [path]
         if law.uses_mu:
             cols.append(path + Q1)
         if law.uses_qdot:
             cols.append(path + 2 * Q1)
+        if law.uses_pause:
+            cols.append(path + off_pause)
+        if law.uses_incast:
+            cols.append(path + off_inc)
+        pause_obs = inc_obs = None
         if len(cols) > 1:
             g = hist_qoq[ohidx[..., None], jnp.stack(cols, axis=-1)]
             q_obs = g[..., 0]
-            mu_obs = g[..., 1] if law.uses_mu else jnp.zeros_like(q_obs)
-            qdot_obs = (g[..., -1] if law.uses_qdot
-                        else jnp.zeros_like(q_obs))
+            k = 1
+            if law.uses_mu:
+                mu_obs, k = g[..., k], k + 1
+            else:
+                mu_obs = jnp.zeros_like(q_obs)
+            if law.uses_qdot:
+                qdot_obs, k = g[..., k], k + 1
+            else:
+                qdot_obs = jnp.zeros_like(q_obs)
+            if law.uses_pause:
+                pause_obs, k = g[..., k], k + 1
+            if law.uses_incast:
+                inc_obs, k = g[..., k], k + 1
         else:
             q_obs = hist_qoq[ohidx, path]
             mu_obs = qdot_obs = jnp.zeros_like(q_obs)
@@ -419,7 +464,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         dt_obs = jnp.maximum(t_sec - st.last_update, dt)
         obs = PathObs(q=q_obs, qdot=qdot_obs, mu=mu_obs, b=b_hop,
                       valid=valid, theta=theta_obs, w_old=w_old,
-                      dt_obs=dt_obs, ecn_frac=ecn)
+                      dt_obs=dt_obs, ecn_frac=ecn,
+                      pause=pause_obs, incast=inc_obs)
 
         # -- control law (kernel-composable registry update) ------------
         law_state, w, rate_cap = law.update(
@@ -449,6 +495,8 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
             remaining=remaining, free_at=free_at,
             next_update=next_update, last_update=last_update,
             law=law_state)
+        if law.uses_pause:
+            st = st._replace(pause=pause_new)
         return (st, pend, hold, inv, ovf,
                 jnp.sum(jnp.where(active, w, 0.0)), jnp.sum(lam),
                 jnp.sum(active.astype(jnp.int32)))

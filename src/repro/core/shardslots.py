@@ -459,6 +459,16 @@ def simulate_slots_sharded(topo: Topology, sched: FlowSchedule,
     """
     cfg = cfg or SimConfig()
     law = _resolve_law(law_name, "reference")
+    if (law.feedback != "receiver" or law.uses_pause or law.uses_incast):
+        # The sharded tick hand-codes the receiver-echo feedback clock and
+        # does not ring-buffer the pause/incast channels; raising keeps the
+        # bit-identity promise honest instead of silently running the wrong
+        # feedback model (DESIGN.md section 16).
+        raise NotImplementedError(
+            f"law '{law.name}' needs feedback channels the sharded engine "
+            f"does not provide (feedback={law.feedback!r}, "
+            f"uses_pause={law.uses_pause}, uses_incast={law.uses_incast}); "
+            f"use simulate_slots or the megakernel backend")
     law_cfg = law_cfg or default_law_config(sched)
     ndev = resolve_devices(devices)
     S = int(slots)

@@ -236,6 +236,10 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
     spec (``spec.slots``), the reference backend, and no RDCN schedule
     axis; points run sequentially, bit-identical to the batched slot
     path. ``chunk`` streams each point's schedule in C-entry windows.
+    Feedback-channel laws (``Law.feedback != "receiver"`` or the
+    pause/incast channels, DESIGN.md section 16) raise here — the
+    sharded tick does not carry their channels; sweep them through the
+    batched slot path or the megakernel backend axis instead.
     """
     if shard_scenario:
         if spec.slots is None:

@@ -130,6 +130,11 @@ class PathObs(NamedTuple):
     w_old: jnp.ndarray              # [F] window one RTT ago (GETCWND(ack.seq))
     dt_obs: jnp.ndarray             # [F] seconds since previous update (>= sim dt)
     ecn_frac: jnp.ndarray           # [F] fraction of marked traffic (for DCQCN)
+    # Feedback-channel extensions (DESIGN.md section 16). ``None`` unless the
+    # law declares the channel via ``Law.uses_pause`` / ``Law.uses_incast`` —
+    # engines only materialize (and ring-buffer) channels a law asks for.
+    pause: Optional[jnp.ndarray] = None   # [F, H] per-hop pause state (0/1)
+    incast: Optional[jnp.ndarray] = None  # [F, H] per-hop sender count
 
 
 class SimConfig(NamedTuple):
@@ -155,6 +160,12 @@ class SimState(NamedTuple):
     next_update: jnp.ndarray        # [F] next window-update time (seconds)
     last_update: jnp.ndarray        # [F] previous window-update time (seconds)
     law: tuple                      # law-specific pytree
+    # Feedback channels (None unless the law declares them; trailing
+    # None-default fields keep the carry pytree — and therefore the compiled
+    # program — byte-identical for every pre-existing law).
+    pause: Optional[jnp.ndarray] = None      # [Q+1] per-queue pause (0/1)
+    hist_pause: Optional[jnp.ndarray] = None  # [D, Q+1]
+    hist_inc: Optional[jnp.ndarray] = None    # [D, Q+1] sender counts
 
 
 class SlotState(NamedTuple):
@@ -194,7 +205,11 @@ class SlotState(NamedTuple):
     last_update: jnp.ndarray        # [S] previous window-update time (seconds)
     law: tuple                      # law-specific pytree ([S] leaves)
     fct: jnp.ndarray                # [N] completion time in SCHEDULE order
-    incidence: Optional[jnp.ndarray]  # [H, S, Q+1] (fused backend only)
+    incidence: Optional[jnp.ndarray] = None  # [H, S, Q+1] (fused backend only)
+    # Feedback channels (None unless the law declares them; see SimState).
+    pause: Optional[jnp.ndarray] = None      # [Q+1] per-queue pause (0/1)
+    hist_pause: Optional[jnp.ndarray] = None  # [D, Q+1]
+    hist_inc: Optional[jnp.ndarray] = None    # [D, Q+1] sender counts
 
 
 class Record(NamedTuple):

@@ -2,7 +2,10 @@
 
 One ``pallas_call`` advances K simulator ticks of the flow-slot streaming
 engine: the slot pool's control state, the per-hop queue vector, the EWMA
-law state and the four delayed-feedback ring buffers stay resident in
+law state and the delayed-feedback ring buffers (four for receiver-echo
+laws; the packed telemetry ring widens in place when a law declares the
+pause/incast feedback channels of DESIGN.md section 16 — the harness is
+generic over the carry pytree, so no kernel change) stay resident in
 VMEM across an inner ``fori_loop`` over ticks, and only the chunked
 recording rows and the final state leave the kernel. This collapses the
 per-tick HBM round trips of the op-by-op lowering (law update -> queue

@@ -65,6 +65,39 @@ def test_backend_registry():
             assert get_law(law, be).backend == be
 
 
+def test_register_law_validates_channel_declarations():
+    """Registration rejects channel flags no engine provides and unknown
+    feedback models — eagerly, so a typo'd ``uses_*`` can never be
+    silently ignored by every engine."""
+    from repro.core.laws import Law as LawNT, register_law
+
+    def init(n, cfg):
+        return ()
+
+    def update(state, obs, w, rate_cap, upd_mask, cfg, t):
+        return state, w, rate_cap
+
+    class WeirdLaw(tuple):
+        name = "weird"
+        _fields = ("name", "uses_quot")
+        feedback = "receiver"
+
+    with pytest.raises(ValueError, match="uses_quot"):
+        register_law(WeirdLaw())
+    with pytest.raises(ValueError, match="feedback"):
+        register_law(LawNT("bogus_fb", init, update, feedback="broadcast"))
+    assert "weird" not in LAWS and "bogus_fb" not in LAWS
+    # every legal channel/feedback declaration registers cleanly
+    from repro.core.laws import LAW_BACKENDS
+    try:
+        register_law(LawNT("_probe", init, update, feedback="hop",
+                           uses_pause=True, uses_incast=True))
+        assert law_backends("_probe") == ["megakernel", "reference"]
+    finally:
+        LAWS.pop("_probe", None)
+        LAW_BACKENDS.pop("_probe", None)
+
+
 # -------------------------------------------------------------------------
 # every alternative backend == reference, full trajectories
 # -------------------------------------------------------------------------

@@ -17,17 +17,28 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import (GBPS, US, SimConfig, all_to_all_flows,
-                        compile_routes, default_law_config, ecmp_hash,
-                        fat_tree, incast_burst, incast_flows,
-                        leaf_spine_fabric, make_flows_single, make_schedule,
-                        pad_hops, permutation_traffic, poisson_websearch,
+from repro.core import (GBPS, US, CircuitSchedule, LAWS, SimConfig,
+                        all_to_all_flows, compile_routes,
+                        default_law_config, ecmp_hash, fat_tree,
+                        incast_burst, incast_flows, leaf_spine_fabric,
+                        make_flows_single, make_schedule, pad_hops,
+                        permutation_traffic, poisson_websearch,
                         schedule_as_flows, simulate, simulate_slots,
                         single_bottleneck, single_bottleneck_fabric,
                         stack_flows)
 from repro.core.network import LeafSpine
 
 DT = 1e-6
+
+
+def _anchor_law_cfg(sched, **kw):
+    """Paper-default config satisfying every registered law's extra
+    requirements (retcp needs a circuit schedule in cfg.sched) — the
+    fat-tree anchors below parametrize over the LIVE registry."""
+    kw.setdefault("sched", CircuitSchedule(day=50 * US, night=10 * US,
+                                           matchings=4).params())
+    return default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              **kw)
 
 
 # -------------------------------------------------------------------------
@@ -217,11 +228,13 @@ def test_fat_tree_k8_scale():
 # engines: >= 4-hop bit-for-bit exactness anchors
 # -------------------------------------------------------------------------
 
-@pytest.mark.parametrize("law", ["powertcp", "timely"])
+@pytest.mark.parametrize("law", sorted(LAWS))
 def test_fat_tree_three_engines_bitmatch_websearch(law):
     """Web-search on the k=4 fat-tree (5-hop ECMP paths): the padded
     reference, the S >= N flow-slot stream, and the megakernel must
-    produce BIT-IDENTICAL queue traces, FCT vectors and windows."""
+    produce BIT-IDENTICAL queue traces, FCT vectors and windows — for
+    EVERY law in the live registry (feedback-channel laws included; a
+    law registered tomorrow is anchored with zero test edits)."""
     ft = fat_tree(4)
     topo = ft.topology()
     flows = poisson_websearch(ft, 0.25, 0.003, DT, seed=3)
@@ -230,7 +243,7 @@ def test_fat_tree_three_engines_bitmatch_websearch(law):
     assert int(np.max(np.sum(np.asarray(sched.path) < ft.num_queues,
                              axis=1))) == 5
     cfg = SimConfig(dt=DT, steps=6000, hist=512, update_period=2e-6)
-    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    lcfg = _anchor_law_cfg(sched)
     st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg)
     st_s, rec_s = simulate_slots(topo, sched, law, n + 4, lcfg, cfg)
     st_m, rec_m = simulate_slots(topo, sched, law, n + 4, lcfg, cfg,
@@ -246,9 +259,11 @@ def test_fat_tree_three_engines_bitmatch_websearch(law):
     assert np.array_equal(np.asarray(rec_m.lam_f), np.asarray(rec_s.lam_f))
 
 
-def test_fat_tree_three_engines_bitmatch_incast_burst():
-    """Repeated incast bursts on the fat-tree: same three-engine
-    bit-identity, plus S < N slot recycling on the megakernel."""
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_fat_tree_three_engines_bitmatch_incast_burst(law):
+    """Repeated incast bursts on the fat-tree: same registry-wide
+    three-engine bit-identity, plus S < N slot recycling on the
+    megakernel."""
     ft = fat_tree(4)
     topo = ft.topology()
     flows, bqs = incast_burst(ft, fan_in=8, req_bytes=2e5, n_bursts=2,
@@ -256,11 +271,10 @@ def test_fat_tree_three_engines_bitmatch_incast_burst():
     sched = make_schedule(flows)
     n = int(sched.start.shape[0])
     cfg = SimConfig(dt=DT, steps=7000, hist=512, update_period=2e-6)
-    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
-    st_p, rec_p = simulate(topo, schedule_as_flows(sched), "powertcp",
-                           lcfg, cfg)
-    st_s, rec_s = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg)
-    st_m, rec_m = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg,
+    lcfg = _anchor_law_cfg(sched)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg)
+    st_s, rec_s = simulate_slots(topo, sched, law, n, lcfg, cfg)
+    st_m, rec_m = simulate_slots(topo, sched, law, n, lcfg, cfg,
                                  backend="megakernel")
     assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
     assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
@@ -269,16 +283,29 @@ def test_fat_tree_three_engines_bitmatch_incast_burst():
     assert np.array_equal(np.asarray(st_m.fct), np.asarray(st_s.fct),
                           equal_nan=True)
     assert np.array_equal(np.asarray(st_m.w), np.asarray(st_s.w))
-    assert bool(np.isfinite(np.asarray(st_s.fct)).all())
     # bursts actually hit their victims' downlinks
     assert max(float(np.asarray(rec_s.q)[:, b].max()) for b in bqs) > 1e4
     # S < N: recycled pool, FCT set still bit-identical across backends
-    st_r, _ = simulate_slots(topo, sched, "powertcp", 10, lcfg, cfg,
+    st_r, _ = simulate_slots(topo, sched, law, 10, lcfg, cfg,
                              record=False)
-    st_rm, _ = simulate_slots(topo, sched, "powertcp", 10, lcfg, cfg,
+    st_rm, _ = simulate_slots(topo, sched, law, 10, lcfg, cfg,
                               record=False, backend="megakernel")
     assert np.array_equal(np.asarray(st_rm.fct), np.asarray(st_r.fct),
                           equal_nan=True)
+
+
+def test_fat_tree_incast_burst_completes():
+    """All burst flows finish inside the trace on the reference law."""
+    ft = fat_tree(4)
+    topo = ft.topology()
+    flows, _ = incast_burst(ft, fan_in=8, req_bytes=2e5, n_bursts=2,
+                            period=2e-3, sim_dt=DT, seed=1)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=DT, steps=7000, hist=512, update_period=2e-6)
+    lcfg = _anchor_law_cfg(sched)
+    st_s, _ = simulate_slots(topo, sched, "powertcp",
+                             int(sched.start.shape[0]), lcfg, cfg)
+    assert bool(np.isfinite(np.asarray(st_s.fct)).all())
 
 
 # -------------------------------------------------------------------------

@@ -33,6 +33,27 @@ def test_every_registered_law_has_a_golden_trace():
     assert sorted(LAWS) == sorted(_DATA)
 
 
+def test_feedback_laws_anchored():
+    """The feedback-channel families (DESIGN.md section 16) are anchored
+    like any other law, with their channel declarations pinned here so a
+    flag regression (e.g. backpressure silently losing ``uses_pause``)
+    breaks loudly. Note backpressure and pulser legitimately share this
+    mild scenario's trajectory — the 4-flow burst never raises XOFF nor
+    reaches the pulse threshold, so both degenerate to the same additive
+    increase; their distinct dynamics are anchored by the equilibrium
+    and fat-tree suites instead."""
+    fam = {name: law for name, law in LAWS.items()
+           if law.feedback != "receiver" or law.uses_pause
+           or law.uses_incast or name == "pcc"}
+    assert sorted(fam) == ["backpressure", "fncc", "pcc", "pulser"]
+    assert all(n in _DATA for n in fam)
+    assert fam["fncc"].feedback == "hop" and fam["fncc"].uses_mu
+    assert fam["pulser"].uses_incast and not fam["pulser"].uses_pause
+    assert fam["backpressure"].uses_pause
+    assert fam["pcc"].rate_based and fam["pcc"].feedback == "receiver"
+    assert _DATA["fncc"]["q"] != _DATA["pcc"]["q"]
+
+
 @pytest.mark.parametrize("law", sorted(_DATA))
 def test_golden_trace(law):
     from tools.gen_golden import trace

@@ -19,10 +19,11 @@ BDP = B * TAU
 
 
 def run_long_lived(law, n=4, steps=6000, gamma=0.9, expected_flows=None,
-                   betas=None, nic_mult=4.0):
+                   betas=None, nic_mult=4.0, update_period=0.0):
     topo = single_bottleneck(bandwidth=B, buffer=16e6)
     flows = make_flows_single(n, tau=TAU, nic=nic_mult * B, sim_dt=1e-6)
-    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256,
+                    update_period=update_period)
     lcfg = default_law_config(flows, gamma=gamma,
                               expected_flows=expected_flows or float(n))
     if betas is not None:
@@ -110,6 +111,72 @@ def test_eigenvalues_negative():
     cfg = analysis.ODEConfig()
     e1, e2 = analysis.eigenvalues_powertcp(cfg)
     assert e1 < 0 and e2 < 0
+
+
+# -------------------------------------------------------------------------
+# feedback-channel laws (core/feedback.py, DESIGN.md section 16): each has
+# a closed-form operating point on the long-lived single-bottleneck
+# scenario, derived in the law's docstring.
+# -------------------------------------------------------------------------
+
+def test_fncc_equilibrium():
+    """fncc fixed point: w_i(1 - eta/u) = beta_i with u = W/BDP at full
+    utilization gives W = eta*BDP + beta_hat and q = beta_hat -
+    (1-eta)*BDP."""
+    st, rec, lcfg = run_long_lived("fncc")
+    beta_hat = float(jnp.sum(lcfg.beta))
+    eta = float(lcfg.fncc_eta)
+    w_sum = float(np.asarray(rec.w_sum)[-1500:].mean())
+    q = float(np.asarray(rec.q[:, 0])[-1500:].mean())
+    assert w_sum == pytest.approx(eta * BDP + beta_hat, rel=0.03)
+    assert q == pytest.approx(beta_hat - (1.0 - eta) * BDP, rel=0.05)
+    thru = np.asarray(rec.thru[:, 0])[-1000:].mean()
+    assert thru == pytest.approx(B, rel=0.01)
+
+
+def test_pulser_snaps_to_fair_share():
+    """With n >= pulser_n senders at one bottleneck the incast channel
+    reports n, every sender clamps to w_i = b*tau/n, and the operating
+    point is zero queue at full utilization (W = BDP exactly)."""
+    st, rec, lcfg = run_long_lived("pulser", n=8)
+    assert float(lcfg.pulser_n) <= 8.0
+    w_sum = float(np.asarray(rec.w_sum)[-1500:].mean())
+    q = float(np.asarray(rec.q[:, 0])[-1500:].mean())
+    assert w_sum == pytest.approx(BDP, rel=0.02)
+    assert q < 0.02 * BDP
+    thru = np.asarray(rec.thru[:, 0])[-1000:].mean()
+    assert thru == pytest.approx(B, rel=0.01)
+
+
+def test_backpressure_sawtooth_band():
+    """No closed fixed point: the XON/XOFF hysteresis drives a sawtooth.
+    The tail queue must oscillate through the whole hysteresis band
+    (reaches XOFF, drains past XON — the no-deadlock half of the
+    property suite, observed end to end) while keeping full throughput
+    and never approaching the 16 MB buffer."""
+    st, rec, lcfg = run_long_lived("backpressure", steps=12000)
+    qt = np.asarray(rec.q[:, 0])[-4000:]
+    assert float(qt.max()) >= float(lcfg.bp_xoff)
+    assert float(qt.min()) <= float(lcfg.bp_xon)
+    assert float(qt.max()) < 8e6
+    thru = np.asarray(rec.thru[:, 0])[-4000:].mean()
+    assert thru == pytest.approx(B, rel=0.02)
+
+
+def test_pcc_utility_equilibrium():
+    """PCC's rational utility is stationary at r* = host_bw /
+    sqrt(pcc_b * excess); with N equal flows summing to b this pins the
+    standing queue at q = (N*host_bw/b)^2 * b*tau / pcc_b. Fixed 20us
+    updates decouple probing from the RTT inflation of the initial
+    buffer-filling transient."""
+    st, rec, lcfg = run_long_lived("pcc", steps=20000, update_period=2e-5)
+    host_bw = float(lcfg.host_bw[0])
+    pcc_b = float(lcfg.pcc_b)
+    q_pred = (4.0 * host_bw / B) ** 2 * BDP / pcc_b
+    q = float(np.asarray(rec.q[:, 0])[-4000:].mean())
+    assert q == pytest.approx(q_pred, rel=0.05)
+    thru = np.asarray(rec.thru[:, 0])[-4000:].mean()
+    assert thru == pytest.approx(B, rel=0.01)
 
 
 @pytest.mark.parametrize("law", ["hpcc", "timely", "dcqcn"])

@@ -1,0 +1,191 @@
+"""Property tests for the feedback-path model (DESIGN.md section 16).
+
+Four invariants of hop-by-hop (congestion-point) feedback, checked over
+compiled fabrics and the engine-side pause channel:
+
+  1. notification latency of congestion-point feedback is strictly less
+     than the receiver-echo latency of the same hop's telemetry (the
+     whole point of the FNCC-style reverse-path notification);
+  2. notification latency is monotone non-decreasing in congestion-hop
+     depth (deeper hops are further from the sender);
+  3. reverse paths are valid link-contiguous walks of the compiled
+     fabric graph (each hop's reverse link exists and the walk chains
+     dst -> src);
+  4. the pause channel can never deadlock a drained queue — draining
+     below XON structurally clears pause, end to end.
+
+When ``hypothesis`` is installed the host pairs / queue trajectories are
+fuzzed; the fixed grid below always runs (the container image does not
+ship hypothesis — CI installs it from requirements.txt).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (GBPS, US, LawConfig, SimConfig, compile_routes,
+                        default_law_config, fat_tree, leaf_spine_fabric,
+                        make_flows_single, simulate, single_bottleneck,
+                        single_bottleneck_fabric)
+from repro.core.fluid import _pause_step
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _fabrics():
+    return [("leaf_spine", compile_routes(leaf_spine_fabric(
+                racks=4, hosts_per_rack=4, spines=2))),
+            ("fat_tree", fat_tree(4))]   # fat_tree returns compiled routes
+
+
+FABRICS = _fabrics()
+
+# deterministic pair grid: same-rack, cross-rack/pod, and a spread of
+# hash-diverse pairs on each fabric
+def _pair_grid(routes, k=12):
+    n = routes.fabric.n_hosts
+    rng = np.random.default_rng(7)
+    pairs = {(0, 1), (0, n - 1), (1, n // 2)}
+    while len(pairs) < k:
+        s, d = rng.integers(0, n, 2)
+        if s != d:
+            pairs.add((int(s), int(d)))
+    return sorted(pairs)
+
+
+# -------------------------------------------------------------------------
+# 1 + 2: notification latency vs receiver echo, monotone in hop depth
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,routes", FABRICS)
+def test_notify_latency_beats_receiver_echo(name, routes):
+    """For every ECMP path and every real hop: the reverse-path notify
+    delay is strictly below the receiver-echo age of the same hop's
+    telemetry (rtt - tf_h), and on these symmetric fabrics it equals
+    the forward INT delay tf_h BITWISE (the identity the engines'
+    ``tf_steps``-based hop-feedback clock is built on)."""
+    for s, d in _pair_grid(routes):
+        cp = routes.paths(s, d)
+        nd = routes.notify_delays(s, d)
+        assert np.array_equal(nd, cp.tf)       # symmetric fabric: bitwise
+        for p in range(len(cp.links)):
+            h = int(cp.n_hops[p])
+            echo = cp.rtt[p] - cp.tf[p, :h]
+            assert (nd[p, :h] < echo).all()
+
+
+@pytest.mark.parametrize("name,routes", FABRICS)
+def test_notify_latency_monotone_in_hop_depth(name, routes):
+    for s, d in _pair_grid(routes):
+        cp = routes.paths(s, d)
+        nd = routes.notify_delays(s, d)
+        for p in range(len(cp.links)):
+            h = int(cp.n_hops[p])
+            assert (np.diff(nd[p, :h]) >= 0.0).all()
+            # padded hops carry no delay
+            assert (nd[p, h:] == 0.0).all()
+
+
+# -------------------------------------------------------------------------
+# 3: reverse paths are link-contiguous walks of the fabric
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,routes", FABRICS)
+def test_reverse_paths_are_contiguous_walks(name, routes):
+    f = routes.fabric
+    for s, d in _pair_grid(routes):
+        cp = routes.paths(s, d)
+        for lp in cp.links:
+            rp = routes.reverse_path(lp)
+            assert len(rp) == len(lp)
+            # starts at the destination, ends at the source
+            assert int(f.link_src[rp[0]]) == d
+            assert int(f.link_dst[rp[-1]]) == s
+            # consecutive links chain node to node
+            for a, b in zip(rp, rp[1:]):
+                assert int(f.link_dst[a]) == int(f.link_src[b])
+            # each reverse link mirrors its forward link's node pair
+            for fw, bw in zip(lp, reversed(rp)):
+                assert int(f.link_src[fw]) == int(f.link_dst[bw])
+                assert int(f.link_dst[fw]) == int(f.link_src[bw])
+
+
+def test_one_way_fabric_rejects_reverse_path():
+    """``single_bottleneck_fabric`` declares no return links: reverse
+    derivations must raise, not invent a path."""
+    routes = compile_routes(single_bottleneck_fabric())
+    assert (routes.fabric.reverse_links() == -1).any()
+    cp = routes.paths(0, 1)
+    with pytest.raises(ValueError, match="reverse"):
+        routes.reverse_path(cp.links[0])
+    with pytest.raises(ValueError, match="reverse"):
+        routes.notify_delays(0, 1)
+
+
+# -------------------------------------------------------------------------
+# 4: pause never deadlocks a drained queue
+# -------------------------------------------------------------------------
+
+_CFG = LawConfig(gamma=0.9, beta=jnp.zeros(1), tau=jnp.ones(1),
+                 host_bw=jnp.ones(1))
+
+
+def _pause_holds_invariant(q, pause):
+    out = np.asarray(_pause_step(jnp.asarray(q, jnp.float32),
+                                 jnp.asarray(pause, jnp.float32), _CFG))
+    q = np.asarray(q, np.float32)
+    assert ((out == 0.0) | (out == 1.0)).all()
+    assert (out[q <= float(_CFG.bp_xon)] == 0.0).all()       # XON clears
+    assert (out[q >= float(_CFG.bp_xoff)] == 1.0).all()      # XOFF raises
+    mid = (q > float(_CFG.bp_xon)) & (q < float(_CFG.bp_xoff))
+    assert (out[mid] == np.asarray(pause, np.float32)[mid]).all()
+
+
+def test_pause_hysteresis_fixed_grid():
+    qs = np.asarray([0.0, 1.0, 1e6 - 1, 1e6, 1e6 + 1, 1.5e6, 2e6 - 1,
+                     2e6, 2e6 + 1, 1e8], np.float32)
+    for pause in (np.zeros_like(qs), np.ones_like(qs)):
+        _pause_holds_invariant(qs, pause)
+
+
+def test_draining_queue_always_unpauses():
+    """Any monotone drain below XON ends unpaused, whatever the starting
+    pause state — one _pause_step per level, threaded like the engine
+    threads it."""
+    levels = np.linspace(3e6, 0.0, 40, dtype=np.float32)
+    pause = jnp.ones((1,), jnp.float32)
+    for q in levels:
+        pause = _pause_step(jnp.asarray([q], jnp.float32), pause, _CFG)
+    assert float(pause[0]) == 0.0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(hst.lists(hst.floats(0.0, 3e6, width=32), min_size=1,
+                     max_size=16),
+           hst.booleans())
+    def test_pause_hysteresis_fuzzed(qs, start_paused):
+        qs = np.asarray(qs, np.float32)
+        pause = np.full_like(qs, 1.0 if start_paused else 0.0)
+        _pause_holds_invariant(qs, pause)
+
+
+def test_backpressure_completion_drains_and_unpauses():
+    """End to end: finite backpressure flows complete, the bottleneck
+    drains, and the carried pause state ends cleared — a paused-forever
+    queue would strand the fluid in the buffer and show up here."""
+    B = 100 * GBPS
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    flows = make_flows_single(6, tau=20 * US, nic=4 * B,
+                              sizes=[2e6] * 6, sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=6000, hist=256)
+    lcfg = default_law_config(flows, expected_flows=6.0)
+    st, rec = simulate(topo, flows, "backpressure", lcfg, cfg)
+    assert np.isfinite(np.asarray(st.fct)).all()
+    assert float(st.q[0]) < 1e3
+    assert float(np.asarray(st.pause)[0]) == 0.0
