@@ -1,0 +1,206 @@
+"""Link-impairment benchmarks (DESIGN.md section 17).
+
+``run`` is the fig6/fig7-style FCT comparison across impairment regimes
+on the k=4 fat-tree web-search anchor: the clean fabric vs oscillating
+core capacity, netem-like stochastic loss + delay jitter, and the mixed
+regime — laws x regimes through ONE ``run_sweep`` call dogfooding the
+``SweepSpec.impairments`` axis (regimes batch inside the compiled
+program like schedules do).
+
+``smoke_impair`` is the CI leg (run.py --smoke): the registry anchor
+laws run the impaired anchor on all three engines — padded reference,
+flow-slot stream and megakernel — and the per-law cross-engine bitmatch
+flags land in BENCH_sweep.json as ``fct_impair_*`` fields, gated by
+ci.yml next to the fabric and feedback legs (benchmarks/README.md has
+the field reference). Two structural gates ride along: the
+zero-impairment preset must reproduce the unimpaired anchor BIT-FOR-BIT
+(the trace-time-gating contract), and the KIND_SCHEDULE process must
+reproduce ``rdcn.circuit_bw_at`` bit-for-bit (the degenerate-instance
+contract).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (CircuitSchedule, LinkProcess, SimConfig, SweepSpec,
+                        US, default_law_config, fabric_impairments,
+                        link_bw_at, netem, no_impairment, run_sweep,
+                        schedule_as_flows, schedule_impairment, simulate,
+                        simulate_slots, suggest_slots)
+from repro.core.fabric import HOST, TOR
+from repro.core.rdcn import circuit_bw_at
+from .common import emit, fct_stats, table
+from .fabric_fct import DT, anchor_scenario
+
+IMPAIR_LAWS = ["powertcp", "hpcc", "timely"]
+
+
+def anchor_impairments(ft) -> dict:
+    """The named impairment regimes for the k=4 anchor, worst first for
+    the smoke bitmatch (the mixed regime exercises every process kind
+    at once: oscillating downlink capacity, stochastic loss, delay
+    jitter)."""
+    topo = ft.topology()
+    # the ToR->host downlinks are where web-search flows actually queue
+    # at anchor load — oscillating them to 10% of line rate makes the
+    # capacity process BIND (uplink-only oscillation never queues and
+    # would be invisible in the FCT readout)
+    osc_down = LinkProcess(kind="oscillate", bw_lo=2.5e9, period=200e-6,
+                           seed=5)
+    return {
+        "mixed": fabric_impairments(
+            ft, rules={(TOR, HOST): osc_down},
+            default=netem(loss=0.01, jitter=1e-6, seed=9)),
+        "oscillate": fabric_impairments(ft, rules={(TOR, HOST): osc_down}),
+        "lossy": fabric_impairments(
+            ft, default=netem(loss=0.01, jitter=1e-6, seed=9)),
+        "clean": no_impairment(topo),
+    }
+
+
+def _bitmatch_three_engines_impaired(topo, sched, cfg, impair,
+                                     law="powertcp", expected_flows=8.0):
+    """Impaired twin of ``fabric_fct._bitmatch_three_engines``: padded /
+    slot (S>=N) / megakernel on the SAME impairment regime; returns
+    (wall times, flags, completed, slot state)."""
+    fl = schedule_as_flows(sched)
+    n = int(sched.start.shape[0])
+    lcfg = default_law_config(fl, expected_flows=expected_flows)
+
+    t0 = time.time()
+    st_p, rec_p = simulate(topo, fl, law, lcfg, cfg, impair=impair)
+    padded_s = time.time() - t0
+    t0 = time.time()
+    st_s, rec_s = simulate_slots(topo, sched, law, n, lcfg, cfg,
+                                 impair=impair)
+    slot_s = time.time() - t0
+    t0 = time.time()
+    st_m, rec_m = simulate_slots(topo, sched, law, n, lcfg, cfg,
+                                 backend="megakernel", impair=impair)
+    mega_s = time.time() - t0
+
+    ref_slot = bool(
+        np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+        and np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                           equal_nan=True)
+        and np.array_equal(np.asarray(st_s.w[:n]), np.asarray(st_p.w)))
+    mega = bool(
+        np.array_equal(np.asarray(rec_m.q), np.asarray(rec_s.q))
+        and np.array_equal(np.asarray(st_m.fct), np.asarray(st_s.fct),
+                           equal_nan=True)
+        and np.array_equal(np.asarray(st_m.w), np.asarray(st_s.w))
+        and np.array_equal(np.asarray(rec_m.lam_f),
+                           np.asarray(rec_s.lam_f)))
+    completed = int(np.isfinite(np.asarray(st_s.fct)).sum())
+    return (padded_s, slot_s, mega_s), (ref_slot, mega), completed, st_s
+
+
+def _zero_impairment_is_baseline(topo, sched, cfg) -> bool:
+    """The all-zero preset must reproduce the unimpaired run BIT-FOR-BIT
+    on the padded and slot engines (keep == 1.0 and jit == 0.0 are exact
+    f32 identities; DESIGN.md section 17)."""
+    fl = schedule_as_flows(sched)
+    n = int(sched.start.shape[0])
+    lcfg = default_law_config(fl, expected_flows=8.0)
+    z = no_impairment(topo)
+    st_b, rec_b = simulate(topo, fl, "powertcp", lcfg, cfg)
+    st_z, rec_z = simulate(topo, fl, "powertcp", lcfg, cfg, impair=z)
+    ok = (np.array_equal(np.asarray(rec_z.q), np.asarray(rec_b.q))
+          and np.array_equal(np.asarray(st_z.fct), np.asarray(st_b.fct),
+                             equal_nan=True))
+    st_bs, rec_bs = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg)
+    st_zs, rec_zs = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg,
+                                   impair=z)
+    ok &= (np.array_equal(np.asarray(rec_zs.q), np.asarray(rec_bs.q))
+           and np.array_equal(np.asarray(st_zs.fct),
+                              np.asarray(st_bs.fct), equal_nan=True))
+    return bool(ok)
+
+
+def _rdcn_schedule_equivalence() -> bool:
+    """``schedule_impairment`` evaluates the RDCN circuit schedule
+    op-for-op: ``link_bw_at`` on the wrapped params must equal
+    ``circuit_bw_at`` bit-for-bit across day/night edges."""
+    sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=4).params()
+    week = float(np.asarray(sp.week))
+    ts = np.linspace(0.0, 5.0 * week, 4001).astype(np.float32)
+    imp = schedule_impairment(sp)
+    a = np.asarray([np.asarray(link_bw_at(float(t), imp)).ravel()[0]
+                    for t in ts[::100]])
+    b = np.asarray([np.asarray(circuit_bw_at(float(t), sp)).ravel()[0]
+                    for t in ts[::100]])
+    return bool(np.array_equal(a, b))
+
+
+def _fct_us(st, sched):
+    s = fct_stats(st, sched)
+    return {k: (round(v * 1e6, 3) if np.isfinite(v) else None)
+            for k, v in s.items()}
+
+
+def smoke_impair() -> dict:
+    """CI impairment leg: fct_impair_* fields for BENCH_sweep.json."""
+    ft, sched, cfg = anchor_scenario()
+    topo = ft.topology()
+    regimes = anchor_impairments(ft)
+
+    data: dict = {"fct_impair_laws": ",".join(IMPAIR_LAWS),
+                  "fct_impair_regimes": ",".join(regimes)}
+    all_ok = True
+    for law in IMPAIR_LAWS:
+        _, (rs, m), completed, st = _bitmatch_three_engines_impaired(
+            topo, sched, cfg, regimes["mixed"], law=law)
+        ok = bool(rs and m)
+        all_ok &= ok
+        data[f"fct_impair_bitmatch_{law}"] = ok
+        data[f"fct_impair_ws_mean_us_{law}"] = _fct_us(st, sched)["all_mean"]
+        data[f"fct_impair_completed_{law}"] = completed
+    data["fct_impair_bitmatch_all"] = bool(all_ok)
+    data["fct_impair_zero_baseline"] = _zero_impairment_is_baseline(
+        topo, sched, cfg)
+    data["fct_impair_rdcn_equiv"] = _rdcn_schedule_equivalence()
+
+    # per-regime FCT on the reference law (the fig-style degradation
+    # readout; the slot engine matches the other two per the gate above)
+    n = int(sched.start.shape[0])
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    for name, imp in regimes.items():
+        st, _ = simulate_slots(topo, sched, "powertcp", n, lcfg, cfg,
+                               record=False, impair=imp)
+        data[f"fct_impair_mean_us_{name}"] = _fct_us(st, sched)["all_mean"]
+    return data
+
+
+def run(quick: bool = False, devices=None):
+    """Fig6/fig7-style FCT table across impairment regimes: laws x
+    regimes through one ``run_sweep`` with the ``impairments`` axis."""
+    ft, sched, cfg = anchor_scenario(
+        load=0.25, duration=0.002 if quick else 0.004)
+    topo = ft.topology()
+    regimes = anchor_impairments(ft)
+    fl = schedule_as_flows(sched)
+    slots = suggest_slots(sched, DT)
+
+    spec = SweepSpec(laws=IMPAIR_LAWS, flows=[fl],
+                     impairments=list(regimes.values()),
+                     expected_flows=8.0, slots=slots)
+    t0 = time.time()
+    res = run_sweep(spec, topo, cfg, record=False, devices=devices)
+    wall = time.time() - t0
+    names = list(regimes)
+    rows = []
+    for i, p in enumerate(res.points):
+        s = _fct_us(res.state(i), sched)
+        rows.append({"law": p.law, "regime": names[p.impair_idx],
+                     "short_p": s["short_p"], "all_mean": s["all_mean"]})
+        emit(f"impair.{names[p.impair_idx]}.{p.law}.all_mean_us",
+             s["all_mean"], "us")
+    emit("impair.sweep_wall_s", round(wall, 2), "s")
+    print(table(rows, ["law", "regime", "short_p", "all_mean"],
+                "impairment regimes: fat-tree web-search FCT (us)"))
+    # scoreboard claim: every law completes every flow on every regime
+    # (loss <= 1% and oscillating capacity must degrade FCTs, not stall
+    # the fabric)
+    return all(r["all_mean"] is not None for r in rows)

@@ -376,6 +376,8 @@ def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
     data.update(smoke_fabric16(devices=devices))
     from .feedback_fct import smoke_feedback
     data.update(smoke_feedback())
+    from .impair_fct import smoke_impair
+    data.update(smoke_impair())
     out = os.path.join(os.path.dirname(__file__), "..", out_name)
     with open(out, "w") as f:
         json.dump(data, f, indent=2)
@@ -470,12 +472,22 @@ def main():
               and data["fct_feedback_bitmatch_backpressure"]
               and data["fct_feedback_bitmatch_pcc"]
               and all(data[f"fct_feedback_ws_mean_us_{l}"] is not None
-                      for l in ("fncc", "pulser", "backpressure", "pcc")))
+                      for l in ("fncc", "pulser", "backpressure", "pcc"))
+              # link-impairment layer (DESIGN.md section 17): anchor laws
+              # bit-for-bit across all three engines on the mixed
+              # (oscillate + loss + jitter) regime, the zero-impairment
+              # preset reproduces the unimpaired anchor bitwise, and the
+              # KIND_SCHEDULE process reproduces rdcn.circuit_bw_at
+              and data["fct_impair_bitmatch_all"]
+              and data["fct_impair_zero_baseline"]
+              and data["fct_impair_rdcn_equiv"]
+              and all(data[f"fct_impair_ws_mean_us_{l}"] is not None
+                      for l in ("powertcp", "hpcc", "timely")))
         return 0 if ok else 1
 
     from . import (fabric_fct, feedback_fct, fig3_phase, fig4_incast,
                    fig5_fairness, fig6_fct, fig7_load_sweep, fig8_rdcn,
-                   tab_commsched)
+                   impair_fct, tab_commsched)
     def sharded(fn):
         return lambda quick: fn(quick=quick, devices=devices)
 
@@ -488,6 +500,7 @@ def main():
         "fig8": sharded(fig8_rdcn.run),
         "fabric": sharded(fabric_fct.run),
         "feedback": feedback_fct.run,
+        "impair": sharded(impair_fct.run),
         "commsched": tab_commsched.run,
     }
     only = set(a.only.split(",")) if a.only else set(suite)

@@ -30,6 +30,10 @@ from .rdcn import (CircuitSchedule, ScheduleParams, circuit_bw_at,
                    circuit_up, circuit_utilization, make_retcp_law,
                    queuing_latency_percentile, stack_schedules,
                    voq_topology)
+from .impair import (ImpairmentParams, LinkProcess, fabric_impairments,
+                     impair_vectors, link_bw_at, link_jitter_at,
+                     link_loss_at, netem, no_impairment,
+                     schedule_impairment, stack_impairments)
 from . import feedback  # noqa: F401  (registers the feedback-channel laws)
 from .sweep import SweepPoint, SweepResult, SweepSpec, expand, run_sweep
 from . import analysis
@@ -60,6 +64,9 @@ __all__ = [
     "CircuitSchedule", "ScheduleParams", "circuit_bw_at", "circuit_up",
     "circuit_utilization", "make_retcp_law", "queuing_latency_percentile",
     "stack_schedules", "voq_topology",
+    "ImpairmentParams", "LinkProcess", "fabric_impairments",
+    "impair_vectors", "link_bw_at", "link_jitter_at", "link_loss_at",
+    "netem", "no_impairment", "schedule_impairment", "stack_impairments",
     "SweepPoint", "SweepResult", "SweepSpec", "expand", "run_sweep",
     "analysis", "megakernel",
 ]

@@ -82,6 +82,11 @@ class Fabric:
     link_queued: np.ndarray             # [L] bool
     switch_buffer: np.ndarray           # [n_switches] float64 bytes
     dt_alpha: float = 1.0
+    # per-link-class impairment processes: ((src_tier, dst_tier),
+    # LinkProcess) pairs declared via FabricBuilder.impair_class and
+    # compiled by core.impair.fabric_impairments (kept opaque here —
+    # fabric stays importable without the impairment layer)
+    impair_rules: tuple = ()
 
     @property
     def n_nodes(self) -> int:
@@ -197,6 +202,7 @@ class FabricBuilder:
         self.tier: List[int] = []
         self.sw_buffer: List[float] = []
         self.links: List[Tuple[int, int, float, float, bool, float]] = []
+        self.impair_rules: List[Tuple[Tuple[int, int], object]] = []
 
     def add_host(self) -> int:
         if any(t != HOST for t in self.tier):
@@ -216,6 +222,16 @@ class FabricBuilder:
         self.links.append((src, dst, float(bw), float(delay), bool(queued),
                            float(buffer)))
 
+    def impair_class(self, src_tier: int, dst_tier: int, proc):
+        """Attach an impairment process (``core.impair.LinkProcess``, e.g.
+        an ``impair.netem`` preset) to every queued link of one
+        (src_tier, dst_tier) class — compile the built fabric's regime
+        with ``core.impair.fabric_impairments``. Last declaration per
+        class wins."""
+        self.impair_rules = [r for r in self.impair_rules
+                             if r[0] != (src_tier, dst_tier)]
+        self.impair_rules.append(((src_tier, dst_tier), proc))
+
     def build(self) -> Fabric:
         n_hosts = sum(1 for t in self.tier if t == HOST)
         ls = self.links
@@ -230,6 +246,7 @@ class FabricBuilder:
             link_queued=np.asarray([l[4] for l in ls], bool),
             switch_buffer=np.asarray(self.sw_buffer, np.float64),
             dt_alpha=self.dt_alpha,
+            impair_rules=tuple(self.impair_rules),
         )
 
 

@@ -65,10 +65,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..kernels.queue_arrivals import (ordered_scatter_add, queue_arrivals,
-                                      suggest_maxdeg, update_incidence)
+from ..kernels.queue_arrivals import (apply_loss, ordered_scatter_add,
+                                      queue_arrivals, suggest_maxdeg,
+                                      update_incidence)
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
+from .impair import ImpairmentParams, impair_vectors, link_bw_at
 from .laws import Law, LawConfig, get_law, _nofma, _pin
 from .types import (MTU, Flows, FlowSchedule, PathObs, Record, SimConfig,
                     SimState, SlotState, Topology, pad_hops)
@@ -99,6 +101,22 @@ def _hop_sum(x: jnp.ndarray) -> jnp.ndarray:
     for h in range(1, x.shape[-1]):
         acc = acc + x[..., h]
     return acc
+
+
+def _hop_keep(keep: jnp.ndarray, path: jnp.ndarray,
+              valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-flow survival fraction: the product of ``keep`` over the
+    flow's valid hops, as an unrolled left-to-right chain (``_hop_sum``'s
+    multiplicative twin — same fixed-association rationale; a pure
+    multiply chain has no add for LLVM to contract). Invalid hops
+    contribute the exact identity 1.0, and an all-ones ``keep`` returns
+    exactly 1.0, which keeps the zero-impairment goodput bitwise equal
+    to the unimpaired engine (core/impair.py)."""
+    k_hop = _pin(keep[path])                           # [.., H]
+    acc = jnp.where(valid[..., 0], k_hop[..., 0], 1.0)
+    for h in range(1, path.shape[-1]):
+        acc = acc * jnp.where(valid[..., h], k_hop[..., h], 1.0)
+    return _pin(acc)
 
 
 def _marking(q: jnp.ndarray, buf: jnp.ndarray, cfg: LawConfig) -> jnp.ndarray:
@@ -150,6 +168,9 @@ class FluidSim(NamedTuple):
     cfg: SimConfig
     backend: str = "reference"
     incidence: Optional[jnp.ndarray] = None
+    # per-link impairment regime (core/impair.py); None keeps the compiled
+    # program byte-identical to the unimpaired build (trace-time gating)
+    impair: Optional[ImpairmentParams] = None
 
 
 def build_incidence(flows: Flows, num_queues: int) -> jnp.ndarray:
@@ -198,8 +219,18 @@ def init_state(sim: FluidSim) -> SimState:
     )
 
 
-def _bandwidth(topo: Topology, bw_fn, t_sec):
-    bw = topo.bandwidth if bw_fn is None else bw_fn(t_sec)
+def _bandwidth(topo: Topology, bw_fn, t_sec, impair=None):
+    """[Q+1] per-queue service rates at ``t_sec`` (sentinel appended).
+
+    Three mutually-exclusive drivers, in precedence order: an impairment
+    regime (``core.impair.link_bw_at`` — per-link processes), a bw_fn
+    (the legacy whole-vector schedule hook), or the static topology
+    capacities. The public drivers reject ``bw_fn`` + ``impair`` together
+    (two owners of the same vector)."""
+    if impair is not None:
+        bw = link_bw_at(t_sec, impair)
+    else:
+        bw = topo.bandwidth if bw_fn is None else bw_fn(t_sec)
     return jnp.concatenate([bw, jnp.asarray([1e15], jnp.float32)])
 
 
@@ -218,7 +249,7 @@ def _buffer_caps(topo: Topology, q: jnp.ndarray) -> jnp.ndarray:
 
 
 def _queue_update(topo: Topology, dt: float, backend: str, incidence,
-                  path, q, lam_del, valid, bw):
+                  path, q, lam_del, valid, bw, keep=None):
     """Queue-arrival accumulation + integration: (arrivals, out, q_new).
 
     Reference backend: masked scatter-add over ``path``. Fused backend:
@@ -242,6 +273,10 @@ def _queue_update(topo: Topology, dt: float, backend: str, incidence,
         # tick on small scenarios, e.g. the fig8 VOQ — see the kernel's
         # docstring)
         arr = ordered_scatter_add(jnp.zeros_like(q), path, contrib)
+        if keep is not None:
+            # per-link loss folds into the ACCUMULATED arrivals (the one
+            # placement every engine shares bit-for-bit; see the kernel)
+            arr = apply_loss(arr, keep)
         # pinned against XLA rewrites and contraction-blocked against
         # LLVM FMAs so no program variant fuses the integration into the
         # add, which would break cross-engine bit-equality (laws._pin /
@@ -281,10 +316,15 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # against FMA contraction so every engine rounds it identically
     t_sec = _nofma(state.t.astype(jnp.float32) * dt)
     ptr = jnp.mod(state.t, D)
-    bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
+    bw = _bandwidth(topo, bw_fn, t_sec, sim.impair)           # [Q+1]
+    # keep/jit only materialize under an impairment regime — None leaves
+    # the compiled program byte-identical (mirrored by slot_step and the
+    # megakernel tick; DESIGN.md section 17)
+    keep, jit = (impair_vectors(t_sec, sim.impair)
+                 if sim.impair is not None else (None, None))
 
-    active = ((t_sec >= flows.start) & (state.remaining > 0.0) &
-              (t_sec < flows.stop))
+    started = t_sec >= flows.start
+    active = (started & (state.remaining > 0.0) & (t_sec < flows.stop))
     # -- instantaneous RTT and send rates ---------------------------------
     q_hop = state.q[flows.path]                               # [F,H]
     # pinned: a constant path would let XLA fold the gather and turn the
@@ -292,8 +332,14 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # path) never performs
     b_hop = _pin(bw[flows.path])
     valid = flows.path < topo.num_queues
+    qb_now = q_hop / b_hop
+    if jit is not None:
+        # jitter is observed only once a flow has STARTED: the slot
+        # engine admits a flow the tick its start is due, so a pre-start
+        # flow is not resident there and sees the sentinel (0.0) jitter.
+        qb_now = qb_now + jnp.where(started[:, None], jit[flows.path], 0.0)
     theta_now = flows.tau + _hop_sum(
-        jnp.where(valid, q_hop / b_hop, 0.0))
+        jnp.where(valid, qb_now, 0.0))
     lam = jnp.where(active,
                     jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
                                             state.rate_cap),
@@ -307,7 +353,8 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     hop_delay_idx = jnp.mod(ptr - flows.tf_steps, D)          # [F,H]
     lam_del = hist_lam[hop_delay_idx, jnp.arange(F)[:, None]]  # [F,H]
     arr, out, q_new = _queue_update(topo, dt, sim.backend, sim.incidence,
-                                    flows.path, state.q, lam_del, valid, bw)
+                                    flows.path, state.q, lam_del, valid, bw,
+                                    keep=keep)
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
@@ -354,8 +401,12 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
     # some programs (fp-contract is on even without fast-math)
     qdot_obs = _nofma((q_obs - q_obs_prev) * (1.0 / dt))
     mu_obs = hist_out[ohidx, flows.path]
+    qb_obs = q_obs / b_hop
+    if jit is not None:
+        # same started-gating as qb_now above
+        qb_obs = qb_obs + jnp.where(started[:, None], jit[flows.path], 0.0)
     theta_obs = flows.tau + _hop_sum(
-        jnp.where(valid, q_obs / b_hop, 0.0))
+        jnp.where(valid, qb_obs, 0.0))
     wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                           1, D - 2)
     w_old = hist_w[jnp.mod(ptr - wold_delay, D), fidx]
@@ -379,6 +430,13 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         state.law, obs, state.w, state.rate_cap, upd, law_cfg, t_sec)
     w = jnp.clip(w, MTU, _nofma(_pin(8.0 * flows.nic_rate * flows.tau)) +
                  _nofma(_pin(8.0 * flows.nic_rate * theta_now)))
+    # a flow that has not started has no window to drive: hold the init
+    # carry so the slot engine's admission re-init (w = nic*tau in
+    # ``_admit_retire``) lands on the same bits.  Masked laws leave
+    # pre-start w at init anyway; this pins the masked_updates=False
+    # case (retcp's circuit multiplier would otherwise pre-scale the
+    # window before admission, visible the tick the flow starts).
+    w = jnp.where(started, w, state.w)
     period = jnp.where(cfg.update_period > 0.0, cfg.update_period, theta_now)
     next_update = jnp.where(upd, t_sec + period, state.next_update)
     last_update = jnp.where(upd, t_sec, state.last_update)
@@ -387,7 +445,12 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
         rate_cap = alloc_fn(state.remaining, active, t_sec, flows, rate_cap)
 
     # -- flow progress ------------------------------------------------------
-    remaining = jnp.where(active, state.remaining - _nofma(_pin(lam * dt)),
+    # under loss only the surviving fraction of a flow's rate is goodput
+    # (the path survival product; exact 1.0 when keep is all-ones)
+    lam_good = lam if keep is None else lam * _hop_keep(keep, flows.path,
+                                                        valid)
+    remaining = jnp.where(active,
+                          state.remaining - _nofma(_pin(lam_good * dt)),
                           state.remaining)
     done = active & (remaining <= 0.0)
     # tau/start are compile-time constants here; pinned so XLA cannot
@@ -412,10 +475,29 @@ def step(sim: FluidSim, state: SimState, bw_fn=None, alloc_fn=None):
 
 
 def _make_sim(topo: Topology, flows: Flows, law: Law, law_cfg: LawConfig,
-              cfg: SimConfig, backend: str) -> FluidSim:
+              cfg: SimConfig, backend: str, impair=None) -> FluidSim:
     incidence = (build_incidence(flows, topo.num_queues)
                  if backend == "fused" else None)
-    return FluidSim(topo, flows, law, law_cfg, cfg, backend, incidence)
+    return FluidSim(topo, flows, law, law_cfg, cfg, backend, incidence,
+                    impair)
+
+
+def _check_impair(impair, bw_fn, backend: str):
+    """Shared driver validation for the impairment seam: the fused (dense
+    Pallas) backend rejects impairments outright (its incidence matmul
+    reassociates the arrival sums, so the bit-for-bit loss fold has no
+    home there), and ``bw_fn`` + ``impair`` would be two owners of the
+    same bandwidth vector."""
+    if impair is None:
+        return
+    if backend == "fused":
+        raise NotImplementedError(
+            "impairments are not supported on the fused backend; use the "
+            "reference or megakernel backend")
+    if bw_fn is not None:
+        raise ValueError("bw_fn and impair are mutually exclusive "
+                         "bandwidth drivers (wrap the schedule as a "
+                         "KIND_SCHEDULE impairment process instead)")
 
 
 def _scan_scenario(sim, state, bw_fn, alloc_fn, record: bool, step_fn=None):
@@ -482,7 +564,8 @@ def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
              bw_fn: Optional[Callable] = None,
              alloc_fn: Optional[Callable] = None,
              record: bool = True,
-             backend: str = "reference"):
+             backend: str = "reference",
+             impair: Optional[ImpairmentParams] = None):
     """Run a scenario to completion. Returns (final_state, Record pytree).
 
     The whole scenario (topology, flows, law) is closed over and jitted as a
@@ -496,9 +579,10 @@ def simulate(topo: Topology, flows: Flows, law_name: Union[str, Law],
     a prebuilt ``Law``.
     """
     cfg = cfg or SimConfig()
+    _check_impair(impair, bw_fn, backend)
     law = _resolve_law(law_name, backend)
     law_cfg = law_cfg or default_law_config(flows)
-    sim = _make_sim(topo, flows, law, law_cfg, cfg, backend)
+    sim = _make_sim(topo, flows, law, law_cfg, cfg, backend, impair=impair)
     state = init_state(sim)
 
     @jax.jit
@@ -541,6 +625,9 @@ class SlotSim(NamedTuple):
     backend: str = "reference"
     n_flows: Optional[int] = None
     win_off: Optional[jnp.ndarray] = None
+    # per-link impairment regime (core/impair.py); rides unchanged through
+    # the chunk driver's window _replace
+    impair: Optional[ImpairmentParams] = None
 
 
 def _slot_n(sim: SlotSim) -> int:
@@ -739,7 +826,9 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     dt = cfg.dt
     t_sec = _nofma(state.t.astype(jnp.float32) * dt)   # mirror of step()
     ptr = jnp.mod(state.t, D)
-    bw = _bandwidth(topo, bw_fn, t_sec)                       # [Q+1]
+    bw = _bandwidth(topo, bw_fn, t_sec, sim.impair)           # [Q+1]
+    keep, jit = (impair_vectors(t_sec, sim.impair)
+                 if sim.impair is not None else (None, None))
     sidx = jnp.arange(S)
 
     # -- admit / retire ----------------------------------------------------
@@ -755,8 +844,11 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     q_hop = state.q[path]                                     # [S,H]
     b_hop = _pin(bw[path])            # mirror of the padded engine's pin
     valid = path < topo.num_queues
+    qb_now = q_hop / b_hop
+    if jit is not None:
+        qb_now = qb_now + jit[path]
     theta_now = tau + _hop_sum(
-        jnp.where(valid, q_hop / b_hop, 0.0))
+        jnp.where(valid, qb_now, 0.0))
     lam = jnp.where(active,
                     jnp.minimum(jnp.minimum(_pin(state.w / theta_now),
                                             state.rate_cap),
@@ -774,7 +866,8 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     lam_del = jnp.where(state.t - tf_steps >= state.admit_t[:, None],
                         lam_del, 0.0)
     arr, out, q_new = _queue_update(topo, dt, sim.backend, state.incidence,
-                                    path, state.q, lam_del, valid, bw)
+                                    path, state.q, lam_del, valid, bw,
+                                    keep=keep)
     hist_q = state.hist_q.at[ptr].set(q_new)
     hist_out = state.hist_out.at[ptr].set(out)
 
@@ -802,8 +895,11 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     q_obs_prev = hist_q[ohprev, path]
     qdot_obs = _nofma((q_obs - q_obs_prev) * (1.0 / dt))  # mirror of step
     mu_obs = hist_out[ohidx, path]
+    qb_obs = q_obs / b_hop
+    if jit is not None:
+        qb_obs = qb_obs + jit[path]
     theta_obs = tau + _hop_sum(
-        jnp.where(valid, q_obs / b_hop, 0.0))
+        jnp.where(valid, qb_obs, 0.0))
     wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                           1, D - 2)
     w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx]
@@ -834,7 +930,9 @@ def slot_step(sim: SlotSim, state: SlotState, bw_fn=None, alloc_fn=None):
     last_update = jnp.where(upd, t_sec, state.last_update)
 
     # -- flow progress; FCT scatters to the schedule-ordered [N] output ---
-    remaining = jnp.where(active, state.remaining - _nofma(_pin(lam * dt)),
+    lam_good = lam if keep is None else lam * _hop_keep(keep, path, valid)
+    remaining = jnp.where(active,
+                          state.remaining - _nofma(_pin(lam_good * dt)),
                           state.remaining)
     done = active & (remaining <= 0.0)
     fct = state.fct.at[jnp.where(done, state.slot_flow, N)].set(
@@ -1027,7 +1125,8 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
                    bw_fn: Optional[Callable] = None,
                    record: bool = True,
                    backend: str = "reference",
-                   chunk: Optional[int] = None):
+                   chunk: Optional[int] = None,
+                   impair: Optional[ImpairmentParams] = None):
     """Run a schedule through a bounded pool of ``slots`` active slots.
 
     Returns (final ``SlotState``, ``Record`` pytree); ``final.fct`` is [N]
@@ -1060,9 +1159,11 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
     compatible with ``record_every > 1`` or the fused backend.
     """
     cfg = cfg or SimConfig()
+    _check_impair(impair, bw_fn, backend)
     law = _resolve_law(law_name, backend)
     law_cfg = law_cfg or default_law_config(sched)
-    sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend)
+    sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend,
+                  impair=impair)
     if chunk is not None:
         return _simulate_slots_chunked(sim, int(chunk), bw_fn, record)
     if backend == "megakernel":
@@ -1252,7 +1353,8 @@ def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
                    record: bool = True,
                    backend: str = "reference",
                    expected_flows: float = 1.0,
-                   devices=None):
+                   devices=None,
+                   impair_params: Optional[ImpairmentParams] = None):
     """Run a whole sweep of scenarios as ONE jitted, vmapped program.
 
     ``flows`` carries a leading batch axis B on every leaf (build it with
@@ -1283,13 +1385,15 @@ def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
     Returns (final_states, records) with a leading batch axis.
     """
     cfg = cfg or SimConfig()
+    _check_impair(impair_params, bw_fn, backend)
     law = _resolve_law(law_name, backend)
 
-    def _one(flows_i, lcfg_i, bwp_i):
+    def _one(flows_i, lcfg_i, bwp_i, imp_i):
         lcfg = (lcfg_i if lcfg_i is not None else
                 default_law_config(flows_i, expected_flows=expected_flows))
         bfn = bw_fn if bwp_i is None else (lambda t: bw_fn(t, bwp_i))
-        sim = _make_sim(topo, flows_i, law, lcfg, cfg, backend)
+        sim = _make_sim(topo, flows_i, law, lcfg, cfg, backend,
+                        impair=imp_i)
         return _scan_scenario(sim, init_state(sim), bfn, alloc_fn, record)
 
     def axes(tree):
@@ -1297,8 +1401,8 @@ def simulate_batch(topo: Topology, flows: Flows, law_name: Union[str, Law],
                 jax.tree_util.tree_map(lambda _: 0, tree))
 
     run = jax.vmap(_one, in_axes=(axes(flows), axes(law_cfg),
-                                  axes(bw_params)))
-    return _dispatch_batch(run, (flows, law_cfg, bw_params),
+                                  axes(bw_params), axes(impair_params)))
+    return _dispatch_batch(run, (flows, law_cfg, bw_params, impair_params),
                            int(flows.tau.shape[0]), devices)
 
 
@@ -1312,7 +1416,8 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
                          backend: str = "reference",
                          expected_flows: float = 1.0,
                          devices=None,
-                         sequential: bool = False):
+                         sequential: bool = False,
+                         impair_params: Optional[ImpairmentParams] = None):
     """Batched/sharded twin of ``simulate_slots`` (the slot path of the
     sweep engine).
 
@@ -1334,14 +1439,16 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
     Identical results, different schedule; ``devices`` is ignored.
     """
     cfg = cfg or SimConfig()
+    _check_impair(impair_params, bw_fn, backend)
     law = _resolve_law(law_name, backend)
     S = int(slots)
 
-    def _one(sched_i, lcfg_i, bwp_i):
+    def _one(sched_i, lcfg_i, bwp_i, imp_i):
         lcfg = (lcfg_i if lcfg_i is not None else
                 default_law_config(sched_i, expected_flows=expected_flows))
         bfn = bw_fn if bwp_i is None else (lambda t: bw_fn(t, bwp_i))
-        sim = SlotSim(topo, sched_i, law, lcfg, cfg, S, backend)
+        sim = SlotSim(topo, sched_i, law, lcfg, cfg, S, backend,
+                      impair=imp_i)
         if backend == "megakernel":
             from .megakernel import simulate_slots_mega
             # the idle-tick gate is a lax.cond; under vmap it would
@@ -1367,10 +1474,11 @@ def simulate_slots_batch(topo: Topology, scheds: FlowSchedule,
             def body(_, xs):
                 return None, _one(*xs)
             return jax.lax.scan(body, None,
-                                (scheds, law_cfg, bw_params))[1]
+                                (scheds, law_cfg, bw_params,
+                                 impair_params))[1]
         return run_seq()
 
     run = jax.vmap(_one, in_axes=(axes(scheds), axes(law_cfg),
-                                  axes(bw_params)))
-    return _dispatch_batch(run, (scheds, law_cfg, bw_params),
+                                  axes(bw_params), axes(impair_params)))
+    return _dispatch_batch(run, (scheds, law_cfg, bw_params, impair_params),
                            int(scheds.start.shape[0]), devices)

@@ -1,0 +1,365 @@
+"""Per-link impairment processes: lossy, time-varying, heterogeneous links.
+
+PowerTCP's headline claim is fast reaction in *dynamic* environments, yet
+the only time-varying capacity in the repro before this layer was the RDCN
+circuit schedule — a single-queue special case hardwired through ``bw_fn``.
+This module generalizes it (DESIGN.md section 17): every queued link gets
+an independent capacity/loss/jitter **process**, described by
+``ImpairmentParams`` — a batchable pytree of [Q]-leaves mirroring
+``rdcn.ScheduleParams`` — and evaluated by the pure functions
+
+  ``link_bw_at(t, p)``      -> [Q] f32 service rates (bytes/s)
+  ``link_loss_at(t, p)``    -> [Q] f32 loss fractions in [0, LOSS_MAX]
+  ``link_jitter_at(t, p)``  -> [Q] f32 added per-hop delay (seconds)
+
+Process kinds (``ImpairmentParams.kind``, selected per link):
+
+  * ``KIND_CONST``     — fixed capacity ``bw_hi`` (the zero-impairment
+    passthrough: ``no_impairment(topo)`` reproduces ``topo.bandwidth``
+    value-for-value, so the engines' downstream arithmetic is bitwise
+    unchanged);
+  * ``KIND_SCHEDULE``  — two-level day/night square wave using EXACTLY the
+    ops of ``rdcn.circuit_up``/``circuit_bw_at`` (same ``_EDGE_NUDGE``,
+    same mod/compare/select), so a single-link schedule process is the
+    degenerate RDCN instance bit-for-bit (tests/test_property_impair.py
+    holds this as a property);
+  * ``KIND_OSCILLATE`` — triangle wave between ``bw_lo`` and ``bw_hi``
+    with period ``period`` (deterministic, seed-free);
+  * ``KIND_FADING``    — piecewise-constant random capacity: each
+    ``period``-long epoch draws uniformly in [bw_lo, bw_hi] from a
+    counter-based hash of (seed, link, epoch).
+
+Loss is ``LOSS_CONST`` (fixed fraction) or ``LOSS_RANDOM`` (per-epoch
+uniform draw in [0, loss)); jitter is always a per-epoch uniform draw in
+[0, jitter] seconds. All randomness is **counter-based and stateless**
+(a lowbias32 integer mix over (seed, link id, epoch index), the 32-bit
+sibling of ``fabric.ecmp_hash``): no RNG key threads through the scan
+carry, the same (seed, t) pair reproduces on every process/platform, and
+a batch axis vmaps straight through.
+
+Engine contract: the padded (``fluid.step``), flow-slot
+(``fluid.slot_step``) and megakernel (``megakernel.make_tick``) engines
+thread one ``ImpairmentParams`` identically — impaired ``bw`` through the
+``fluid._bandwidth`` seam (telemetry/law updates see the impaired per-hop
+``mu`` and ``b``), loss folded into the queue integration POST-scatter
+(``kernels.queue_arrivals.apply_loss`` on the accumulated arrivals — the
+one placement every engine shares bit-for-bit) and into goodput via the
+unrolled per-path survival product (``fluid._hop_keep``), jitter added
+inside the theta hop-sum. ``impair=None`` keeps each engine's compiled
+program byte-identical to the pre-impairment build (trace-time gating,
+the PR-7 feedback-channel discipline); a zero-valued process multiplies
+by 1.0 and adds +0.0 — exact in f32 — so the zero preset is bitwise
+identical to the unimpaired engine (CI-gated).
+
+The fused (dense Pallas) backend and ``shardslots.simulate_slots_sharded``
+reject impairments eagerly with ``NotImplementedError`` rather than run
+them approximately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .laws import _nofma, _pin
+from .rdcn import _EDGE_NUDGE, ScheduleParams
+from .types import Topology
+
+# process kinds (ImpairmentParams.kind)
+KIND_CONST = 0
+KIND_SCHEDULE = 1
+KIND_OSCILLATE = 2
+KIND_FADING = 3
+
+# loss kinds (ImpairmentParams.loss_kind)
+LOSS_CONST = 0
+LOSS_RANDOM = 1
+
+# a keep-fraction floor: loss saturates below 1.0 so the survival product
+# and the served rate never collapse to exact zero (a lossless-but-stuck
+# flow would never complete and FCT accounting keys on completion)
+LOSS_MAX = 0.999
+
+_KIND_NAMES = {"const": KIND_CONST, "schedule": KIND_SCHEDULE,
+               "oscillate": KIND_OSCILLATE, "fading": KIND_FADING}
+
+# distinct hash salts per channel so capacity/loss/jitter draws of one
+# link are independent streams of the same (seed, epoch) counter
+_SALT_BW = 0x9c83a5d1
+_SALT_LOSS = 0x2c1b3c6d
+_SALT_JIT = 0x66e9d5a7
+
+
+class ImpairmentParams(NamedTuple):
+    """Pytree-of-[Q]-vectors form of a per-link impairment regime.
+
+    One row per QUEUED link, in queue order (the axis every engine's
+    ``bw`` vector already uses). Mirrors ``rdcn.ScheduleParams``: pure
+    data, batchable with a leading axis (``stack_impairments``), consumed
+    only by the pure ``link_*_at`` evaluators so a whole axis of regimes
+    sweeps inside one vmapped program.
+    """
+    kind: jnp.ndarray                # [Q] int32 process kind (KIND_*)
+    bw_hi: jnp.ndarray               # [Q] f32 bytes/s upper capacity
+    bw_lo: jnp.ndarray               # [Q] f32 bytes/s lower capacity
+    period: jnp.ndarray              # [Q] f32 seconds (wave/epoch length)
+    up: jnp.ndarray                  # [Q] f32 seconds at bw_hi (schedule)
+    t0: jnp.ndarray                  # [Q] f32 phase offset (seconds)
+    loss: jnp.ndarray                # [Q] f32 loss fraction (or its cap)
+    loss_kind: jnp.ndarray           # [Q] int32 LOSS_CONST / LOSS_RANDOM
+    jitter: jnp.ndarray              # [Q] f32 max added delay (seconds)
+    seed: jnp.ndarray                # [Q] uint32 per-link stream seed
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """lowbias32 integer finalizer (Degski/Walker family) — the 32-bit
+    sibling of ``fabric.ecmp_hash``'s splitmix64 (x64 mode is off in the
+    simulator, so the counter hash stays in uint32)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7feb352d)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846ca68b)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _epoch(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+    """[Q] uint32 epoch counter: which ``period``-long window ``t`` falls
+    in, phase-shifted by ``t0`` and nudged off the tick knife edge exactly
+    like the RDCN schedule (``rdcn._EDGE_NUDGE``). ``period <= 0`` rows
+    degrade to 1us epochs (the netem stochastic default) instead of
+    dividing by zero. Negative epochs (t < t0) wrap through the int32 ->
+    uint32 cast — still a deterministic counter."""
+    ph = (jnp.asarray(t_sec, jnp.float32) - p.t0 +
+          jnp.float32(_EDGE_NUDGE))
+    e = jnp.floor(ph / jnp.maximum(p.period, 1e-6)).astype(jnp.int32)
+    return e.astype(jnp.uint32)
+
+
+def _u01(t_sec, p: ImpairmentParams, salt: int) -> jnp.ndarray:
+    """[Q] uniform draws in [0, 1): counter-based, stateless, per-link.
+
+    The chain hashes (seed ^ salt) -> link id -> epoch, so links sharing
+    a class seed still decorrelate (the link id is folded in here, not in
+    the seed), and consecutive epochs of one link are independent. The
+    top 24 bits scale to f32 exactly (f32 has a 24-bit significand)."""
+    qid = jnp.arange(p.kind.shape[-1], dtype=jnp.uint32)
+    h = _mix32(p.seed ^ jnp.uint32(salt))
+    h = _mix32(h ^ (qid * jnp.uint32(0x9E3779B9)))
+    h = _mix32(h ^ _epoch(t_sec, p))
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def link_bw_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+    """[Q] per-link service rates at ``t_sec`` (bytes/s).
+
+    All four kinds are evaluated and ``where``-selected (branch-free, so
+    the same program serves heterogeneous fabrics); untaken branches may
+    produce NaN from a zero ``period`` — selects discard them. The
+    schedule branch is op-for-op ``rdcn.circuit_up``/``circuit_bw_at``,
+    which is what makes a single-link schedule process the degenerate
+    RDCN instance bit-for-bit."""
+    t = jnp.asarray(t_sec, jnp.float32)
+    # schedule: mirror rdcn.circuit_up exactly (same nudge, mod, compare)
+    ph = jnp.mod(t - p.t0 + _EDGE_NUDGE, p.period)
+    up = (ph >= 0.0) & (ph < p.up)
+    sched = jnp.where(up, p.bw_hi, p.bw_lo)
+    # oscillate: triangle wave bw_lo -> bw_hi -> bw_lo over one period
+    frac = _pin(ph / p.period)
+    tri = 1.0 - jnp.abs(_nofma(2.0 * frac) - 1.0)
+    osc = p.bw_lo + _nofma(_pin((p.bw_hi - p.bw_lo) * tri))
+    # fading: piecewise-constant uniform draw per epoch
+    u = _u01(t, p, _SALT_BW)
+    fad = p.bw_lo + _nofma(_pin((p.bw_hi - p.bw_lo) * u))
+    bw = jnp.where(p.kind == KIND_SCHEDULE, sched,
+                   jnp.where(p.kind == KIND_OSCILLATE, osc,
+                             jnp.where(p.kind == KIND_FADING, fad,
+                                       p.bw_hi)))
+    return _pin(jnp.asarray(bw, jnp.float32))
+
+
+def link_loss_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+    """[Q] per-link loss fractions at ``t_sec``, clipped to
+    [0, ``LOSS_MAX``]. ``LOSS_RANDOM`` draws uniformly in [0, loss) per
+    epoch; ``LOSS_CONST`` is the fraction itself. A zero ``loss`` row is
+    exactly 0.0 either way (0 * u == +0.0), which is what keeps the
+    zero-impairment keep factor an exact 1.0."""
+    t = jnp.asarray(t_sec, jnp.float32)
+    u = _u01(t, p, _SALT_LOSS)
+    loss = jnp.where(p.loss_kind == LOSS_RANDOM,
+                     _nofma(_pin(p.loss * u)), p.loss)
+    return jnp.clip(jnp.asarray(loss, jnp.float32), 0.0, LOSS_MAX)
+
+
+def link_jitter_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+    """[Q] per-link added queuing delay at ``t_sec`` (seconds): a
+    per-epoch uniform draw in [0, jitter] — netem-style delay variation.
+    A zero ``jitter`` row is exactly +0.0, the additive identity the
+    theta hop-sum needs for the zero-impairment bitwise contract."""
+    t = jnp.asarray(t_sec, jnp.float32)
+    u = _u01(t, p, _SALT_JIT)
+    return jnp.maximum(_nofma(_pin(p.jitter * u)), 0.0)
+
+
+def impair_vectors(t_sec, p: ImpairmentParams):
+    """(keep, jit): the two [Q+1] per-tick vectors the engines fold in.
+
+    ``keep`` is the survival fraction ``1 - loss`` and ``jit`` the added
+    per-hop delay, both appended with the sentinel queue's identities
+    (keep 1.0, jitter 0.0) so the engines' existing sentinel-padded
+    gathers need no masking."""
+    keep = jnp.concatenate([1.0 - link_loss_at(t_sec, p),
+                            jnp.asarray([1.0], jnp.float32)])
+    jit = jnp.concatenate([link_jitter_at(t_sec, p),
+                           jnp.asarray([0.0], jnp.float32)])
+    return _pin(keep), _pin(jit)
+
+
+# --------------------------------------------------------------------------
+# host-side description: per-link-class processes, netem-style presets
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinkProcess:
+    """Static description of one link's impairment process.
+
+    ``bw_hi``/``bw_lo`` <= 0 default to the link's own fabric capacity
+    (so a pure loss/jitter process needs no bandwidth bookkeeping, and a
+    ``bw_lo``-less process does not vary). ``period`` <= 0 means "1us
+    epochs" for the stochastic draws and is invalid for the
+    schedule/oscillate kinds (they need a real wavelength).
+    """
+    kind: str = "const"              # const | schedule | oscillate | fading
+    bw_hi: float = 0.0               # bytes/s (0 => link's fabric capacity)
+    bw_lo: float = 0.0               # bytes/s (0 => same as bw_hi)
+    period: float = 0.0              # seconds
+    up: float = 0.0                  # seconds at bw_hi (schedule kind)
+    t0: float = 0.0                  # phase offset (seconds)
+    loss: float = 0.0                # loss fraction (or its random cap)
+    random_loss: bool = False        # per-epoch uniform draw in [0, loss)
+    jitter: float = 0.0              # max added delay (seconds)
+    seed: int = 0                    # stream seed (links decorrelate by id)
+
+    def __post_init__(self):
+        if self.kind not in _KIND_NAMES:
+            raise ValueError(f"unknown impairment kind {self.kind!r}; "
+                             f"expected one of {sorted(_KIND_NAMES)}")
+        if not 0.0 <= self.loss <= LOSS_MAX:
+            raise ValueError(f"loss {self.loss} outside [0, {LOSS_MAX}]")
+        if self.jitter < 0.0:
+            raise ValueError(f"jitter {self.jitter} must be >= 0")
+        if self.kind in ("schedule", "oscillate") and self.period <= 0.0:
+            raise ValueError(f"kind {self.kind!r} needs period > 0")
+        if self.kind == "schedule" and not 0.0 <= self.up <= self.period:
+            raise ValueError("schedule needs 0 <= up <= period")
+
+
+def netem(rate: Optional[float] = None, loss: float = 0.0,
+          jitter: float = 0.0, random_loss: bool = True,
+          period: float = 0.0, seed: int = 0) -> LinkProcess:
+    """netem-style preset: optional fixed ``rate`` (bytes/s) plus ``loss``
+    fraction and ``jitter`` seconds — the tc-netem triple, as a constant-
+    capacity process. ``random_loss`` draws the loss per epoch (netem's
+    random loss mode); ``period`` sets the redraw epoch (0 => 1us)."""
+    return LinkProcess(kind="const", bw_hi=0.0 if rate is None else rate,
+                       loss=loss, random_loss=random_loss, jitter=jitter,
+                       period=period, seed=seed)
+
+
+def _params_from_procs(procs: Sequence[LinkProcess],
+                       link_bw: np.ndarray) -> ImpairmentParams:
+    """Compile per-queue ``LinkProcess`` rows (+ the links' own fabric
+    capacities as the bw defaults) into an ``ImpairmentParams``."""
+    n = len(procs)
+    if n != len(link_bw):
+        raise ValueError(f"{n} processes for {len(link_bw)} queued links")
+    kind = np.zeros(n, np.int32)
+    f = {k: np.zeros(n, np.float32) for k in
+         ("bw_hi", "bw_lo", "period", "up", "t0", "loss", "jitter")}
+    loss_kind = np.zeros(n, np.int32)
+    seed = np.zeros(n, np.uint32)
+    for i, p in enumerate(procs):
+        kind[i] = _KIND_NAMES[p.kind]
+        hi = p.bw_hi if p.bw_hi > 0.0 else float(link_bw[i])
+        lo = p.bw_lo if p.bw_lo > 0.0 else hi
+        f["bw_hi"][i] = hi
+        f["bw_lo"][i] = lo
+        f["period"][i] = p.period
+        f["up"][i] = p.up
+        f["t0"][i] = p.t0
+        f["loss"][i] = p.loss
+        f["jitter"][i] = p.jitter
+        loss_kind[i] = LOSS_RANDOM if p.random_loss else LOSS_CONST
+        seed[i] = np.uint32(p.seed)
+    return ImpairmentParams(
+        kind=jnp.asarray(kind), bw_hi=jnp.asarray(f["bw_hi"]),
+        bw_lo=jnp.asarray(f["bw_lo"]), period=jnp.asarray(f["period"]),
+        up=jnp.asarray(f["up"]), t0=jnp.asarray(f["t0"]),
+        loss=jnp.asarray(f["loss"]), loss_kind=jnp.asarray(loss_kind),
+        jitter=jnp.asarray(f["jitter"]), seed=jnp.asarray(seed))
+
+
+def no_impairment(topo: Topology) -> ImpairmentParams:
+    """The zero preset: every link a constant process at its own
+    capacity, no loss, no jitter. ``link_bw_at`` then reproduces
+    ``topo.bandwidth`` value-for-value and the engines' loss/jitter folds
+    multiply by 1.0 / add +0.0 — the bitwise-identity contract the
+    property suite and CI gate."""
+    bw = np.asarray(topo.bandwidth, np.float32)
+    return _params_from_procs([LinkProcess()] * len(bw), bw)
+
+
+def schedule_impairment(sp: ScheduleParams) -> ImpairmentParams:
+    """The degenerate RDCN instance: ONE queue whose capacity process is
+    the circuit schedule. ``link_bw_at(t, schedule_impairment(p))`` is
+    bit-for-bit ``rdcn.circuit_bw_at(t, p)`` (identical op chain; held
+    as a hypothesis property)."""
+    one = lambda x: jnp.reshape(jnp.asarray(x, jnp.float32), (1,))
+    return ImpairmentParams(
+        kind=jnp.full((1,), KIND_SCHEDULE, jnp.int32),
+        bw_hi=one(sp.circuit_bw), bw_lo=one(sp.packet_bw),
+        period=one(sp.week), up=one(sp.day), t0=one(sp.t0),
+        loss=jnp.zeros(1, jnp.float32),
+        loss_kind=jnp.zeros(1, jnp.int32),
+        jitter=jnp.zeros(1, jnp.float32),
+        seed=jnp.zeros(1, jnp.uint32))
+
+
+def fabric_impairments(fab_or_routes,
+                       rules: Optional[Dict[Tuple[int, int],
+                                            LinkProcess]] = None,
+                       default: Optional[LinkProcess] = None
+                       ) -> ImpairmentParams:
+    """Compile per-link-class processes for a fabric's queued links.
+
+    ``rules`` maps (src_tier, dst_tier) -> ``LinkProcess`` (tiers as in
+    ``fabric.HOST/TOR/AGG/CORE``); unmatched links take ``default`` (or
+    the zero process). When ``rules`` is None the fabric's own declared
+    classes (``FabricBuilder.impair_class`` -> ``Fabric.impair_rules``)
+    apply. Accepts a ``Fabric`` or a ``FabricRoutes`` (duck-typed via
+    its ``.fabric``). Links of one class share the class seed and still
+    draw independent streams (the hash folds the queue id in)."""
+    fab = getattr(fab_or_routes, "fabric", fab_or_routes)
+    if rules is None:
+        rules = dict(getattr(fab, "impair_rules", ()) or ())
+    default = default or LinkProcess()
+    ql = fab.queued_links()
+    procs = []
+    for l in ql:
+        key = (int(fab.tier[fab.link_src[l]]),
+               int(fab.tier[fab.link_dst[l]]))
+        procs.append(rules.get(key, default))
+    return _params_from_procs(procs, np.asarray(fab.link_bw[ql],
+                                                np.float32))
+
+
+def stack_impairments(ps: List[ImpairmentParams]) -> ImpairmentParams:
+    """Stack regimes along a new leading batch axis ([B, Q] leaves) — the
+    ``impair_params`` input of the batched drivers and the ``impairments``
+    sweep axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)

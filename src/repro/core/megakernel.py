@@ -76,9 +76,11 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.fused_tick import DEFAULT_BLOCK, fused_tick_block
-from ..kernels.queue_arrivals import (build_csr_gather, csr_gather_arrivals,
+from ..kernels.queue_arrivals import (apply_loss, build_csr_gather,
+                                      csr_gather_arrivals,
                                       integrate_arrivals,
                                       ordered_scatter_add, suggest_maxdeg)
+from .impair import impair_vectors
 from .laws import _nofma, _pin
 from .types import MTU, PathObs, Record, SlotState
 from . import fluid  # safe: fluid imports this module only inside functions
@@ -309,22 +311,30 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         row = jnp.concatenate(parts)
         return q_new, out, row, pause_new
 
-    def quiet_tick(c, bw, ptr):
+    def quiet_tick(c, bw, jit, ptr):
         """Quiescent-pool fast tick: no slot occupied, nothing due.
         Everything except the queue drain, the telemetry-row writes and
         the every-tick window clamp is provably frozen (laws honour the
         upd_mask passthrough and retirement/admission cannot fire)."""
         st, pend, hold, inv, ovf = c
         # a quiescent pool contributes no traffic: the sender count is
-        # structurally zero, and pause still evolves with the drain
+        # structurally zero, and pause still evolves with the drain.
+        # Loss needs no fold here — apply_loss on all-zero arrivals is
+        # the exact identity (0 * keep == +0.0), so skipping it is
+        # bit-identical to slot_step's scaled zero arrivals
         q_new, out, row, pause_new = integrate_queues(
             st, bw, jnp.zeros_like(st.q),
             inc=(jnp.zeros_like(st.q) if law.uses_incast else None))
         q_hop = st.q[st.path]
         b_hop = _pin(bw[st.path])
         valid = st.path < Q
+        # retired slots keep stale valid paths, so the clamp's theta must
+        # fold the jitter exactly like slot_step's (mirror of busy_tick)
+        qb_now = q_hop / b_hop
+        if jit is not None:
+            qb_now = qb_now + jit[st.path]
         theta_now = st.tau + fluid._hop_sum(
-            jnp.where(valid, q_hop / b_hop, 0.0))
+            jnp.where(valid, qb_now, 0.0))
         w = jnp.clip(st.w, MTU, _nofma(_pin(8.0 * st.nic_rate * st.tau)) +
                      _nofma(_pin(8.0 * st.nic_rate * theta_now)))
         st = st._replace(
@@ -337,7 +347,7 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         return st, pend, hold, inv, ovf, jnp.zeros((), jnp.float32), \
             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)
 
-    def busy_tick(c, bw, ptr, due_t):
+    def busy_tick(c, bw, keep, jit, ptr, due_t):
         st, pend, hold, inv, ovf = c
         # t*dt is contraction-blocked (laws._nofma), mirroring the
         # reference engines: every program rounds the product before it
@@ -377,8 +387,11 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         q_hop = st.q[path]                            # [S,H]
         b_hop = _pin(bw[path])       # mirror of the reference engine pin
         valid = path < Q
+        qb_now = q_hop / b_hop
+        if jit is not None:
+            qb_now = qb_now + jit[path]
         theta_now = tau + fluid._hop_sum(
-            jnp.where(valid, q_hop / b_hop, 0.0))
+            jnp.where(valid, qb_now, 0.0))
         lam = jnp.where(active,
                         jnp.minimum(jnp.minimum(_pin(st.w / theta_now),
                                                 st.rate_cap), nic), 0.0)
@@ -406,6 +419,11 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
                 contrib)
         else:
             arr = ordered_scatter_add(jnp.zeros_like(st.q), path, contrib)
+        if keep is not None:
+            # loss folds into the ACCUMULATED arrivals, after either
+            # accumulation path — the same post-scatter placement as
+            # fluid._queue_update (kernels.apply_loss)
+            arr = apply_loss(arr, keep)
         inc = (fluid._incast_count(st.q, path, valid, lam_del)
                if law.uses_incast else None)
         q_new, out, row, pause_new = integrate_queues(st, bw, arr, inc)
@@ -448,8 +466,11 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         else:
             q_obs = hist_qoq[ohidx, path]
             mu_obs = qdot_obs = jnp.zeros_like(q_obs)
+        qb_obs = q_obs / b_hop
+        if jit is not None:
+            qb_obs = qb_obs + jit[path]
         theta_obs = tau + fluid._hop_sum(
-            jnp.where(valid, q_obs / b_hop, 0.0))
+            jnp.where(valid, qb_obs, 0.0))
         wold_delay = jnp.clip(jnp.round(theta_obs / dt).astype(jnp.int32),
                               1, D - 2)
         w_old = hist_w[jnp.mod(ptr - wold_delay, D), sidx]
@@ -478,7 +499,10 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
         last_update = jnp.where(upd, t_sec, st.last_update)
 
         # -- flow progress; completions park in the pending buffer ------
-        remaining = jnp.where(active, st.remaining - _nofma(_pin(lam * dt)),
+        lam_good = (lam if keep is None else
+                    lam * fluid._hop_keep(keep, path, valid))
+        remaining = jnp.where(active,
+                              st.remaining - _nofma(_pin(lam_good * dt)),
                               st.remaining)
         done = active & (remaining <= 0.0)
         pend = PendingFCT(
@@ -504,17 +528,19 @@ def make_tick(sim, bw_fn=None, gate: bool = True,
     def tick(carry: MegaCarry, due_t):
         st = carry.state
         t_sec = _nofma(st.t.astype(jnp.float32) * dt)
-        bw = fluid._bandwidth(topo, bw_fn, t_sec)
+        bw = fluid._bandwidth(topo, bw_fn, t_sec, sim.impair)
+        keep, jit = (impair_vectors(t_sec, sim.impair)
+                     if sim.impair is not None else (None, None))
         ptr = jnp.mod(st.t, D)
         c = (st, carry.pend, carry.hold, carry.inv, carry.ovf)
         if gate and quiet and law.masked_updates:
             is_quiet = (due_t == st.cursor) & ~jnp.any(st.slot_flow < N)
             st, pend, hold, inv, ovf, w_sum, lam_sum, n_act = jax.lax.cond(
-                is_quiet, lambda a: quiet_tick(a, bw, ptr),
-                lambda a: busy_tick(a, bw, ptr, due_t), c)
+                is_quiet, lambda a: quiet_tick(a, bw, jit, ptr),
+                lambda a: busy_tick(a, bw, keep, jit, ptr, due_t), c)
         else:
             st, pend, hold, inv, ovf, w_sum, lam_sum, n_act = busy_tick(
-                c, bw, ptr, due_t)
+                c, bw, keep, jit, ptr, due_t)
         rec = Record(t=t_sec, q=st.q, w_sum=w_sum, thru=st.out_rate,
                      lam=lam_sum, lam_f=st.hist_lam[jnp.mod(st.t - 1, D)],
                      n_active=n_act.astype(jnp.int32))

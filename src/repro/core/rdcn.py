@@ -15,6 +15,11 @@ signature ``core.fluid.simulate_batch`` expects, so a whole axis of
 schedules (slots, day lengths, bandwidths) sweeps inside one vmapped
 program. ``CircuitSchedule.up_fn``/``bw_fn`` delegate to the same functions,
 so the serial and batched paths share every arithmetic op bit-for-bit.
+The per-link impairment layer (``core.impair``, DESIGN.md section 17)
+subsumes this schedule as its degenerate single-link KIND_SCHEDULE
+process: ``impair.schedule_impairment(params)`` evaluates the identical
+day/night arithmetic op-for-op, so impaired runs reproduce RDCN traces
+bit-for-bit.
 
 reTCP (Mukerjee et al., NSDI'20) is modelled as NewReno plus explicit
 circuit-state feedback: the effective window is scaled by

@@ -441,7 +441,8 @@ def simulate_slots_sharded(topo: Topology, sched: FlowSchedule,
                            bw_fn: Optional[Callable] = None,
                            record: bool = True,
                            devices=None,
-                           chunk: Optional[int] = None):
+                           chunk: Optional[int] = None,
+                           impair=None):
     """Run one schedule with the slot pool sharded over ``devices``.
 
     Same contract and BIT-IDENTICAL results as
@@ -458,6 +459,17 @@ def simulate_slots_sharded(topo: Topology, sched: FlowSchedule,
     baseline for scaling numbers), ``"auto"`` uses every local device.
     """
     cfg = cfg or SimConfig()
+    if impair is not None:
+        # The sharded tick splits the queue axis across devices; the
+        # impairment evaluators (core/impair.py) index the FULL queue
+        # axis per draw, and re-deriving per-shard counter streams that
+        # bit-match the unsharded hash chain is future work. Rejecting
+        # eagerly keeps the engine's bit-identity promise honest instead
+        # of silently simulating an unimpaired fabric (the same contract
+        # as the feedback-channel rejection below; DESIGN.md section 17).
+        raise NotImplementedError(
+            "impairments are not supported on the sharded slot engine; "
+            "use simulate_slots or the megakernel backend")
     law = _resolve_law(law_name, "reference")
     if (law.feedback != "receiver" or law.uses_pause or law.uses_incast):
         # The sharded tick hand-codes the receiver-echo feedback clock and

@@ -9,6 +9,18 @@ A ``SweepSpec`` names a grid over
                     (hyperparameter axes: gamma, prebuffer, ...),
   * ``schedules`` — optional time-varying bandwidth schedules
                     (``rdcn.CircuitSchedule``),
+  * ``impairments``— optional per-link impairment regimes
+                    (``impair.ImpairmentParams``, DESIGN.md section 17):
+                    an ARRAY axis like ``schedules`` — regimes are pure
+                    [Q]-leaf pytrees, so a whole axis of them batches
+                    inside each compiled program (``stack_impairments``)
+                    instead of multiplying the program count; with a
+                    ``topologies`` axis, nest one
+                    Sequence[ImpairmentParams] per topology (a [Q]
+                    regime only fits its own fabric). Mutually exclusive
+                    with ``schedules`` (two owners of the bandwidth
+                    vector — wrap a schedule as a KIND_SCHEDULE process
+                    instead),
   * ``backends``  — optional law-backend axis (reference / fused /
                     megakernel; structural like the law axis — one
                     compiled program per (law, backend) pair),
@@ -41,6 +53,7 @@ import jax
 from .fluid import (default_law_config, pad_flows, simulate_batch,
                     simulate_slots_batch, stack_flow_schedules, stack_flows,
                     stack_law_configs)
+from .impair import ImpairmentParams, stack_impairments
 from .shardslots import simulate_slots_sharded
 from .laws import Law
 from .network import make_schedule
@@ -52,14 +65,17 @@ class SweepPoint(NamedTuple):
     """One expanded grid point.
 
     ``index`` is the global position (topology-major, then law-major,
-    then backend-major, then flows x overrides x schedules row-major);
+    then backend-major, then flows x overrides x schedules x impairments
+    row-major);
     ``row`` is the position inside the per-(topology, law, backend)
     batch (the index along the batch axis of
     ``SweepResult.states[group]``). ``sched_idx`` is -1 when the spec
     has no schedule axis; ``backend``/``backend_idx`` name the point's
     law backend (the backend axis defaults to the spec's single
     ``backend``); ``topo_idx`` is 0 when the spec has no topology axis
-    (the historical single-fabric layout).
+    (the historical single-fabric layout); ``impair_idx`` is -1 when the
+    spec has no impairment axis (it indexes the point's own topology
+    group, like ``flows_idx``).
     """
     index: int
     row: int
@@ -71,6 +87,7 @@ class SweepPoint(NamedTuple):
     backend: str = "reference"
     backend_idx: int = 0
     topo_idx: int = 0
+    impair_idx: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +119,7 @@ class SweepSpec:
     slots: Optional[int] = None
     backends: Optional[Sequence[str]] = None
     topologies: Optional[Sequence[Topology]] = None
+    impairments: Optional[Sequence] = None
 
     def __post_init__(self):
         if not self.laws or not self.flows or not self.law_cfg_overrides:
@@ -109,6 +127,33 @@ class SweepSpec:
                              "non-empty")
         if self.schedules is not None and not self.schedules:
             raise ValueError("schedules must be None or non-empty")
+        if self.impairments is not None:
+            if self.schedules is not None:
+                raise ValueError(
+                    "impairments and schedules are mutually exclusive (two "
+                    "owners of the bandwidth vector) — wrap the circuit "
+                    "schedule as a KIND_SCHEDULE impairment process instead")
+            if not self.impairments:
+                raise ValueError("impairments must be None or non-empty")
+            if self.topologies is not None:
+                # same NamedTuple-is-a-tuple trap as flows: an
+                # ImpairmentParams is itself a non-empty tuple, so check
+                # the nesting explicitly
+                nested_ok = (
+                    len(self.impairments) == len(self.topologies) and
+                    all(isinstance(g, (list, tuple)) and
+                        not isinstance(g, ImpairmentParams) and len(g) > 0
+                        for g in self.impairments))
+                if not nested_ok:
+                    raise ValueError(
+                        "with a topology axis, impairments must be one "
+                        "non-empty Sequence[ImpairmentParams] per topology "
+                        "(a [Q] regime only fits its own fabric) — got "
+                        "un-nested or mismatched impairments")
+            elif any(not isinstance(p, ImpairmentParams)
+                     for p in self.impairments):
+                raise ValueError("impairments must be ImpairmentParams "
+                                 "(see impair.fabric_impairments)")
         if self.slots is not None and self.slots < 1:
             raise ValueError("slots must be None or >= 1")
         if self.backends is not None and not self.backends:
@@ -138,6 +183,18 @@ class SweepSpec:
                 else (tuple(self.flows),))
 
     @property
+    def impair_groups(self) -> Sequence[Optional[Sequence[ImpairmentParams]]]:
+        """Per-topology impairment groups, mirroring ``flow_groups``:
+        one Sequence[ImpairmentParams] per topology (None throughout when
+        the spec has no impairment axis)."""
+        ngroups = (len(self.topologies) if self.topologies is not None
+                   else 1)
+        if self.impairments is None:
+            return (None,) * ngroups
+        return (tuple(self.impairments) if self.topologies is not None
+                else (tuple(self.impairments),))
+
+    @property
     def backend_axis(self) -> Sequence[str]:
         """The backend axis: ``backends`` when given, else the single
         ``backend``. Like the law axis it is STRUCTURAL — each (law,
@@ -164,16 +221,20 @@ def expand(spec: SweepSpec) -> List[SweepPoint]:
     scheds = (range(len(spec.schedules)) if spec.schedules is not None
               else (-1,))
     for ti, group in enumerate(spec.flow_groups):
+        imp_group = spec.impair_groups[ti]
+        imps = range(len(imp_group)) if imp_group is not None else (-1,)
         for li, law in enumerate(spec.laws):
             for bi, be in enumerate(spec.backend_axis):
                 row = 0
                 for fi in range(len(group)):
                     for oi in range(len(spec.law_cfg_overrides)):
                         for si in scheds:
-                            pts.append(SweepPoint(len(pts), row, li,
-                                                  _law_name(law), fi, oi,
-                                                  si, be, bi, ti))
-                            row += 1
+                            for ii in imps:
+                                pts.append(SweepPoint(len(pts), row, li,
+                                                      _law_name(law), fi,
+                                                      oi, si, be, bi, ti,
+                                                      ii))
+                                row += 1
     return pts
 
 
@@ -251,6 +312,10 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
         if spec.schedules is not None:
             raise ValueError("shard_scenario does not support an RDCN "
                              "schedule axis")
+        if spec.impairments is not None:
+            raise ValueError("shard_scenario does not support an "
+                             "impairment axis (the sharded slot engine "
+                             "splits the queue axis; see shardslots)")
     if spec.topologies is not None:
         if topo is not None:
             raise ValueError("spec carries a topology axis; pass topo=None")
@@ -299,6 +364,10 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
                     bw_fn = circuit_bw_at
                     bw_params = stack_schedules(
                         [spec.schedules[p.sched_idx] for p in rows])
+                imp_group = spec.impair_groups[ti]
+                impair_params = (stack_impairments(
+                    [imp_group[p.impair_idx] for p in rows])
+                    if imp_group is not None else None)
                 if spec.slots is not None:
                     if shard_scenario:
                         sts, rcs = [], []
@@ -322,12 +391,14 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
                         topo_t, sb, law, spec.slots,
                         stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
                         bw_params=bw_params, record=record,
-                        backend=be, devices=devices)
+                        backend=be, devices=devices,
+                        impair_params=impair_params)
                 else:
                     fb = stack_flows([padded[p.flows_idx] for p in rows],
                                      topo_t.num_queues)
                     states[key], records[key] = simulate_batch(
                         topo_t, fb, law, stack_law_configs(lcfgs), cfg,
                         bw_fn=bw_fn, bw_params=bw_params, record=record,
-                        backend=be, devices=devices)
+                        backend=be, devices=devices,
+                        impair_params=impair_params)
     return SweepResult(tuple(points), states, records)

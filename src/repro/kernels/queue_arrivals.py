@@ -184,6 +184,19 @@ def csr_gather_arrivals(contrib: jnp.ndarray, inv: jnp.ndarray,
     return arr
 
 
+def apply_loss(arr: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Fold per-link loss into the ACCUMULATED queue arrivals.
+
+    Loss is applied post-scatter — every engine scales the identical
+    accumulated sum, so the scaled arrivals (and the out/q integration
+    they feed) stay bit-identical across engines; scaling per-hop
+    contributions pre-scatter would round each engine's accumulation
+    chain apart. Pinned + contraction-blocked like the integration
+    itself; ``keep == 1.0`` rows are exact (x * 1.0 == x in f32), which
+    is the zero-impairment bitwise contract (core/impair.py)."""
+    return _nofma(_pin(arr * keep))
+
+
 def integrate_arrivals(arr: jnp.ndarray, q: jnp.ndarray, bw: jnp.ndarray,
                        caps: jnp.ndarray, *, dt: float):
     """The fluid-queue integration step shared by every sparse queue

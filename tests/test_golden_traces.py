@@ -29,8 +29,10 @@ with open(GOLDEN) as f:
 
 
 def test_every_registered_law_has_a_golden_trace():
-    """New laws must check in an anchor (regenerate the JSON)."""
+    """New laws must check in an anchor (regenerate the JSON) — including
+    the impaired-fabric companion trace (DESIGN.md section 17)."""
     assert sorted(LAWS) == sorted(_DATA)
+    assert all("impair" in _DATA[law] for law in _DATA)
 
 
 def test_feedback_laws_anchored():
@@ -54,19 +56,29 @@ def test_feedback_laws_anchored():
     assert _DATA["fncc"]["q"] != _DATA["pcc"]["q"]
 
 
+def _check(law, got, want, leg=""):
+    np.testing.assert_allclose(got["q"], want["q"], rtol=1e-5, atol=0.5,
+                               err_msg=f"{law}{leg}: queue trace drifted")
+    np.testing.assert_allclose(got["w_final"], want["w_final"], rtol=1e-5,
+                               err_msg=f"{law}{leg}: final windows drifted")
+    np.testing.assert_allclose(got["w_sum"], want["w_sum"], rtol=1e-5,
+                               err_msg=f"{law}{leg}: w_sum trace drifted")
+    for g, w in zip(got["fct_us"], want["fct_us"]):
+        assert (g is None) == (w is None), \
+            f"{law}{leg}: flow completion set changed"
+        if g is not None:
+            assert g == pytest.approx(w, rel=1e-5), f"{law}{leg}: FCT drifted"
+
+
 @pytest.mark.parametrize("law", sorted(_DATA))
 def test_golden_trace(law):
     from tools.gen_golden import trace
     got = trace(law)
     want = _DATA[law]
-    np.testing.assert_allclose(got["q"], want["q"], rtol=1e-5, atol=0.5,
-                               err_msg=f"{law}: queue trace drifted")
-    np.testing.assert_allclose(got["w_final"], want["w_final"], rtol=1e-5,
-                               err_msg=f"{law}: final windows drifted")
-    np.testing.assert_allclose(got["w_sum"], want["w_sum"], rtol=1e-5,
-                               err_msg=f"{law}: w_sum trace drifted")
-    for g, w in zip(got["fct_us"], want["fct_us"]):
-        assert (g is None) == (w is None), \
-            f"{law}: flow completion set changed"
-        if g is not None:
-            assert g == pytest.approx(w, rel=1e-5), f"{law}: FCT drifted"
+    _check(law, got, want)
+    # impaired-fabric companion: same scenario under the mixed regime
+    # (oscillating capacity + stochastic loss + jitter) — pins the
+    # process layer's numerics per law, and must actually impair
+    _check(law, got["impair"], want["impair"], leg="[impair]")
+    assert got["impair"]["q"] != got["q"], \
+        f"{law}: the impairment regime was a no-op"

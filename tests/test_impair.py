@@ -1,0 +1,232 @@
+"""Registry-driven impairment conformance suite (DESIGN.md section 17).
+
+Anchors: on the k=4 fat-tree web-search anchor under the MIXED
+impairment regime (oscillating ToR->host capacity + stochastic loss +
+delay jitter), every law in the live registry must produce BIT-IDENTICAL
+queue traces, FCT vectors and windows across all three engines — padded
+reference, S >= N flow-slot stream, and megakernel — including S < N
+slot recycling and chunk-streamed schedules. A law registered tomorrow
+is anchored with zero edits here (the parametrization reads the live
+registry).
+
+Structural contracts ride along: the all-zero impairment preset must
+reproduce the unimpaired run bitwise (keep == 1.0 / jit == 0.0 are
+exact f32 identities), the sharded slot engine must reject impairments
+EAGERLY (its queue-axis split would fork the per-link hash streams),
+and the sweep's ``impairments`` axis must thread regimes through the
+batched programs bit-exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CircuitSchedule, LAWS, LinkProcess, SimConfig, US,
+                        SweepSpec, default_law_config, fabric_impairments,
+                        fat_tree, make_schedule, netem, no_impairment,
+                        pad_flows, poisson_websearch, run_sweep,
+                        schedule_as_flows, simulate, simulate_slots,
+                        simulate_slots_sharded, single_bottleneck_fabric,
+                        compile_routes, GBPS)
+from repro.core.fabric import HOST, TOR
+
+DT = 1e-6
+
+
+def _anchor_law_cfg(sched, **kw):
+    """Paper-default config satisfying every registered law's extra
+    requirements (retcp needs a circuit schedule in cfg.sched) — the
+    anchors below parametrize over the LIVE registry."""
+    kw.setdefault("sched", CircuitSchedule(day=50 * US, night=10 * US,
+                                           matchings=4).params())
+    return default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              **kw)
+
+
+def _anchor():
+    """k=4 fat-tree web-search plus the mixed impairment regime (every
+    process kind at once: oscillating capacity, stochastic loss, delay
+    jitter — the same shape as benchmarks.impair_fct's smoke leg)."""
+    ft = fat_tree(4)
+    flows = poisson_websearch(ft, 0.25, 0.002, DT, seed=3)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=DT, steps=4000, hist=512, update_period=2e-6)
+    imp = fabric_impairments(
+        ft,
+        rules={(TOR, HOST): LinkProcess(kind="oscillate", bw_lo=2.5e9,
+                                        period=200e-6, seed=5)},
+        default=netem(loss=0.01, jitter=1e-6, seed=9))
+    return ft, sched, cfg, imp
+
+
+# -------------------------------------------------------------------------
+# registry conformance: three engines, impaired, bit-for-bit
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_three_engines_bitmatch_impaired(law):
+    """Padded reference, S >= N flow-slot stream and megakernel on the
+    IMPAIRED anchor: bit-identical queue traces, FCTs and windows for
+    every registered law; S < N recycling and chunk-streamed schedules
+    stay on the same bits."""
+    ft, sched, cfg, imp = _anchor()
+    topo = ft.topology()
+    n = int(sched.start.shape[0])
+    lcfg = _anchor_law_cfg(sched)
+    st_p, rec_p = simulate(topo, schedule_as_flows(sched), law, lcfg, cfg,
+                           impair=imp)
+    st_s, rec_s = simulate_slots(topo, sched, law, n + 4, lcfg, cfg,
+                                 impair=imp)
+    st_m, rec_m = simulate_slots(topo, sched, law, n + 4, lcfg, cfg,
+                                 backend="megakernel", impair=imp)
+    assert np.array_equal(np.asarray(rec_s.q), np.asarray(rec_p.q))
+    assert np.array_equal(np.asarray(st_s.fct), np.asarray(st_p.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_s.w[:n]), np.asarray(st_p.w))
+    assert np.array_equal(np.asarray(rec_m.q), np.asarray(rec_s.q))
+    assert np.array_equal(np.asarray(st_m.fct), np.asarray(st_s.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_m.w), np.asarray(st_s.w))
+    assert np.array_equal(np.asarray(rec_m.lam_f), np.asarray(rec_s.lam_f))
+
+    # S < N: recycled pool, FCT set still bit-identical across backends
+    st_r, _ = simulate_slots(topo, sched, law, 10, lcfg, cfg,
+                             record=False, impair=imp)
+    st_rm, _ = simulate_slots(topo, sched, law, 10, lcfg, cfg,
+                              record=False, backend="megakernel",
+                              impair=imp)
+    assert np.array_equal(np.asarray(st_rm.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+
+    # chunk-streamed schedule windows: same bits as the single-shot run
+    st_c, _ = simulate_slots(topo, sched, law, 10, lcfg, cfg,
+                             record=False, chunk=7, impair=imp)
+    assert np.array_equal(np.asarray(st_c.fct), np.asarray(st_r.fct),
+                          equal_nan=True)
+
+
+def test_impairment_changes_dynamics():
+    """The mixed regime is not a no-op: impaired queue traces differ
+    from the clean fabric's (guards against a silently-dropped fold)."""
+    ft, sched, cfg, imp = _anchor()
+    topo = ft.topology()
+    lcfg = _anchor_law_cfg(sched)
+    fl = schedule_as_flows(sched)
+    _, rec_c = simulate(topo, fl, "powertcp", lcfg, cfg)
+    _, rec_i = simulate(topo, fl, "powertcp", lcfg, cfg, impair=imp)
+    assert not np.array_equal(np.asarray(rec_i.q), np.asarray(rec_c.q))
+
+
+def test_zero_impairment_bitwise_baseline():
+    """``no_impairment`` must reproduce the unimpaired anchor BIT-FOR-BIT
+    on all three engines: keep == 1.0 and jit == 0.0 are exact f32
+    identities, so the impaired program computes the same values."""
+    ft, sched, cfg, _ = _anchor()
+    topo = ft.topology()
+    n = int(sched.start.shape[0])
+    lcfg = _anchor_law_cfg(sched)
+    fl = schedule_as_flows(sched)
+    z = no_impairment(topo)
+    st_b, rec_b = simulate(topo, fl, "powertcp", lcfg, cfg)
+    st_z, rec_z = simulate(topo, fl, "powertcp", lcfg, cfg, impair=z)
+    assert np.array_equal(np.asarray(rec_z.q), np.asarray(rec_b.q))
+    assert np.array_equal(np.asarray(st_z.fct), np.asarray(st_b.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_z.w), np.asarray(st_b.w))
+    for backend in ("reference", "megakernel"):
+        st_bs, rec_bs = simulate_slots(topo, sched, "powertcp", n, lcfg,
+                                       cfg, backend=backend)
+        st_zs, rec_zs = simulate_slots(topo, sched, "powertcp", n, lcfg,
+                                       cfg, backend=backend, impair=z)
+        assert np.array_equal(np.asarray(rec_zs.q), np.asarray(rec_bs.q))
+        assert np.array_equal(np.asarray(st_zs.fct),
+                              np.asarray(st_bs.fct), equal_nan=True)
+
+
+# -------------------------------------------------------------------------
+# engine/API seams: rejections are EAGER, not mid-scan surprises
+# -------------------------------------------------------------------------
+
+def test_sharded_engine_rejects_impairments_eagerly():
+    """``simulate_slots_sharded`` splits the queue axis across the mesh;
+    a per-shard replay of the counter-based hash streams would not
+    bit-match the batched path, so the engine must refuse impairments
+    before tracing anything."""
+    ft, sched, cfg, imp = _anchor()
+    lcfg = _anchor_law_cfg(sched)
+    with pytest.raises(NotImplementedError, match="sharded"):
+        simulate_slots_sharded(ft.topology(), sched, "powertcp", 16, lcfg,
+                               cfg, impair=imp)
+
+
+def test_fused_backend_rejects_impairments():
+    ft, sched, cfg, imp = _anchor()
+    lcfg = _anchor_law_cfg(sched)
+    with pytest.raises(NotImplementedError, match="fused"):
+        simulate(ft.topology(), schedule_as_flows(sched), "powertcp",
+                 lcfg, cfg, backend="fused", impair=imp)
+
+
+def test_bw_fn_and_impair_mutually_exclusive():
+    ft, sched, cfg, imp = _anchor()
+    lcfg = _anchor_law_cfg(sched)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        simulate(ft.topology(), schedule_as_flows(sched), "powertcp",
+                 lcfg, cfg, bw_fn=lambda t: 1.0, impair=imp)
+
+
+def test_spec_rejects_impairments_plus_schedules():
+    ft, sched, _, imp = _anchor()
+    fl = schedule_as_flows(sched)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SweepSpec(laws=["powertcp"], flows=[fl], impairments=[imp],
+                  schedules=[CircuitSchedule()])
+
+
+def test_shard_scenario_rejects_impairment_axis():
+    ft, sched, cfg, imp = _anchor()
+    fl = schedule_as_flows(sched)
+    spec = SweepSpec(laws=["powertcp"], flows=[fl], impairments=[imp],
+                     slots=16)
+    with pytest.raises(ValueError, match="impairment"):
+        run_sweep(spec, ft.topology(), cfg, shard_scenario=True)
+
+
+# -------------------------------------------------------------------------
+# sweep axis: regimes batch inside the compiled program, bit-exactly
+# -------------------------------------------------------------------------
+
+def test_sweep_impairments_axis_bitexact():
+    """The ``impairments`` axis threads regimes through the batched
+    programs: the zero-regime row reproduces a no-axis sweep's row
+    bitwise (same batch machinery, same bits) and the impaired row
+    actually diverges — on both the padded and the slot path."""
+    fab = single_bottleneck_fabric(bandwidth=25 * GBPS, buffer=6e6,
+                                   tau=20 * US, dt_alpha=0.0)
+    topo = fab.topology()
+    routes = compile_routes(fab)
+    n = 6
+    sizes = np.linspace(1e5, 5e5, n)
+    starts = np.linspace(0, 1e-4, n)
+    fl = routes.make_flows(np.zeros(n, int), np.ones(n, int), sizes,
+                           starts, DT)
+    cfg = SimConfig(dt=DT, steps=1500, hist=64, update_period=2e-6)
+    imps = [no_impairment(topo),
+            fabric_impairments(fab, default=netem(loss=0.03, jitter=2e-6,
+                                                  seed=4))]
+    for slots in (None, 8):
+        spec_ax = SweepSpec(laws=["powertcp"], flows=[fl],
+                            impairments=imps, expected_flows=4.0,
+                            slots=slots)
+        spec_no = SweepSpec(laws=["powertcp"], flows=[fl],
+                            law_cfg_overrides=[{}, {}],
+                            expected_flows=4.0, slots=slots)
+        r_ax = run_sweep(spec_ax, topo, cfg)
+        r_no = run_sweep(spec_no, topo, cfg)
+        assert [(p.row, p.impair_idx) for p in r_ax.points] == \
+            [(0, 0), (1, 1)]
+        assert np.array_equal(np.asarray(r_ax.record(0).q),
+                              np.asarray(r_no.record(0).q))
+        assert np.array_equal(np.asarray(r_ax.state(0).fct),
+                              np.asarray(r_no.state(0).fct),
+                              equal_nan=True)
+        assert not np.array_equal(np.asarray(r_ax.record(1).q),
+                                  np.asarray(r_no.record(0).q))

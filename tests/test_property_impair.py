@@ -1,0 +1,229 @@
+"""Property tests for the per-link impairment layer (DESIGN.md section 17).
+
+Five invariants of the process evaluators, checked over fuzzed process
+parameters and sample times:
+
+  1. capacity stays inside the process envelope: ``link_bw_at`` is within
+     [min(bw_lo, bw_hi), max(bw_lo, bw_hi)] for every kind at every time
+     (and is finite — untaken where-branches may produce NaN internally
+     but must never leak);
+  2. loss stays inside [0, LOSS_MAX] (< 1), so the survival (keep)
+     fraction never reaches exact zero and flows always complete;
+  3. the counter-based draws are deterministic and stateless: the same
+     (seed, t) reproduces bitwise across evaluations, vmap widths and
+     call orders, and different seeds/salts decorrelate;
+  4. the zero preset is the bitwise identity: ``no_impairment`` returns
+     the fabric's own capacities value-for-value and (keep, jit) ==
+     (1.0, +0.0) exactly — the contract that keeps impaired-but-zero
+     programs on the unimpaired bits;
+  5. the KIND_SCHEDULE process is the degenerate RDCN instance:
+     ``link_bw_at`` on ``schedule_impairment(p)`` equals
+     ``rdcn.circuit_bw_at(t, p)`` bit-for-bit for any schedule.
+
+When ``hypothesis`` is installed the parameters/times are fuzzed; the
+fixed grid below always runs (the container image does not ship
+hypothesis — CI installs it from requirements.txt).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CircuitSchedule, GBPS, US, LinkProcess,
+                        fat_tree, netem, no_impairment,
+                        schedule_impairment, stack_impairments)
+from repro.core.impair import (LOSS_MAX, ImpairmentParams, _params_from_procs,
+                               impair_vectors, link_bw_at, link_jitter_at,
+                               link_loss_at)
+from repro.core.rdcn import circuit_bw_at
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _procs_grid():
+    """One process of every kind, plus stochastic loss/jitter variants."""
+    return [
+        LinkProcess(),
+        LinkProcess(kind="const", bw_hi=5 * GBPS, loss=0.02, jitter=2e-6),
+        LinkProcess(kind="schedule", bw_hi=100 * GBPS, bw_lo=25 * GBPS,
+                    period=245 * US, up=225 * US, t0=40 * US),
+        LinkProcess(kind="oscillate", bw_lo=2.5e9, period=200e-6, seed=5),
+        LinkProcess(kind="fading", bw_hi=25 * GBPS, bw_lo=5 * GBPS,
+                    period=50e-6, seed=11),
+        netem(loss=0.1, jitter=5e-6, seed=9),
+        netem(loss=0.3, jitter=0.0, random_loss=False, seed=3),
+    ]
+
+
+def _params(procs=None):
+    procs = procs or _procs_grid()
+    return _params_from_procs(procs, np.full(len(procs), 3.125e9,
+                                             np.float32))
+
+
+TS = np.concatenate([np.linspace(0.0, 2e-3, 97),
+                     np.linspace(0.0, 10.0, 23)]).astype(np.float32)
+
+
+# -------------------------------------------------------------------------
+# 1 + 2: capacity envelope, loss range
+# -------------------------------------------------------------------------
+
+def _check_envelope(p: ImpairmentParams, ts):
+    lo = np.minimum(np.asarray(p.bw_lo), np.asarray(p.bw_hi))
+    hi = np.maximum(np.asarray(p.bw_lo), np.asarray(p.bw_hi))
+    for t in ts:
+        bw = np.asarray(link_bw_at(float(t), p))
+        assert np.isfinite(bw).all()
+        assert (bw >= lo - 1e-3).all() and (bw <= hi + 1e-3).all()
+        loss = np.asarray(link_loss_at(float(t), p))
+        assert (loss >= 0.0).all() and (loss <= LOSS_MAX).all()
+        jit = np.asarray(link_jitter_at(float(t), p))
+        assert (jit >= 0.0).all()
+        assert (jit <= np.asarray(p.jitter) + 1e-12).all()
+
+
+def test_capacity_and_loss_envelopes_grid():
+    _check_envelope(_params(), TS)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(bw_hi=hst.floats(1e8, 2e11), bw_lo=hst.floats(1e8, 2e11),
+           period=hst.floats(1e-6, 1e-2), loss=hst.floats(0.0, LOSS_MAX),
+           jitter=hst.floats(0.0, 1e-4), seed=hst.integers(0, 2**32 - 1),
+           t=hst.floats(0.0, 1.0))
+    def test_capacity_and_loss_envelopes_fuzzed(bw_hi, bw_lo, period,
+                                                loss, jitter, seed, t):
+        procs = [LinkProcess(kind=k, bw_hi=bw_hi, bw_lo=bw_lo,
+                             period=period, up=period / 2, loss=loss,
+                             random_loss=bool(seed & 1), jitter=jitter,
+                             seed=seed)
+                 for k in ("const", "schedule", "oscillate", "fading")]
+        _check_envelope(_params(procs), [t, t + period / 3])
+
+
+# -------------------------------------------------------------------------
+# 3: counter-based determinism — stateless, order- and width-independent
+# -------------------------------------------------------------------------
+
+def test_same_seed_bitwise_deterministic():
+    p = _params()
+    for t in TS[::7]:
+        a = np.asarray(link_bw_at(float(t), p))
+        b = np.asarray(link_bw_at(float(t), p))
+        assert np.array_equal(a, b)
+        ka, ja = map(np.asarray, impair_vectors(float(t), p))
+        kb, jb = map(np.asarray, impair_vectors(float(t), p))
+        assert np.array_equal(ka, kb) and np.array_equal(ja, jb)
+
+
+def test_draws_independent_of_evaluation_order_and_batching():
+    """A counter-based stream has no carry: evaluating t=57us before
+    t=3us, or under vmap over a stacked regime axis, lands on the same
+    bits as scalar in-order evaluation."""
+    p = _params()
+    fwd = [np.asarray(link_jitter_at(float(t), p)) for t in TS[:20]]
+    rev = [np.asarray(link_jitter_at(float(t), p))
+           for t in TS[:20][::-1]][::-1]
+    assert all(np.array_equal(a, b) for a, b in zip(fwd, rev))
+    stacked = stack_impairments([p, p, p])
+    vm = jax.vmap(lambda pp: link_bw_at(float(TS[5]), pp))(stacked)
+    one = np.asarray(link_bw_at(float(TS[5]), p))
+    for row in np.asarray(vm):
+        assert np.array_equal(row, one)
+
+
+def test_seeds_and_channels_decorrelate():
+    """Different seeds give different streams; the bw/loss/jitter salts
+    give one link independent channels (a fading draw is not the loss
+    draw rescaled)."""
+    a = _params([LinkProcess(kind="fading", bw_hi=2.0, bw_lo=1.0,
+                             period=1e-6, loss=0.5, random_loss=True,
+                             jitter=1.0, seed=1)] * 4)
+    b = a._replace(seed=a.seed + jnp.uint32(1))
+    ts = TS[:50]
+    bw_a = np.stack([np.asarray(link_bw_at(float(t), a)) for t in ts])
+    bw_b = np.stack([np.asarray(link_bw_at(float(t), b)) for t in ts])
+    assert not np.array_equal(bw_a, bw_b)
+    # channel independence: normalize each draw back to its u01 and
+    # compare streams — equality would mean a shared (unsalted) counter
+    u_bw = (bw_a - 1.0) / 1.0
+    u_loss = np.stack([np.asarray(link_loss_at(float(t), a)) for t in ts]) \
+        / 0.5
+    u_jit = np.stack([np.asarray(link_jitter_at(float(t), a)) for t in ts])
+    assert not np.allclose(u_bw, u_loss, atol=1e-3)
+    assert not np.allclose(u_bw, u_jit, atol=1e-3)
+    # links sharing a class seed still decorrelate (id folded in the hash)
+    assert not np.allclose(bw_a[:, 0], bw_a[:, 1], atol=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=hst.integers(0, 2**32 - 1), t=hst.floats(0.0, 1.0),
+           n=hst.integers(1, 9))
+    def test_determinism_fuzzed(seed, t, n):
+        procs = [LinkProcess(kind="fading", bw_hi=2.0, bw_lo=1.0,
+                             period=7e-6, loss=0.25, random_loss=True,
+                             jitter=3e-6, seed=seed)] * n
+        p = _params(procs)
+        assert np.array_equal(np.asarray(link_bw_at(t, p)),
+                              np.asarray(link_bw_at(t, p)))
+        k1, j1 = map(np.asarray, impair_vectors(t, p))
+        k2, j2 = map(np.asarray, impair_vectors(t, p))
+        assert np.array_equal(k1, k2) and np.array_equal(j1, j2)
+
+
+# -------------------------------------------------------------------------
+# 4: the zero preset is the bitwise identity
+# -------------------------------------------------------------------------
+
+def test_zero_preset_is_bitwise_identity():
+    topo = fat_tree(4).topology()
+    z = no_impairment(topo)
+    base = np.asarray(topo.bandwidth, np.float32)
+    for t in TS[::11]:
+        assert np.array_equal(np.asarray(link_bw_at(float(t), z)), base)
+        keep, jit = map(np.asarray, impair_vectors(float(t), z))
+        assert (keep == 1.0).all()       # exact: 1 - 0.0
+        assert (jit == 0.0).all()        # exact: +0.0 additive identity
+
+
+# -------------------------------------------------------------------------
+# 5: KIND_SCHEDULE is the degenerate RDCN instance, bit-for-bit
+# -------------------------------------------------------------------------
+
+def _rdcn_bitmatch(sched: CircuitSchedule, ts):
+    sp = sched.params()
+    imp = schedule_impairment(sp)
+    for t in ts:
+        a = np.asarray(link_bw_at(float(t), imp)).ravel()[0]
+        b = np.asarray(circuit_bw_at(float(t), sp)).ravel()[0]
+        assert a == b, (float(t), a, b)
+
+
+def test_rdcn_equivalence_grid():
+    sched = CircuitSchedule(day=50 * US, night=10 * US, matchings=4)
+    week = sched.week
+    edges = np.concatenate([np.linspace(0.0, 3 * week, 301),
+                            np.arange(12) * (sched.day + sched.night),
+                            np.arange(12) * (sched.day + sched.night)
+                            + sched.day]).astype(np.float32)
+    _rdcn_bitmatch(sched, edges)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(day=hst.floats(1e-6, 1e-3), night=hst.floats(1e-6, 1e-3),
+           matchings=hst.integers(1, 32), slot=hst.integers(0, 31),
+           t=hst.floats(0.0, 0.5))
+    def test_rdcn_equivalence_fuzzed(day, night, matchings, slot, t):
+        sched = CircuitSchedule(day=day, night=night, matchings=matchings,
+                                slot=slot % matchings)
+        _rdcn_bitmatch(sched, [t, t + day / 3, t + sched.week * 1.5])

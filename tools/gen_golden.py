@@ -3,12 +3,15 @@
     PYTHONPATH=src python tools/gen_golden.py
 
 One short (200-step) reference trajectory per registered law on the
-single-bottleneck topology: the queue trace, final windows and FCTs.
-tests/test_golden_traces.py asserts current simulations against these with
-tight tolerances — equivalence tests (fused==reference, slot==padded)
-cannot see drift that moves BOTH sides, golden traces can. Regenerate ONLY
-when a numerical change is intentional, and say so in the commit that
-updates the file.
+single-bottleneck topology: the queue trace, final windows and FCTs —
+plus, nested under ``"impair"``, the same scenario under a mixed
+impairment regime (oscillating capacity + stochastic loss + delay
+jitter; DESIGN.md section 17), anchoring the per-link process layer's
+numerics per law. tests/test_golden_traces.py asserts current
+simulations against these with tight tolerances — equivalence tests
+(fused==reference, slot==padded) cannot see drift that moves BOTH
+sides, golden traces can. Regenerate ONLY when a numerical change is
+intentional, and say so in the commit that updates the file.
 """
 from __future__ import annotations
 
@@ -20,9 +23,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import (GBPS, US, CircuitSchedule, LAWS, SimConfig,  # noqa: E402
-                        default_law_config, make_flows_single,
+from repro.core import (GBPS, US, CircuitSchedule, LAWS, LinkProcess,  # noqa: E402
+                        SimConfig, default_law_config, make_flows_single,
                         simulate, single_bottleneck)
+from repro.core.impair import _params_from_procs  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
                    "golden_laws.json")
@@ -44,9 +48,17 @@ def scenario():
     return topo, flows, lcfg, cfg
 
 
-def trace(law: str) -> dict:
-    topo, flows, lcfg, cfg = scenario()
-    st, rec = simulate(topo, flows, law, lcfg, cfg)
+def impair_regime(topo):
+    """Mixed regime on the single bottleneck link: oscillating capacity
+    (dips to 40% of line rate over a 50us wave), 1% stochastic loss and
+    1us delay jitter — every process channel at once."""
+    proc = LinkProcess(kind="oscillate", bw_lo=10 * GBPS, period=50 * US,
+                       loss=0.01, random_loss=True, jitter=1e-6, seed=7)
+    return _params_from_procs([proc], np.asarray(topo.bandwidth,
+                                                 np.float32))
+
+
+def _pack(st, rec) -> dict:
     fct = np.asarray(st.fct, np.float64)
     return {
         "q": np.asarray(rec.q[:, 0], np.float64).tolist(),
@@ -54,6 +66,14 @@ def trace(law: str) -> dict:
         "w_sum": np.asarray(rec.w_sum, np.float64)[::10].tolist(),
         "fct_us": [None if not np.isfinite(x) else x * 1e6 for x in fct],
     }
+
+
+def trace(law: str) -> dict:
+    topo, flows, lcfg, cfg = scenario()
+    d = _pack(*simulate(topo, flows, law, lcfg, cfg))
+    d["impair"] = _pack(*simulate(topo, flows, law, lcfg, cfg,
+                                  impair=impair_regime(topo)))
+    return d
 
 
 def main():
