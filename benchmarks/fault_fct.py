@@ -1,0 +1,202 @@
+"""Fault-tolerance benchmarks (DESIGN.md section 18).
+
+``smoke_fault`` is the CI leg (run.py --smoke), three gates in one dict:
+
+  * crash/resume at paper scale — the fig6 256-host fabric streams
+    through the megakernel backend with chunk-boundary checkpointing, an
+    injected crash kills it mid-run, ``resume_slots`` continues from the
+    last durable snapshot, and the resumed run must reproduce the
+    uninterrupted run BIT-FOR-BIT: queue trace, FCTs, windows, per-slot
+    rates and the history rings (``fct_resume_bitmatch``). This is the
+    recovery path exercised end-to-end, not argued from the
+    segmentation-invariance property alone.
+
+  * divergence guard — a ``poison_law``-wrapped law floods NaN mid-run;
+    the guarded chunk stream must convert that into a structured
+    ``DivergenceError`` naming law, tick and first non-finite field
+    (``fct_resume_guard_divergence``) while the unguarded run returns
+    NaN output (the documented default-off behavior).
+
+  * sweep isolation — a laws grid with one deliberately poisoned point
+    runs under ``run_sweep(fault_tolerant=True)``: the poisoned point
+    must land in ``failures`` (stage "divergence") and every clean
+    point must bit-match a clean-grid run
+    (``fct_resume_sweep_isolated`` / ``fct_resume_sweep_failed_points``).
+
+Field reference: benchmarks/README.md; gated by ci.yml's fault leg.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (CheckpointSpec, DivergenceError, GBPS, InjectedCrash,
+                        SimConfig, SweepSpec, US, crash_at_tick,
+                        default_law_config, latest_checkpoint,
+                        make_flows_single, make_schedule, poison_law,
+                        poisson_websearch, resume_slots, run_sweep,
+                        schedule_as_flows, simulate_slots, single_bottleneck,
+                        suggest_slots)
+
+
+def _bitmatch(st_a, rec_a, st_b, rec_b) -> bool:
+    """The full resume contract: queue trace, FCTs, windows, per-slot
+    rates, occupancy counters and the history rings, all bitwise."""
+    eq = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b),
+                                     equal_nan=True)
+    return bool(
+        eq(rec_a.q, rec_b.q) and eq(st_a.fct, st_b.fct)
+        and eq(st_a.w, st_b.w) and eq(rec_a.lam_f, rec_b.lam_f)
+        and eq(rec_a.w_sum, rec_b.w_sum)
+        and eq(rec_a.n_active, rec_b.n_active)
+        and eq(st_a.hist_q, st_b.hist_q) and eq(st_a.hist_w, st_b.hist_w)
+        and eq(st_a.hist_lam, st_b.hist_lam)
+        and int(st_a.cursor) == int(st_b.cursor))
+
+
+def crash_resume_paper_scale(duration: float = 0.008, load: float = 0.6,
+                             seed: int = 1, backend: str = "megakernel",
+                             chunk: int = 2048) -> dict:
+    """Inject a crash mid-run at fig6 paper scale, resume from the last
+    chunk-boundary snapshot, and bit-compare against the uninterrupted
+    run. Checkpoint cadence and crash tick are picked so the crash lands
+    strictly between two snapshots (the resume replays real work)."""
+    from .fig6_fct import paper_fabric
+
+    fab = paper_fabric()
+    dt = 1e-6
+    topo = fab.topology()
+    flows = poisson_websearch(fab, load, duration, dt, seed=seed)
+    sched = make_schedule(flows)
+    n = int(sched.start.shape[0])
+    slots = suggest_slots(sched, dt)
+    steps = int((duration + 0.008) / dt)
+    cfg = SimConfig(dt=dt, steps=steps, hist=512, update_period=2e-6)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    every = max(1, (steps * 3) // 8)
+    crash = (steps * 9) // 16           # strictly between snapshots 1 and 2
+
+    t0 = time.time()
+    st_b, rec_b = simulate_slots(topo, sched, "powertcp", slots, lcfg, cfg,
+                                 backend=backend, chunk=chunk)
+    base_s = time.time() - t0
+
+    with tempfile.TemporaryDirectory(prefix="fault-fct-") as d:
+        ck = CheckpointSpec(path=os.path.join(d, "ck"), every=every, keep=2)
+        crashed = False
+        try:
+            simulate_slots(topo, sched, "powertcp", slots, lcfg, cfg,
+                           backend=backend, chunk=chunk, checkpoint=ck,
+                           faults=crash_at_tick(crash))
+        except InjectedCrash as e:
+            crashed = True
+            crash_tick = e.tick
+        resume_tick = latest_checkpoint(ck.path)
+        t0 = time.time()
+        st_r, rec_r = resume_slots(topo, sched, "powertcp", slots, ck,
+                                   law_cfg=lcfg, cfg=cfg, backend=backend,
+                                   chunk=chunk)
+        resume_s = time.time() - t0
+
+    return {
+        "fct_resume_hosts": fab.n_hosts,
+        "fct_resume_flows": n,
+        "fct_resume_slots": slots,
+        "fct_resume_steps": steps,
+        "fct_resume_backend": backend,
+        "fct_resume_ckpt_every": every,
+        "fct_resume_crashed": crashed,
+        "fct_resume_crash_tick": int(crash_tick) if crashed else None,
+        "fct_resume_resume_tick": resume_tick,
+        "fct_resume_bitmatch": _bitmatch(st_r, rec_r, st_b, rec_b),
+        "fct_resume_base_wall_s": round(base_s, 3),
+        "fct_resume_wall_s": round(resume_s, 3),
+    }
+
+
+def guard_divergence() -> dict:
+    """A poisoned law under ``guard=True`` must raise a structured
+    ``DivergenceError`` at the next chunk boundary; the same run
+    unguarded returns NaN-filled output (guards are off the hot path by
+    default, DESIGN.md section 18)."""
+    B = 100 * GBPS
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(2)
+    fl = make_flows_single(18, tau=20 * US, nic=B,
+                           sizes=rng.uniform(6e4, 3e5, 18),
+                           starts=rng.uniform(0.0, 1.2e-3, 18), sim_dt=1e-6)
+    sched = make_schedule(fl)
+    cfg = SimConfig(dt=1e-6, steps=2500, hist=512)
+    bad = poison_law("powertcp", at_t=0.5e-3)
+
+    diverged, law, tick, field = False, None, None, None
+    try:
+        simulate_slots(topo, sched, bad, 8, cfg=cfg, chunk=8, guard=True)
+    except DivergenceError as e:
+        diverged, law, tick, field = True, e.law, e.tick, e.field
+    st, _ = simulate_slots(topo, sched, bad, 8, cfg=cfg, chunk=8)
+    nan_through = bool(np.isnan(np.asarray(st.w)).any()
+                       or any(np.isnan(np.asarray(l)).any()
+                              for l in jax_leaves(st.law)))
+    return {
+        "fct_resume_guard_divergence": diverged,
+        "fct_resume_guard_law": law,
+        "fct_resume_guard_tick": tick,
+        "fct_resume_guard_field": field,
+        "fct_resume_guard_unguarded_nan": nan_through,
+    }
+
+
+def jax_leaves(tree):
+    import jax
+    return [l for l in jax.tree_util.tree_leaves(tree)
+            if np.asarray(l).dtype.kind == "f"]
+
+
+def sweep_isolation() -> dict:
+    """A grid with one deliberately poisoned point under
+    ``fault_tolerant=True``: the poisoned point fails (divergence
+    stage), every clean point bit-matches a clean-grid run."""
+    B = 100 * GBPS
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(3)
+    fl = make_flows_single(14, tau=20 * US, nic=B,
+                           sizes=rng.uniform(6e4, 2e5, 14),
+                           starts=rng.uniform(0.0, 0.8e-3, 14), sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=1500, hist=256)
+    bad = poison_law("powertcp", at_t=0.3e-3)
+
+    spec_p = SweepSpec(laws=("powertcp", bad, "hpcc"), flows=(fl,),
+                       law_cfg_overrides=({},), expected_flows=8.0, slots=8)
+    res = run_sweep(spec_p, topo, cfg, fault_tolerant=True)
+    spec_c = SweepSpec(laws=("powertcp", "hpcc"), flows=(fl,),
+                       law_cfg_overrides=({},), expected_flows=8.0, slots=8)
+    clean = run_sweep(spec_c, topo, cfg)
+
+    eq = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b),
+                                     equal_nan=True)
+    def match(i, j):
+        a, b = res.state(i), clean.state(j)
+        return eq(a.fct, b.fct) and eq(a.w, b.w) and eq(a.q, b.q)
+
+    failed = [f for f in res.failures]
+    isolated = bool(match(0, 0) and match(2, 1)
+                    and len(failed) == 1 and failed[0].index == 1
+                    and failed[0].stage == "divergence")
+    return {
+        "fct_resume_sweep_isolated": isolated,
+        "fct_resume_sweep_failed_points": len(failed),
+        "fct_resume_sweep_failed_stage": (failed[0].stage if failed
+                                          else None),
+    }
+
+
+def smoke_fault() -> dict:
+    """CI fault leg: fct_resume_* fields for BENCH_sweep.json."""
+    data = crash_resume_paper_scale()
+    data.update(guard_divergence())
+    data.update(sweep_isolation())
+    return data

@@ -358,8 +358,8 @@ def smoke_rdcn() -> dict:
 
 
 def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
-    """--smoke entry: seed sweep + slot engine + RDCN grid + fabric legs,
-    one BENCH_sweep.json.
+    """--smoke entry: seed sweep + slot engine + RDCN grid + fabric +
+    fault legs, one BENCH_sweep.json.
 
     ``devices`` adds the sharded leg to the seed sweep; the RDCN grid (10
     points, compile-dominated) always runs the single-device batched path —
@@ -367,20 +367,47 @@ def run_smoke(devices=None, out_name: str = "BENCH_sweep.json") -> dict:
     grid across forced host devices only measures shard_map overhead. The
     slot leg (``fct_slot_*``) runs the fig6 paper-scale scenario (256
     hosts, 60% load) through the padded and slot engines at equal scale.
+
+    Crash-safe by construction (DESIGN.md section 18): each section runs
+    isolated — one section's exception lands in the ``failures`` record
+    (section name + error) while every other section's fields still make
+    it into the JSON — and the file itself is written atomically (temp +
+    ``os.replace``), so a died run never leaves a torn BENCH_sweep.json
+    for CI to misparse; it either sees the previous file or a complete
+    new one. CI gates on ``failures == []``.
     """
-    data = smoke_sweep(devices=devices)
-    data.update(smoke_slots())
-    data.update(smoke_rdcn())
     from .fabric_fct import smoke_fabric, smoke_fabric16
-    data.update(smoke_fabric())
-    data.update(smoke_fabric16(devices=devices))
     from .feedback_fct import smoke_feedback
-    data.update(smoke_feedback())
     from .impair_fct import smoke_impair
-    data.update(smoke_impair())
+    from .fault_fct import smoke_fault
+    sections = [
+        ("sweep", lambda: smoke_sweep(devices=devices)),
+        ("slots", smoke_slots),
+        ("rdcn", smoke_rdcn),
+        ("fabric", smoke_fabric),
+        ("fabric16", lambda: smoke_fabric16(devices=devices)),
+        ("feedback", smoke_feedback),
+        ("impair", smoke_impair),
+        ("fault", smoke_fault),
+    ]
+    data: dict = {}
+    failures = []
+    for name, fn in sections:
+        try:
+            data.update(fn())
+        except Exception as e:          # pragma: no cover - failure path
+            failures.append({"section": name,
+                             "error": f"{type(e).__name__}: {e}"})
+            print(f"SMOKE SECTION FAILED: {name}: "
+                  f"{type(e).__name__}: {e}")
+    data["failures"] = failures
     out = os.path.join(os.path.dirname(__file__), "..", out_name)
-    with open(out, "w") as f:
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(data, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, out)
     for k, v in data.items():
         print(f"BENCH,sweep.{k},{v},")
     print(f"wrote {os.path.abspath(out)}")
@@ -417,12 +444,67 @@ def main():
 
     if a.smoke:
         data = run_smoke(devices=devices)
-        # rdcn_speedup is reported but not gated: at 10 compile-dominated
-        # points its margin (~1.1x) is within runner noise, unlike the
-        # ~7x seed sweep. Consistency errors ARE gated. (CI additionally
-        # asserts devices == 8 and sharded_bitmatches_vmap on the JSON, so
-        # a silently-ignored device forcing cannot pass unnoticed there.)
+        return 0 if smoke_ok(data) else 1
+
+    from . import (fabric_fct, feedback_fct, fig3_phase, fig4_incast,
+                   fig5_fairness, fig6_fct, fig7_load_sweep, fig8_rdcn,
+                   impair_fct, tab_commsched)
+    def sharded(fn):
+        return lambda quick: fn(quick=quick, devices=devices)
+
+    suite = {
+        "fig3": fig3_phase.run,
+        "fig4": sharded(fig4_incast.run),
+        "fig5": sharded(fig5_fairness.run),
+        "fig6": sharded(fig6_fct.run),
+        "fig7": sharded(fig7_load_sweep.run),
+        "fig8": sharded(fig8_rdcn.run),
+        "fabric": sharded(fabric_fct.run),
+        "feedback": feedback_fct.run,
+        "impair": sharded(impair_fct.run),
+        "commsched": tab_commsched.run,
+    }
+    only = set(a.only.split(",")) if a.only else set(suite)
+    unknown = only - set(suite)
+    if unknown:
+        ap.error(f"unknown --only targets {sorted(unknown)}; "
+                 f"have {sorted(suite)}")
+    scoreboard = {}
+    for name, fn in suite.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            scoreboard[name] = bool(fn(quick=a.quick))
+        except Exception as e:          # pragma: no cover
+            scoreboard[name] = False
+            print(f"ERROR in {name}: {type(e).__name__}: {e}")
+        print(f"BENCH,{name}.wall_s,{time.time()-t0:.1f},s")
+
+    _dryrun_summary()
+    print("\n== CLAIMS SCOREBOARD ==")
+    for k, v in scoreboard.items():
+        print(f"  {k:12s} {'PASS' if v else 'FAIL'}")
+    print(f"BENCH,claims.passed,{sum(scoreboard.values())},"
+          f"/{len(scoreboard)}")
+    return 0 if all(scoreboard.values()) else 1
+
+
+def smoke_ok(data: dict) -> bool:
+    """The --smoke pass/fail gate over BENCH_sweep.json fields.
+
+    A failed section leaves its fields missing — the KeyError guard
+    turns that into a clean FAIL (plus the section already sits in
+    ``failures``, which is gated empty). rdcn_speedup is reported but
+    not gated: at 10 compile-dominated points its margin (~1.1x) is
+    within runner noise, unlike the ~7x seed sweep. Consistency errors
+    ARE gated. (CI additionally asserts devices == 8 and
+    sharded_bitmatches_vmap on the JSON, so a silently-ignored device
+    forcing cannot pass unnoticed there.)
+    """
+    try:
         ok = (data["speedup"] > 1.0 and data["fct_max_abs_err_s"] < 1e-6
+              and not data["failures"]
               and data["rdcn_util_max_abs_err"] < 5e-3
               and data["rdcn_p99_max_abs_err_s"] < 1e-6
               and data.get("sharded_bitmatches_vmap", True)
@@ -482,51 +564,23 @@ def main():
               and data["fct_impair_zero_baseline"]
               and data["fct_impair_rdcn_equiv"]
               and all(data[f"fct_impair_ws_mean_us_{l}"] is not None
-                      for l in ("powertcp", "hpcc", "timely")))
-        return 0 if ok else 1
-
-    from . import (fabric_fct, feedback_fct, fig3_phase, fig4_incast,
-                   fig5_fairness, fig6_fct, fig7_load_sweep, fig8_rdcn,
-                   impair_fct, tab_commsched)
-    def sharded(fn):
-        return lambda quick: fn(quick=quick, devices=devices)
-
-    suite = {
-        "fig3": fig3_phase.run,
-        "fig4": sharded(fig4_incast.run),
-        "fig5": sharded(fig5_fairness.run),
-        "fig6": sharded(fig6_fct.run),
-        "fig7": sharded(fig7_load_sweep.run),
-        "fig8": sharded(fig8_rdcn.run),
-        "fabric": sharded(fabric_fct.run),
-        "feedback": feedback_fct.run,
-        "impair": sharded(impair_fct.run),
-        "commsched": tab_commsched.run,
-    }
-    only = set(a.only.split(",")) if a.only else set(suite)
-    unknown = only - set(suite)
-    if unknown:
-        ap.error(f"unknown --only targets {sorted(unknown)}; "
-                 f"have {sorted(suite)}")
-    scoreboard = {}
-    for name, fn in suite.items():
-        if name not in only:
-            continue
-        t0 = time.time()
-        try:
-            scoreboard[name] = bool(fn(quick=a.quick))
-        except Exception as e:          # pragma: no cover
-            scoreboard[name] = False
-            print(f"ERROR in {name}: {type(e).__name__}: {e}")
-        print(f"BENCH,{name}.wall_s,{time.time()-t0:.1f},s")
-
-    _dryrun_summary()
-    print("\n== CLAIMS SCOREBOARD ==")
-    for k, v in scoreboard.items():
-        print(f"  {k:12s} {'PASS' if v else 'FAIL'}")
-    print(f"BENCH,claims.passed,{sum(scoreboard.values())},"
-          f"/{len(scoreboard)}")
-    return 0 if all(scoreboard.values()) else 1
+                      for l in ("powertcp", "hpcc", "timely"))
+              # fault-tolerance leg (DESIGN.md section 18): the crash-
+              # injected paper-scale run resumed from its last durable
+              # snapshot must reproduce the uninterrupted run bitwise, a
+              # poisoned law under guard must raise DivergenceError (not
+              # return NaN output), and one poisoned sweep point must be
+              # isolated while every clean point bit-matches a clean run
+              and data["fct_resume_crashed"]
+              and data["fct_resume_bitmatch"]
+              and data["fct_resume_guard_divergence"]
+              and data["fct_resume_guard_unguarded_nan"]
+              and data["fct_resume_sweep_isolated"]
+              and data["fct_resume_sweep_failed_points"] == 1)
+    except KeyError as e:               # a failed section's fields
+        print(f"SMOKE GATE: missing field {e} (section failed)")
+        return False
+    return bool(ok)
 
 
 if __name__ == "__main__":

@@ -1,17 +1,24 @@
 """PowerTCP core: control laws, power computation, fluid-model simulator."""
-from .types import (Flows, FlowSchedule, PathObs, Record, SimConfig,
-                    SimState, SlotState, Topology, GBPS, KB, MB, MTU, US,
-                    pad_hops)
+from .types import (CheckpointSpec, Flows, FlowSchedule, PathObs, Record,
+                    SimConfig, SimState, SlotState, Topology, GBPS, KB, MB,
+                    MTU, US, pad_hops)
 from .laws import (LAWS, Law, LawConfig, get_law, law_backends,
                    norm_power_int, norm_power_theta, register_backend,
                    register_law)
+from .faults import (FaultSpec, InjectedCrash, TransientFault,
+                     UnsupportedFeature, crash_at_chunk, crash_at_tick,
+                     is_transient, poison_law)
+from .guard import (DivergenceError, check_divergence, finite_flags,
+                    first_divergent_field)
 from .fluid import (FluidSim, SlotSim, build_incidence, default_law_config,
                     init_slot_state, init_state, pad_flows, pad_schedule,
-                    resolve_devices, simulate, simulate_batch,
+                    resolve_devices, resume_slots, simulate, simulate_batch,
                     simulate_slots, simulate_slots_batch, slot_step,
                     stack_flow_schedules, stack_flows, stack_law_configs,
                     step)
 from .fluid import audit_carry_dtypes
+from .ckpt import (checkpoint_ticks, latest_checkpoint, load_checkpoint,
+                   read_meta, save_checkpoint)
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from . import megakernel  # noqa: F401  (whole-tick fused slot engine)
 from .shardslots import simulate_slots_sharded
@@ -35,13 +42,20 @@ from .impair import (ImpairmentParams, LinkProcess, fabric_impairments,
                      link_loss_at, netem, no_impairment,
                      schedule_impairment, stack_impairments)
 from . import feedback  # noqa: F401  (registers the feedback-channel laws)
-from .sweep import SweepPoint, SweepResult, SweepSpec, expand, run_sweep
+from .sweep import (FALLBACK_CHAIN, PointFailure, SweepPoint, SweepResult,
+                    SweepSpec, expand, run_sweep)
 from . import analysis
 
 __all__ = [
-    "Flows", "FlowSchedule", "PathObs", "Record", "SimConfig", "SimState",
-    "SlotState", "Topology", "pad_hops",
+    "CheckpointSpec", "Flows", "FlowSchedule", "PathObs", "Record",
+    "SimConfig", "SimState", "SlotState", "Topology", "pad_hops",
     "GBPS", "KB", "MB", "MTU", "US",
+    "FaultSpec", "InjectedCrash", "TransientFault", "UnsupportedFeature",
+    "crash_at_chunk", "crash_at_tick", "is_transient", "poison_law",
+    "DivergenceError", "check_divergence", "finite_flags",
+    "first_divergent_field",
+    "checkpoint_ticks", "latest_checkpoint", "load_checkpoint",
+    "read_meta", "save_checkpoint", "resume_slots",
     "CompiledPaths", "Fabric", "FabricBuilder", "FabricRoutes",
     "compile_routes", "ecmp_hash", "fat_tree", "leaf_spine_fabric",
     "single_bottleneck_fabric",
@@ -67,6 +81,7 @@ __all__ = [
     "ImpairmentParams", "LinkProcess", "fabric_impairments",
     "impair_vectors", "link_bw_at", "link_jitter_at", "link_loss_at",
     "netem", "no_impairment", "schedule_impairment", "stack_impairments",
-    "SweepPoint", "SweepResult", "SweepSpec", "expand", "run_sweep",
+    "FALLBACK_CHAIN", "PointFailure", "SweepPoint", "SweepResult",
+    "SweepSpec", "expand", "run_sweep",
     "analysis", "megakernel",
 ]

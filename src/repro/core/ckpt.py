@@ -1,0 +1,192 @@
+"""Atomic chunk-boundary checkpoints for the scenario engines
+(DESIGN.md section 18).
+
+Layout: one snapshot is ONE ``ckpt-<tick>.npz`` in the spec's
+directory, holding
+
+  * ``__meta__``  — a JSON blob (format version, tick, law name, total
+    steps, engine flavour, record flag, the names of None leaves) used
+    to reject incompatible resumes loudly;
+  * ``leaf:<keystr>`` — every carry leaf, named by its pytree path
+    (``jax.tree_util.keystr``), dtype- and bit-exact (``np.savez``
+    round-trips arrays losslessly);
+  * ``rec:<keystr>``  — the recorded trace so far (when recording), so
+    a resumed run returns the same full-trace Record as an
+    uninterrupted one.
+
+Atomicity: the snapshot is written to a dot-prefixed temp file in the
+same directory and ``os.replace``d into place — a crash mid-write
+leaves the previous snapshot untouched and never a truncated
+``ckpt-*.npz`` (the same temp+rename discipline as
+``train/checkpoint.py``).
+
+Restore never trusts the file's structure: leaves are unflattened INTO
+a template carry built by the same ``init`` that built the original
+(the treedef — including the megakernel's conditional CSR leaves — is
+derived from static scenario arguments, never deserialized), and
+``fluid.audit_carry_dtypes`` runs on the raw numpy leaves BEFORE any
+``jnp.asarray`` conversion, so a float64 leaf smuggled into a snapshot
+is rejected instead of silently downcast.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .types import CheckpointSpec
+
+FORMAT_VERSION = 1
+_CKPT_RE = re.compile(r"^ckpt-(\d+)\.npz$")
+
+
+def _is_none(x) -> bool:
+    return x is None
+
+
+def _flatten_named(tree) -> List[Tuple[str, object]]:
+    """(keystr path, leaf) pairs, None leaves included (kept as leaves
+    via ``is_leaf`` so the None-layout of optional fields — feedback
+    channels, fused incidence — round-trips explicitly)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_none)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _pack(prefix: str, tree, arrays: dict, none_keys: List[str]) -> None:
+    for name, leaf in _flatten_named(tree):
+        key = f"{prefix}:{name}"
+        if leaf is None:
+            none_keys.append(key)
+        else:
+            arrays[key] = np.asarray(jax.device_get(leaf))
+
+
+def save_checkpoint(spec: CheckpointSpec, tick: int, carry,
+                    recs=None, meta: Optional[dict] = None) -> str:
+    """Snapshot ``carry`` (and optional record segments) at ``tick``;
+    returns the final path. Write is atomic (temp + ``os.replace``) and
+    old snapshots beyond ``spec.keep`` are garbage-collected only after
+    the new one is durable."""
+    os.makedirs(spec.path, exist_ok=True)
+    none_keys: List[str] = []
+    arrays: dict = {}
+    _pack("leaf", carry, arrays, none_keys)
+    if recs is not None:
+        _pack("rec", recs, arrays, none_keys)
+    full_meta = dict(meta or {})
+    full_meta.update(version=FORMAT_VERSION, tick=int(tick),
+                     none_keys=none_keys, has_recs=recs is not None)
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(full_meta).encode(), dtype=np.uint8)
+    final = os.path.join(spec.path, f"ckpt-{int(tick)}.npz")
+    tmp = os.path.join(spec.path, f".tmp-ckpt-{int(tick)}.npz")
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    if spec.keep and spec.keep > 0:
+        for old in checkpoint_ticks(spec.path)[:-int(spec.keep)]:
+            try:
+                os.remove(os.path.join(spec.path, f"ckpt-{old}.npz"))
+            except OSError:
+                pass
+    return final
+
+
+def checkpoint_ticks(path: str) -> List[int]:
+    """Snapshot ticks present in ``path``, ascending."""
+    if not os.path.isdir(path):
+        return []
+    ticks = []
+    for name in os.listdir(path):
+        m = _CKPT_RE.match(name)
+        if m:
+            ticks.append(int(m.group(1)))
+    return sorted(ticks)
+
+
+def latest_checkpoint(path: str) -> Optional[int]:
+    """Newest snapshot tick in ``path``, or None when there is none."""
+    ticks = checkpoint_ticks(path)
+    return ticks[-1] if ticks else None
+
+
+def read_meta(path: str, tick: int) -> dict:
+    with np.load(os.path.join(path, f"ckpt-{tick}.npz")) as z:
+        return json.loads(bytes(z["__meta__"]).decode())
+
+
+def _unpack(prefix: str, template, z, none_keys, audit: bool,
+            to_device: bool):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=_is_none)
+    want = {f"{prefix}:{jax.tree_util.keystr(p)}" for p, _ in flat}
+    have = ({k for k in z.files if k.startswith(f"{prefix}:")} |
+            {k for k in none_keys if k.startswith(f"{prefix}:")})
+    if want != have:
+        raise ValueError(
+            f"checkpoint layout mismatch for '{prefix}' tree: "
+            f"missing={sorted(want - have)} unexpected={sorted(have - want)}"
+            f" — the snapshot was written by a different scenario/engine")
+    leaves = []
+    for path, tmpl_leaf in flat:
+        key = f"{prefix}:{jax.tree_util.keystr(path)}"
+        if key in none_keys:
+            if tmpl_leaf is not None:
+                raise ValueError(
+                    f"checkpoint leaf {key} is None but the template "
+                    f"expects an array — engine flavour mismatch")
+            leaves.append(None)
+            continue
+        if tmpl_leaf is None:
+            raise ValueError(
+                f"checkpoint leaf {key} is an array but the template "
+                f"expects None — engine flavour mismatch")
+        leaves.append(z[key])
+    if audit:
+        # on the RAW numpy leaves: jnp.asarray would silently downcast
+        # the very float64 leaves the audit exists to catch
+        from .fluid import audit_carry_dtypes
+        audit_carry_dtypes(jax.tree_util.tree_unflatten(treedef, leaves))
+    if to_device:
+        leaves = [None if x is None else jnp.asarray(x) for x in leaves]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path: str, tick: int, carry_template,
+                    rec_template=None, audit: bool = True,
+                    to_device: bool = True):
+    """Load snapshot ``tick`` into the shape of ``carry_template``.
+
+    Returns ``(meta, carry, recs)`` — ``recs`` is None unless the
+    snapshot recorded and ``rec_template`` is given. ``audit`` runs
+    ``audit_carry_dtypes`` on the raw numpy leaves (f64 rejection);
+    ``to_device=False`` returns numpy leaves bit-identical to what was
+    saved (dtype-preserving — the round-trip-identity form the tests
+    exercise on arbitrary pytrees).
+    """
+    with np.load(os.path.join(path, f"ckpt-{tick}.npz")) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        if meta.get("version") != FORMAT_VERSION:
+            raise ValueError(f"unsupported checkpoint version "
+                             f"{meta.get('version')!r}")
+        none_keys = set(meta.get("none_keys", ()))
+        carry = _unpack("leaf", carry_template, z, none_keys, audit,
+                        to_device)
+        recs = None
+        if rec_template is not None:
+            if not meta.get("has_recs"):
+                raise ValueError(
+                    "checkpoint holds no recorded trace but record=True "
+                    "was requested — re-run with record=False or "
+                    "checkpoint with recording enabled")
+            recs = _unpack("rec", rec_template, z, none_keys,
+                           audit=False, to_device=False)
+    return meta, carry, recs

@@ -1,0 +1,152 @@
+"""Fault injection and feature-rejection taxonomy (DESIGN.md section 18).
+
+Two things live here, both deliberately engine-agnostic:
+
+  * the exception taxonomy the execution layer keys on —
+    ``UnsupportedFeature`` (an engine *declares* a combination it does
+    not implement, with a remediation hint; ``run_sweep``'s backend
+    fallback chain catches exactly this), ``InjectedCrash`` (a test
+    harness killed the run at a deterministic tick/segment — the
+    chunk-boundary checkpoint written just before is the recovery
+    point), ``TransientFault`` (an injected stand-in for the
+    retryable failure class: allocator pressure, a flaky device),
+    and ``is_transient`` (the retry predicate);
+
+  * deterministic fault injectors — ``crash_at_tick`` /
+    ``crash_at_chunk`` build a ``FaultSpec`` the chunk-streamed driver
+    honours (it bounds segment lengths so the crash lands exactly on
+    the requested tick, *after* any due checkpoint is written), and
+    ``poison_law`` wraps a registered law so its window turns NaN from
+    a chosen simulated time — the probe for the divergence guards
+    (``core/guard.py``): a guarded run must raise a structured
+    ``DivergenceError``, never return NaN-filled output.
+
+The injectors exist so the recovery path is exercised end-to-end in
+tests and CI (inject -> crash -> resume -> bitmatch), not just argued.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .laws import Law
+
+
+class UnsupportedFeature(NotImplementedError):
+    """An engine's declared rejection of a feature combination.
+
+    Subclasses ``NotImplementedError`` (the historical type at these
+    seams) so existing ``except NotImplementedError`` callers keep
+    working; carries a ``hint`` naming the supported route. The sweep
+    runner's backend fallback chain triggers on exactly this type —
+    a plain ValueError/TypeError stays a hard error.
+    """
+
+    def __init__(self, message: str, hint: str = ""):
+        self.hint = hint
+        super().__init__(message + (f" (hint: {hint})" if hint else ""))
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by the chunk-streamed driver when a ``FaultSpec`` fires.
+
+    Deliberately NOT retryable (``is_transient`` excludes it): it
+    simulates the process dying, and the contract under test is that
+    everything up to the last chunk-boundary checkpoint is durable and
+    ``resume_slots`` continues bit-for-bit.
+    """
+
+    def __init__(self, tick: int, segment: int):
+        self.tick = int(tick)
+        self.segment = int(segment)
+        super().__init__(f"injected crash at tick {tick} "
+                         f"(segment boundary {segment})")
+
+
+class TransientFault(RuntimeError):
+    """An injected retryable failure (stands in for allocator pressure,
+    a flaky device, ...). ``run_sweep``'s bounded retry-with-backoff
+    treats it — and plain RuntimeErrors outside the taxonomy — as
+    worth retrying."""
+
+
+def is_transient(exc: BaseException) -> bool:
+    """The retry predicate: RuntimeErrors are presumed transient unless
+    they are part of the structured taxonomy (a declared rejection, a
+    divergence diagnosis, or a simulated process death — retrying those
+    cannot succeed). Shape/type/value errors are never transient."""
+    from .guard import DivergenceError
+    if isinstance(exc, (UnsupportedFeature, DivergenceError, InjectedCrash)):
+        return False
+    return isinstance(exc, RuntimeError)
+
+
+class FaultSpec(NamedTuple):
+    """Deterministic crash injection for the chunk-streamed driver.
+
+    ``crash_tick`` kills the run when the simulated tick counter reaches
+    exactly that value (the driver shortens segments so a boundary lands
+    on it); ``crash_segment`` kills it after that many completed
+    segments. Checkpoints due at the crash boundary are written BEFORE
+    the crash fires — the injected failure models the process dying
+    after its last durable write, the worst recoverable case.
+    """
+    crash_tick: Optional[int] = None
+    crash_segment: Optional[int] = None
+
+
+def crash_at_tick(tick: int) -> FaultSpec:
+    """Crash when the simulated tick counter reaches ``tick`` (> 0)."""
+    if int(tick) <= 0:
+        raise ValueError(f"crash tick must be > 0, got {tick}")
+    return FaultSpec(crash_tick=int(tick))
+
+
+def crash_at_chunk(segment: int) -> FaultSpec:
+    """Crash after ``segment`` (> 0) completed chunk segments."""
+    if int(segment) <= 0:
+        raise ValueError(f"crash segment must be > 0, got {segment}")
+    return FaultSpec(crash_segment=int(segment))
+
+
+def poison_law(law: Union[str, Law], at_t: float = 0.0,
+               backend: str = "reference") -> Law:
+    """A law whose window output turns NaN from simulated time ``at_t``.
+
+    Wraps the registered update so every masked window write at
+    ``t >= at_t`` emits NaN, and the first floating-point leaf of the
+    law's internal state is NaN-flooded every tick past ``at_t``. Both
+    channels matter: the padded engine clamps the
+    window right after the law update (``jnp.clip`` lowers to an XLA
+    clamp that replaces NaN with the bound on some backends), so the
+    window poison alone can self-heal there — but no engine launders
+    law state, so the state poison survives every execution path and
+    the divergence guards' NaN check on law-subtree leaves flags it.
+    Used to probe the guards: a guarded run must convert this into a
+    ``DivergenceError`` at the next chunk boundary instead of returning
+    NaN-filled output. The wrapper composes on any backend (it is pure
+    jnp around the inner update).
+    """
+    from .laws import get_law
+    inner = law if isinstance(law, Law) else get_law(law, backend)
+    at_t = float(at_t)
+
+    def update(state, obs, w, rate_cap, upd, cfg, t):
+        state, w, rate_cap = inner.update(state, obs, w, rate_cap, upd,
+                                          cfg, t)
+        w = jnp.where(jnp.logical_and(upd, t >= at_t),
+                      jnp.float32(jnp.nan), w)
+        # state poison keys on t alone: it must re-fire EVERY tick, not
+        # just masked update ticks, because laws recompute smoothed state
+        # fresh from observations (a one-shot NaN would heal next tick)
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        for i, leaf in enumerate(leaves):
+            if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+                leaves[i] = jnp.where(t >= at_t, jnp.float32(jnp.nan),
+                                      leaf)
+                break
+        return jax.tree_util.tree_unflatten(treedef, leaves), w, rate_cap
+
+    return inner._replace(name=f"poisoned_{inner.name}", update=update)

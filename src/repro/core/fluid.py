@@ -70,10 +70,12 @@ from ..kernels.queue_arrivals import (apply_loss, ordered_scatter_add,
                                       update_incidence)
 from ..sharding.axes import active_mesh, active_rules, axes_to_pspec
 from ..sharding.compat import shard_map
+from .faults import FaultSpec, InjectedCrash, UnsupportedFeature
 from .impair import ImpairmentParams, impair_vectors, link_bw_at
 from .laws import Law, LawConfig, get_law, _nofma, _pin
-from .types import (MTU, Flows, FlowSchedule, PathObs, Record, SimConfig,
-                    SimState, SlotState, Topology, pad_hops)
+from .types import (MTU, CheckpointSpec, Flows, FlowSchedule, PathObs,
+                    Record, SimConfig, SimState, SlotState, Topology,
+                    pad_hops)
 
 _INT32_MAX = np.iinfo(np.int32).max
 
@@ -491,9 +493,11 @@ def _check_impair(impair, bw_fn, backend: str):
     if impair is None:
         return
     if backend == "fused":
-        raise NotImplementedError(
-            "impairments are not supported on the fused backend; use the "
-            "reference or megakernel backend")
+        raise UnsupportedFeature(
+            "impairments are not supported on the fused backend (its "
+            "incidence matmul reassociates the arrival sums, so the "
+            "bit-for-bit loss fold has no home there)",
+            hint="use the reference or megakernel backend")
     if bw_fn is not None:
         raise ValueError("bw_fn and impair are mutually exclusive "
                          "bandwidth drivers (wrap the schedule as a "
@@ -1011,7 +1015,12 @@ def _safe_ticks(start_np: np.ndarray, w0: int, chunk: int, t0: int,
 _CHUNK_SEG_MAX = 4096                 # longest single segment (ticks)
 
 
-def _simulate_slots_chunked(sim: SlotSim, chunk: int, bw_fn, record: bool):
+def _simulate_slots_chunked(sim: SlotSim, chunk: int, bw_fn, record: bool,
+                            checkpoint: Optional[CheckpointSpec] = None,
+                            faults: Optional[FaultSpec] = None,
+                            guard: bool = False,
+                            resume: bool = False,
+                            resume_tick: Optional[int] = None):
     """Host-driven segment loop: the jitted inner program advances L ticks
     against a C-sized schedule window; between segments the cursor is
     fetched and the window re-anchored at it. Segment lengths are chosen
@@ -1023,6 +1032,20 @@ def _simulate_slots_chunked(sim: SlotSim, chunk: int, bw_fn, record: bool):
     windowed; the [N] FCT output and [N]-leaf LawConfig stay resident
     (the knife-edge constraint of ``megakernel.MegaCarry`` forbids
     routing the float config gather through carried state).
+
+    Segment boundaries are also the fault-tolerance seam (DESIGN.md
+    section 18): ``checkpoint`` snapshots the full carry (and the
+    recorded trace so far) at boundaries — cadence multiples of
+    ``checkpoint.every`` are hit EXACTLY because the pow2-floored
+    segment decomposition converges onto any bound it is clamped to;
+    ``guard`` runs the divergence finite-check at each boundary (where
+    the host already pays the cursor sync); ``faults`` injects a
+    deterministic ``InjectedCrash`` after the boundary's checkpoint is
+    written. ``resume=True`` restores the newest (or ``resume_tick``)
+    snapshot into the init-built carry template and continues — bit-
+    for-bit identical to the uninterrupted run, because resuming only
+    changes the segmentation of the remaining ticks and the trajectory
+    is invariant to segmentation (the chunk-stream exactness property).
     """
     cfg = sim.cfg
     if record and int(cfg.record_every) > 1:
@@ -1095,17 +1118,81 @@ def _simulate_slots_chunked(sim: SlotSim, chunk: int, bw_fn, record: bool):
     carry = init(_host_window(sched_np, 0, C, Q))
     recs = []
     t0 = 0
+    seg_idx = 0
+    scenario_meta = dict(law=sim.law.name, steps=T, slots=S, flows=N,
+                         mega=mega)
+    if resume:
+        from . import ckpt as _ckpt
+        if checkpoint is None:
+            raise ValueError("resume requires a CheckpointSpec")
+        tick_r = (int(resume_tick) if resume_tick is not None
+                  else _ckpt.latest_checkpoint(checkpoint.path))
+        if tick_r is None:
+            raise FileNotFoundError(
+                f"no ckpt-*.npz snapshot in {checkpoint.path!r}")
+        rec_template = (Record(*([0] * len(Record._fields)))
+                        if record else None)
+        meta, carry, recs0 = _ckpt.load_checkpoint(
+            checkpoint.path, tick_r, carry, rec_template=rec_template)
+        saved = {k: meta.get(k) for k in scenario_meta}
+        if saved != scenario_meta:
+            raise ValueError(
+                f"checkpoint scenario mismatch: snapshot was written by "
+                f"{saved}, resume was asked for {scenario_meta} — "
+                f"resume_slots must be called with the original run's "
+                f"scenario arguments")
+        if record:
+            recs.append(recs0)
+        t0 = int(meta["tick"])
+
+    crash_tick = faults.crash_tick if faults is not None else None
+    crash_seg = faults.crash_segment if faults is not None else None
+    every = int(checkpoint.every) if checkpoint is not None else 0
+
+    def maybe_checkpoint(t_now):
+        if checkpoint is None:
+            return
+        if every > 0 and t_now % every != 0 and t_now < T:
+            return
+        from . import ckpt as _ckpt
+        rcat = (jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+            *recs) if record else None)
+        _ckpt.save_checkpoint(checkpoint, t_now, carry, recs=rcat,
+                              meta=dict(scenario_meta, record=record))
+
     while t0 < T:
         cursor = (carry.state.cursor if mega else carry.cursor)
         w0 = int(jax.device_get(cursor))
         safe = _safe_ticks(start_np, w0, C, t0, T, cfg.dt)
         allowed = max(1, min(max(safe, 1), T - t0, _CHUNK_SEG_MAX))
+        # clamping the segment to the next cadence multiple / crash tick
+        # keeps boundaries landing EXACTLY on them: the pow2 floor below
+        # only shortens segments, and repeated shortening converges onto
+        # the clamp (e.g. 1000 = 512 + 256 + 128 + 64 + 32 + 8)
+        if every > 0:
+            allowed = min(allowed, ((t0 // every) + 1) * every - t0)
+        if crash_tick is not None and t0 < crash_tick:
+            allowed = min(allowed, crash_tick - t0)
         L = 1 << (allowed.bit_length() - 1)       # pow2 floor, >= 1
         win = _host_window(sched_np, w0, C, Q)
         carry, rec = get_seg(L)(carry, win, jnp.asarray(w0, jnp.int32))
         if record:
             recs.append(rec)
         t0 += L
+        seg_idx += 1
+        if guard:
+            from .guard import check_divergence
+            check_divergence(carry.state if mega else carry,
+                             sim.law.name, t0)
+        maybe_checkpoint(t0)
+        # the crash fires AFTER the boundary's checkpoint write: the
+        # injected failure models the process dying after its last
+        # durable snapshot, the worst recoverable case
+        if crash_tick is not None and t0 >= crash_tick:
+            raise InjectedCrash(t0, seg_idx)
+        if crash_seg is not None and seg_idx >= crash_seg:
+            raise InjectedCrash(t0, seg_idx)
 
     if record:
         recs = jax.tree_util.tree_map(
@@ -1126,7 +1213,10 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
                    record: bool = True,
                    backend: str = "reference",
                    chunk: Optional[int] = None,
-                   impair: Optional[ImpairmentParams] = None):
+                   impair: Optional[ImpairmentParams] = None,
+                   checkpoint: Optional[CheckpointSpec] = None,
+                   faults: Optional[FaultSpec] = None,
+                   guard: bool = False):
     """Run a schedule through a bounded pool of ``slots`` active slots.
 
     Returns (final ``SlotState``, ``Record`` pytree); ``final.fct`` is [N]
@@ -1157,6 +1247,18 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
     the single-shot run for EVERY chunk size (C is clamped up to S
     internally; tests/test_chunk_stream.py holds the property). Not
     compatible with ``record_every > 1`` or the fused backend.
+
+    ``checkpoint=CheckpointSpec(path)`` snapshots the full carry (and
+    recorded trace) at chunk-segment boundaries via atomic temp+rename
+    writes; ``resume_slots`` continues from the newest snapshot
+    bit-for-bit (DESIGN.md section 18). ``guard=True`` runs the
+    divergence finite-check at each boundary (``core/guard.py`` —
+    raises ``DivergenceError`` naming law/tick/field instead of
+    returning NaN output); ``faults`` injects a deterministic crash
+    (``core/faults.py``). All three ride the chunk-streamed driver:
+    without an explicit ``chunk`` they default to a full-schedule
+    window (bit-identical to the single-shot run by the chunk
+    contract); the fused backend rejects them.
     """
     cfg = cfg or SimConfig()
     _check_impair(impair, bw_fn, backend)
@@ -1164,6 +1266,17 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
     law_cfg = law_cfg or default_law_config(sched)
     sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend,
                   impair=impair)
+    if checkpoint is not None or faults is not None or guard:
+        if backend == "fused":
+            raise UnsupportedFeature(
+                "checkpoint/fault/guard execution rides the "
+                "chunk-streamed driver, which the fused backend does "
+                "not support",
+                hint="use the reference or megakernel backend")
+        C = int(chunk) if chunk is not None else int(sched.start.shape[0])
+        return _simulate_slots_chunked(sim, C, bw_fn, record,
+                                       checkpoint=checkpoint,
+                                       faults=faults, guard=guard)
     if chunk is not None:
         return _simulate_slots_chunked(sim, int(chunk), bw_fn, record)
     if backend == "megakernel":
@@ -1178,6 +1291,56 @@ def simulate_slots(topo: Topology, sched: FlowSchedule,
                               step_fn=slot_step)
 
     return run()
+
+
+def resume_slots(topo: Topology, sched: FlowSchedule,
+                 law_name: Union[str, Law], slots: int,
+                 checkpoint: CheckpointSpec,
+                 law_cfg: Optional[LawConfig] = None,
+                 cfg: Optional[SimConfig] = None,
+                 bw_fn: Optional[Callable] = None,
+                 record: bool = True,
+                 backend: str = "reference",
+                 chunk: Optional[int] = None,
+                 impair: Optional[ImpairmentParams] = None,
+                 faults: Optional[FaultSpec] = None,
+                 guard: bool = False,
+                 tick: Optional[int] = None):
+    """Continue a checkpointed ``simulate_slots`` run (DESIGN.md s18).
+
+    Call with the ORIGINAL run's scenario arguments (topology, schedule,
+    law, slot pool, configs — a snapshot holds only the carry and the
+    recorded trace; law update functions and schedules are rebuilt, not
+    deserialized) plus the same ``checkpoint`` spec. The newest snapshot
+    (or an explicit ``tick``) is restored into a freshly-built carry
+    template — the snapshot's law/steps/slots/flows/engine metadata must
+    match or this raises — and the run continues to completion,
+    checkpointing onward at the same cadence.
+
+    Returns the standard ``(final SlotState, Record)`` contract with the
+    Record covering the FULL trace from tick 0, bit-for-bit identical to
+    the uninterrupted run: restoring a boundary snapshot only changes
+    how the remaining ticks are cut into segments, and the chunk-
+    streamed trajectory is invariant to segmentation
+    (tests/test_resume.py holds inject -> crash -> resume -> bitmatch
+    for every registered law).
+    """
+    cfg = cfg or SimConfig()
+    _check_impair(impair, bw_fn, backend)
+    if backend == "fused":
+        raise UnsupportedFeature(
+            "checkpoint/resume rides the chunk-streamed driver, which "
+            "the fused backend does not support",
+            hint="use the reference or megakernel backend")
+    law = _resolve_law(law_name, backend)
+    law_cfg = law_cfg or default_law_config(sched)
+    sim = SlotSim(topo, sched, law, law_cfg, cfg, int(slots), backend,
+                  impair=impair)
+    C = int(chunk) if chunk is not None else int(sched.start.shape[0])
+    return _simulate_slots_chunked(sim, C, bw_fn, record,
+                                   checkpoint=checkpoint, faults=faults,
+                                   guard=guard, resume=True,
+                                   resume_tick=tick)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,133 @@
+"""Divergence guards: structured finite-checks on engine carries
+(DESIGN.md section 18).
+
+A blown-up law config (NaN gamma, a negative buffer, an unstable
+additive step) does not raise inside a jitted scan — it silently floods
+the carry with NaN and surfaces hours later as a NaN-filled BENCH json.
+The guard turns that into a diagnosis: ``check_divergence(state, law,
+tick)`` evaluates one fused finite-reduction over every carried leaf
+(a single [K] bool fetch — jit-compatible, one device sync) and raises
+``DivergenceError`` naming the law, the tick, and the FIRST non-finite
+field in carry-declaration order.
+
+Placement: the chunk-streamed driver calls it at segment boundaries when
+``simulate_slots(..., guard=True)`` — boundaries are where the host
+already syncs the admission cursor, so the check rides an existing
+device round-trip and stays entirely off the jitted hot path. Default
+off: the bit-exactness suites intentionally carry NaN through ``fct``
+and the guard must never perturb a clean run's arithmetic (it reads,
+never writes).
+
+Per-leaf policy (field names, applied to the LAST path component):
+
+  * ``fct`` and the megakernel's ``pend`` lanes are skipped — NaN is
+    their documented "not finished" encoding;
+  * inf-encoded sentinels (``rate_cap``, ``remaining``, ``start``,
+    ``stop``, ``next_update``, ``last_update``) and law-private state
+    (anything under a ``law`` subtree) are checked for NaN only;
+  * integer/bool leaves are skipped (they cannot encode non-finites);
+  * everything else — windows, queues, rates, telemetry rings — must be
+    fully finite.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DivergenceError(RuntimeError):
+    """A guarded run's carry went non-finite. ``law``/``tick``/``field``
+    name the diagnosis; ``is_transient`` excludes it (retrying a
+    divergent config cannot succeed)."""
+
+    def __init__(self, law: str, tick: int, field: str):
+        self.law = str(law)
+        self.tick = int(tick)
+        self.field = str(field)
+        super().__init__(
+            f"law '{law}' diverged by tick {tick}: first non-finite "
+            f"field '{field}' (check the law config for this point)")
+
+
+# NaN is these fields' documented encoding ("not finished" / "empty
+# pending lane") — never flag them.
+_SKIP = ("fct", "pend")
+# inf-encoded sentinels: free slots park next_update at inf, long-lived
+# flows carry remaining/size inf, rate caps default inf.
+_INF_OK = frozenset({"rate_cap", "remaining", "start", "stop",
+                     "next_update", "last_update"})
+
+
+def _path_names(path) -> List[str]:
+    names = []
+    for k in path:
+        n = getattr(k, "name", None)
+        if n is None:
+            n = str(getattr(k, "key", getattr(k, "idx", k)))
+        names.append(str(n))
+    return names
+
+
+def _leaf_mode(path) -> str:
+    """'skip' | 'nan' (NaN illegal, inf legal) | 'finite' (both illegal)."""
+    names = _path_names(path)
+    last = names[-1] if names else ""
+    if any(n in _SKIP for n in names):
+        return "skip"
+    if last in _INF_OK or "law" in names[:-1]:
+        return "nan"
+    return "finite"
+
+
+def finite_flags(state) -> Tuple[List[str], jnp.ndarray]:
+    """(checked leaf names, [K] bool vector — True means CLEAN).
+
+    Pure and jit-compatible: one reduction per checked float leaf,
+    stacked into a single [K] vector so the caller pays one fetch.
+    """
+    names, flags = [], []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        if leaf is None:
+            continue
+        mode = _leaf_mode(path)
+        if mode == "skip":
+            continue
+        dtype = jnp.asarray(leaf).dtype
+        if not jnp.issubdtype(dtype, jnp.floating):
+            continue
+        if mode == "nan":
+            ok = jnp.logical_not(jnp.any(jnp.isnan(leaf)))
+        else:
+            ok = jnp.all(jnp.isfinite(leaf))
+        names.append(jax.tree_util.keystr(path))
+        flags.append(ok)
+    if not flags:
+        return names, jnp.ones((0,), jnp.bool_)
+    return names, jnp.stack(flags)
+
+
+def check_divergence(state, law_name: str, tick: int) -> None:
+    """Host-side boundary check: one device fetch; raises
+    ``DivergenceError`` on the first flagged leaf, else returns."""
+    names, flags = finite_flags(state)
+    if not names:
+        return
+    bad = jax.device_get(flags)
+    for name, ok in zip(names, bad):
+        if not bool(ok):
+            raise DivergenceError(law_name, tick, name.lstrip("."))
+
+
+def first_divergent_field(state) -> str:
+    """First flagged leaf name, or '' when the carry is clean — the
+    post-hoc form ``run_sweep`` uses to scan finished batch rows."""
+    names, flags = finite_flags(state)
+    if not names:
+        return ""
+    bad = jax.device_get(flags)
+    for name, ok in zip(names, bad):
+        if not bool(ok):
+            return name.lstrip(".")
+    return ""

@@ -115,7 +115,16 @@ class MegaCarry(NamedTuple):
     gather is deliberately NOT carried — the values would be identical,
     but rerouting them through the loop carry shifts XLA's downstream
     instruction selection enough to flip f32 knife edges the
-    ``laws._pin`` barriers do not cover."""
+    ``laws._pin`` barriers do not cover.
+
+    Checkpoint contract (core/ckpt.py, DESIGN.md section 18): every
+    field here is plain carried data, so the whole MegaCarry round-trips
+    through a chunk-boundary snapshot leaf-for-leaf. Restore goes
+    through a template built by the same ``init_carry`` — the treedef
+    (including whether ``inv``/``ovf`` exist, decided statically by the
+    CSR-vs-scatter choice) is re-derived from scenario arguments, never
+    deserialized, and the float LawConfig gather stays outside the
+    carry on resume exactly as it does on a fresh run."""
     state: SlotState
     pend: PendingFCT
     hold: jnp.ndarray               # [S] int32 max valid hop delay

@@ -61,6 +61,7 @@ from .fluid import (_CHUNK_SEG_MAX, _INT32_MAX, _bandwidth, _buffer_caps,
                     _gather_law_cfg, _hop_sum, _host_window, _marking,
                     _resolve_law, _safe_ticks, _slot_n, SlotSim,
                     audit_carry_dtypes, default_law_config, resolve_devices)
+from .faults import UnsupportedFeature
 from .laws import Law, LawConfig, _nofma, _pin
 from .types import (MTU, FlowSchedule, PathObs, Record, SimConfig,
                     SlotState, Topology)
@@ -467,20 +468,20 @@ def simulate_slots_sharded(topo: Topology, sched: FlowSchedule,
         # eagerly keeps the engine's bit-identity promise honest instead
         # of silently simulating an unimpaired fabric (the same contract
         # as the feedback-channel rejection below; DESIGN.md section 17).
-        raise NotImplementedError(
-            "impairments are not supported on the sharded slot engine; "
-            "use simulate_slots or the megakernel backend")
+        raise UnsupportedFeature(
+            "impairments are not supported on the sharded slot engine",
+            hint="use simulate_slots or the megakernel backend")
     law = _resolve_law(law_name, "reference")
     if (law.feedback != "receiver" or law.uses_pause or law.uses_incast):
         # The sharded tick hand-codes the receiver-echo feedback clock and
         # does not ring-buffer the pause/incast channels; raising keeps the
         # bit-identity promise honest instead of silently running the wrong
         # feedback model (DESIGN.md section 16).
-        raise NotImplementedError(
+        raise UnsupportedFeature(
             f"law '{law.name}' needs feedback channels the sharded engine "
             f"does not provide (feedback={law.feedback!r}, "
-            f"uses_pause={law.uses_pause}, uses_incast={law.uses_incast}); "
-            f"use simulate_slots or the megakernel backend")
+            f"uses_pause={law.uses_pause}, uses_incast={law.uses_incast})",
+            hint="use simulate_slots or the megakernel backend")
     law_cfg = law_cfg or default_law_config(sched)
     ndev = resolve_devices(devices)
     S = int(slots)

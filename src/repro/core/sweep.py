@@ -46,13 +46,17 @@ all array axes (flows, overrides, schedules) batch inside each program.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
+from .faults import UnsupportedFeature, is_transient
 from .fluid import (default_law_config, pad_flows, simulate_batch,
-                    simulate_slots_batch, stack_flow_schedules, stack_flows,
-                    stack_law_configs)
+                    simulate_slots, simulate_slots_batch,
+                    stack_flow_schedules, stack_flows, stack_law_configs)
+from .guard import first_divergent_field
 from .impair import ImpairmentParams, stack_impairments
 from .shardslots import simulate_slots_sharded
 from .laws import Law
@@ -244,6 +248,25 @@ def tree_index(tree, i):
             jax.tree_util.tree_map(lambda x: x[i], tree))
 
 
+class PointFailure(NamedTuple):
+    """One failed grid point of a fault-tolerant sweep (DESIGN.md s18).
+
+    ``stage`` is ``"run"`` (the point's program raised even after
+    retries, backend fallback and per-point isolation — no real result
+    exists for it) or ``"divergence"`` (the point ran to completion but
+    its final carry holds a non-finite field — the NaN-filled state is
+    kept, flagged by ``error``). ``attempts`` counts executions of the
+    point's group/point program; ``backend`` is the backend that
+    produced the terminal outcome (after any fallback).
+    """
+    index: int
+    law: str
+    backend: str
+    stage: str
+    error: str
+    attempts: int = 1
+
+
 class SweepResult(NamedTuple):
     """Per-program batched results plus the point list to index them.
 
@@ -256,10 +279,19 @@ class SweepResult(NamedTuple):
     knowing the keying. Padded tail flows of a point (beyond its
     scenario's real flow count) stay inert (``fct``/``size`` infinite)
     — see ``fluid.pad_flows``.
+
+    ``failures`` is non-empty only for ``run_sweep(...,
+    fault_tolerant=True)`` grids with failed points: ``state(i)`` raises
+    for a ``"run"``-stage failure (its batch row is an inert NaN filler,
+    not a result) and returns the flagged NaN-carrying state for a
+    ``"divergence"``-stage one. ``fallbacks`` records backend
+    substitutions as ``(group_key, declared_backend, used_backend)``.
     """
     points: Tuple[SweepPoint, ...]
     states: Dict[object, object]
     records: Dict[object, object]
+    failures: Tuple[PointFailure, ...] = ()
+    fallbacks: Tuple[Tuple[object, str, str], ...] = ()
 
     def _key(self, p: SweepPoint):
         if p.law_idx in self.states:
@@ -268,19 +300,90 @@ class SweepResult(NamedTuple):
             return (p.law_idx, p.backend_idx)
         return (p.topo_idx, p.law_idx, p.backend_idx)
 
+    def failure(self, i: int) -> Optional[PointFailure]:
+        """The PointFailure for global point ``i``, or None."""
+        for f in self.failures:
+            if f.index == i:
+                return f
+        return None
+
     def state(self, i: int):
+        f = self.failure(i)
+        if f is not None and f.stage == "run":
+            raise RuntimeError(
+                f"sweep point {i} (law '{f.law}', backend '{f.backend}') "
+                f"failed after {f.attempts} attempt(s): {f.error}")
         p = self.points[i]
         return tree_index(self.states[self._key(p)], p.row)
 
     def record(self, i: int):
+        f = self.failure(i)
+        if f is not None and f.stage == "run":
+            raise RuntimeError(
+                f"sweep point {i} (law '{f.law}', backend '{f.backend}') "
+                f"failed after {f.attempts} attempt(s): {f.error}")
         p = self.points[i]
         return tree_index(self.records[self._key(p)], p.row)
+
+
+# Declared backend degradation chain (DESIGN.md section 18): when a
+# backend raises its documented rejection (``UnsupportedFeature`` —
+# never a plain error), a fault-tolerant sweep retries the group on the
+# next backend in the chain. The slot reference engine is the terminal
+# fallback: it implements every feature the grid axes can express.
+FALLBACK_CHAIN: Dict[str, Tuple[str, ...]] = {
+    "megakernel": ("reference",),
+    "fused": ("reference",),
+}
+
+
+def _run_with_retries(fn, retries: int, backoff_s: float):
+    """``(fn(), attempts)`` with bounded retry-with-backoff on transient
+    failures (``faults.is_transient``); structured errors escape at
+    once."""
+    attempt = 0
+    while True:
+        try:
+            return fn(), attempt + 1
+        except Exception as e:
+            if not is_transient(e) or attempt >= retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
+            attempt += 1
+
+
+def _run_degraded(backend: str, run_fn, retries: int, backoff_s: float):
+    """``(run_fn(be), used_backend, attempts)`` walking the declared
+    fallback chain on ``UnsupportedFeature`` (other exceptions — after
+    retries — escape to the caller's isolation layer)."""
+    attempts = 0
+    last: Optional[BaseException] = None
+    for be in (backend,) + FALLBACK_CHAIN.get(backend, ()):
+        try:
+            res, att = _run_with_retries(lambda: run_fn(be), retries,
+                                         backoff_s)
+            return res, be, attempts + att
+        except UnsupportedFeature as e:
+            last = e
+            attempts += 1
+    raise last
+
+
+def _nan_filler(tmpl):
+    """An inert stand-in row for a failed point: NaN floats, zero ints —
+    visibly not-a-result, stackable next to real rows."""
+    return jax.tree_util.tree_map(
+        lambda x: (jnp.full_like(x, jnp.nan)
+                   if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+                   else jnp.zeros_like(x)), tmpl)
 
 
 def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
               cfg: Optional[SimConfig] = None, record: bool = True,
               devices=None, shard_scenario: bool = False,
-              chunk: Optional[int] = None) -> SweepResult:
+              chunk: Optional[int] = None,
+              fault_tolerant: bool = False, retries: int = 1,
+              backoff_s: float = 0.25) -> SweepResult:
     """Expand ``spec`` and run it: one compiled, batched (and, with
     ``devices``, sharded) program per (topology, law, backend) triple
     covering that triple's whole slab of the grid. ``devices`` is
@@ -301,6 +404,21 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
     pause/incast channels, DESIGN.md section 16) raise here — the
     sharded tick does not carry their channels; sweep them through the
     batched slot path or the megakernel backend axis instead.
+
+    ``fault_tolerant=True`` turns hard failures into per-point
+    bookkeeping (DESIGN.md section 18): each (topology, law, backend)
+    group runs with bounded retry-with-backoff (``retries`` extra
+    attempts, exponential from ``backoff_s``) on transient failures,
+    degrades along the declared ``FALLBACK_CHAIN`` when a backend
+    raises its documented ``UnsupportedFeature`` rejection, and — if
+    the whole group still fails — re-runs its points one at a time so
+    one poisoned point cannot take down its group-mates. Completed
+    rows are then scanned for non-finite carries (``guard``'s post-hoc
+    form). Failed points land in ``SweepResult.failures``; every
+    surviving point's result is bit-identical to a clean run of the
+    same spec (batch lanes are elementwise-independent, so a NaN lane
+    never perturbs its neighbours). Default off: a plain sweep
+    propagates the first exception unchanged.
     """
     if shard_scenario:
         if spec.slots is None:
@@ -328,6 +446,8 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
     points = expand(spec)
     states: Dict[object, object] = {}
     records: Dict[object, object] = {}
+    failures: List[PointFailure] = []
+    fallbacks: List[Tuple[object, str, str]] = []
     for ti, (topo_t, group) in enumerate(zip(topos, spec.flow_groups)):
         nmax = max(int(f.tau.shape[0]) for f in group)
         padded = [pad_flows(f, nmax, topo_t.num_queues) for f in group]
@@ -368,37 +488,172 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
                 impair_params = (stack_impairments(
                     [imp_group[p.impair_idx] for p in rows])
                     if imp_group is not None else None)
-                if spec.slots is not None:
-                    if shard_scenario:
-                        sts, rcs = [], []
-                        for p, lcfg in zip(rows, lcfgs):
-                            st_i, rec_i = simulate_slots_sharded(
+
+                if shard_scenario:
+                    def run_shard_point(p, lcfg, be_):
+                        if be_ != "reference":
+                            # the isolation fallback route for a point
+                            # the sharded engine rejects: the unsharded
+                            # slot engine implements every channel
+                            return simulate_slots(
                                 topo_t, scheds[p.flows_idx], law,
                                 spec.slots, lcfg, cfg, record=record,
-                                devices=devices, chunk=chunk)
-                            sts.append(st_i)
-                            rcs.append(rec_i)
-                        states[key] = jax.tree_util.tree_map(
-                            lambda *xs: jax.numpy.stack(xs), *sts)
-                        records[key] = (jax.tree_util.tree_map(
-                            lambda *xs: jax.numpy.stack(xs), *rcs)
-                            if record else None)
+                                chunk=chunk)
+                        return simulate_slots_sharded(
+                            topo_t, scheds[p.flows_idx], law,
+                            spec.slots, lcfg, cfg, record=record,
+                            devices=devices, chunk=chunk)
+
+                    sts, rcs = [], []
+                    for p, lcfg in zip(rows, lcfgs):
+                        if not fault_tolerant:
+                            st_i, rec_i = run_shard_point(p, lcfg,
+                                                          "reference")
+                        else:
+                            try:
+                                # "sharded" -> unsharded slot engine is
+                                # this path's declared degradation (the
+                                # sharded engine's UnsupportedFeature
+                                # hints exactly that route)
+                                (st_i, rec_i), used, att = _run_degraded(
+                                    "reference",
+                                    lambda b, p=p, lcfg=lcfg:
+                                        run_shard_point(p, lcfg, b),
+                                    retries, backoff_s)
+                                if used != "reference":
+                                    fallbacks.append(
+                                        (key, "sharded", used))
+                            except Exception as e:
+                                failures.append(PointFailure(
+                                    p.index, p.law, "sharded", "run",
+                                    repr(e), retries + 1))
+                                st_i = rec_i = None
+                        sts.append(st_i)
+                        rcs.append(rec_i)
+                    tmpl = next((s for s in sts if s is not None), None)
+                    if tmpl is None:
+                        states[key] = records[key] = None
                         continue
-                    sb = stack_flow_schedules(
-                        [scheds[p.flows_idx] for p in rows],
-                        topo_t.num_queues)
-                    states[key], records[key] = simulate_slots_batch(
-                        topo_t, sb, law, spec.slots,
-                        stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
-                        bw_params=bw_params, record=record,
-                        backend=be, devices=devices,
-                        impair_params=impair_params)
-                else:
+                    fill_s = _nan_filler(tmpl)
+                    rtmpl = next((r for r in rcs if r is not None), None)
+                    fill_r = (_nan_filler(rtmpl) if rtmpl is not None
+                              else None)
+                    sts = [fill_s if s is None else s for s in sts]
+                    rcs = [fill_r if r is None else r for r in rcs]
+                    states[key] = jax.tree_util.tree_map(
+                        lambda *xs: jax.numpy.stack(xs), *sts)
+                    records[key] = (jax.tree_util.tree_map(
+                        lambda *xs: jax.numpy.stack(xs), *rcs)
+                        if record else None)
+                    continue
+
+                def run_group(be_):
+                    if spec.slots is not None:
+                        sb = stack_flow_schedules(
+                            [scheds[p.flows_idx] for p in rows],
+                            topo_t.num_queues)
+                        return simulate_slots_batch(
+                            topo_t, sb, law, spec.slots,
+                            stack_law_configs(lcfgs), cfg, bw_fn=bw_fn,
+                            bw_params=bw_params, record=record,
+                            backend=be_, devices=devices,
+                            impair_params=impair_params)
                     fb = stack_flows([padded[p.flows_idx] for p in rows],
                                      topo_t.num_queues)
-                    states[key], records[key] = simulate_batch(
+                    return simulate_batch(
                         topo_t, fb, law, stack_law_configs(lcfgs), cfg,
                         bw_fn=bw_fn, bw_params=bw_params, record=record,
-                        backend=be, devices=devices,
+                        backend=be_, devices=devices,
                         impair_params=impair_params)
-    return SweepResult(tuple(points), states, records)
+
+                def run_point(p, lcfg, be_):
+                    """The group program at batch width 1 — the
+                    isolation route when the whole group fails."""
+                    bw1 = (stack_schedules(
+                        [spec.schedules[p.sched_idx]])
+                        if spec.schedules is not None else None)
+                    imp1 = (stack_impairments(
+                        [imp_group[p.impair_idx]])
+                        if imp_group is not None else None)
+                    if spec.slots is not None:
+                        sb1 = stack_flow_schedules(
+                            [scheds[p.flows_idx]], topo_t.num_queues)
+                        st, rc = simulate_slots_batch(
+                            topo_t, sb1, law, spec.slots,
+                            stack_law_configs([lcfg]), cfg, bw_fn=bw_fn,
+                            bw_params=bw1, record=record, backend=be_,
+                            devices=None, impair_params=imp1)
+                    else:
+                        fb1 = stack_flows([padded[p.flows_idx]],
+                                          topo_t.num_queues)
+                        st, rc = simulate_batch(
+                            topo_t, fb1, law, stack_law_configs([lcfg]),
+                            cfg, bw_fn=bw_fn, bw_params=bw1,
+                            record=record, backend=be_, devices=None,
+                            impair_params=imp1)
+                    return (tree_index(st, 0),
+                            tree_index(rc, 0) if record else None)
+
+                if not fault_tolerant:
+                    states[key], records[key] = run_group(be)
+                    continue
+
+                used_be = be
+                try:
+                    (states[key], records[key]), used_be, _ = \
+                        _run_degraded(be, run_group, retries, backoff_s)
+                    if used_be != be:
+                        fallbacks.append((key, be, used_be))
+                except Exception:
+                    # the whole group failed — isolate per point so one
+                    # bad point cannot take down its group-mates
+                    sts, rcs = [], []
+                    for p, lcfg in zip(rows, lcfgs):
+                        try:
+                            (st_i, rec_i), used_i, att = _run_degraded(
+                                be,
+                                lambda b, p=p, lcfg=lcfg:
+                                    run_point(p, lcfg, b),
+                                retries, backoff_s)
+                            if used_i != be:
+                                fallbacks.append((key, be, used_i))
+                        except Exception as e:
+                            failures.append(PointFailure(
+                                p.index, p.law, be, "run", repr(e),
+                                retries + 1))
+                            st_i = rec_i = None
+                        sts.append(st_i)
+                        rcs.append(rec_i)
+                    tmpl = next((s for s in sts if s is not None), None)
+                    if tmpl is None:
+                        states[key] = records[key] = None
+                        continue
+                    fill_s = _nan_filler(tmpl)
+                    rtmpl = next((r for r in rcs if r is not None), None)
+                    fill_r = (_nan_filler(rtmpl) if rtmpl is not None
+                              else None)
+                    sts = [fill_s if s is None else s for s in sts]
+                    rcs = [fill_r if r is None else r for r in rcs]
+                    states[key] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *sts)
+                    records[key] = (jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *rcs)
+                        if record else None)
+
+                # post-hoc divergence scan: a poisoned point runs to
+                # completion inside the batched program (NaN does not
+                # raise under jit) — flag its row instead of letting a
+                # NaN-filled state masquerade as a result
+                failed_idx = {f.index for f in failures}
+                for p in rows:
+                    if p.index in failed_idx:
+                        continue
+                    field = first_divergent_field(
+                        tree_index(states[key], p.row))
+                    if field:
+                        failures.append(PointFailure(
+                            p.index, p.law, used_be, "divergence",
+                            f"non-finite field '{field}' in final "
+                            f"carry", 1))
+    return SweepResult(tuple(points), states, records,
+                       tuple(failures), tuple(fallbacks))

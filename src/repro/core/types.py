@@ -212,6 +212,26 @@ class SlotState(NamedTuple):
     hist_inc: Optional[jnp.ndarray] = None    # [D, Q+1] sender counts
 
 
+class CheckpointSpec(NamedTuple):
+    """Chunk-boundary checkpointing policy (DESIGN.md section 18).
+
+    ``simulate_slots(..., checkpoint=CheckpointSpec(path))`` snapshots
+    the full scan carry (pool vectors, queues, telemetry rings, law
+    state, megakernel CSR/pending buffers) plus the recorded trace so
+    far at chunk-segment boundaries, each snapshot one atomically
+    renamed ``ckpt-<tick>.npz``; ``fluid.resume_slots`` continues from
+    the newest snapshot bit-for-bit identical to the uninterrupted run.
+
+    ``every`` is the cadence in simulated ticks — the driver shortens
+    segments so boundaries land exactly on multiples (0 = snapshot at
+    every segment boundary). ``keep`` bounds how many snapshots stay on
+    disk (oldest are garbage-collected after each successful write).
+    """
+    path: str
+    every: int = 0
+    keep: int = 2
+
+
 class Record(NamedTuple):
     """Optional per-step recordings (subsampled by ``record_every``)."""
     t: jnp.ndarray                  # seconds

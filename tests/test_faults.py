@@ -1,0 +1,244 @@
+"""Fault taxonomy, crash injection and graceful sweep degradation
+(DESIGN.md section 18).
+
+Three layers under test: the exception taxonomy (every engine
+feature-rejection seam raises ``UnsupportedFeature`` with a remediation
+hint; ``is_transient`` classifies what retry can fix), the divergence
+guards (a poisoned law yields a structured ``DivergenceError`` naming
+law/tick/field — never silent NaN output when guarded), and
+``run_sweep(fault_tolerant=True)``'s degradation ladder: bounded
+retry-with-backoff for transient failures, declared backend fallback on
+``UnsupportedFeature``, and per-point isolation for everything else.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, US, DivergenceError, FaultSpec,
+                        InjectedCrash, SimConfig, SweepSpec,
+                        TransientFault, UnsupportedFeature, crash_at_chunk,
+                        crash_at_tick, default_law_config, fat_tree,
+                        first_divergent_field, get_law, is_transient,
+                        make_flows_single, make_schedule, no_impairment,
+                        poison_law, poisson_websearch, run_sweep,
+                        schedule_as_flows, simulate, simulate_slots,
+                        simulate_slots_sharded, single_bottleneck)
+
+B = 100 * GBPS
+DT = 1e-6
+
+
+def _scenario(n=14, steps=1500, seed=3, spread=0.8e-3):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(n, tau=20 * US, nic=B,
+                              sizes=rng.uniform(6e4, 2e5, n),
+                              starts=rng.uniform(0.0, spread, n),
+                              sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, flows, cfg
+
+
+def _fabric_anchor():
+    ft = fat_tree(4)
+    flows = poisson_websearch(ft, 0.25, 0.002, DT, seed=3)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=DT, steps=3000, hist=512, update_period=2e-6)
+    return ft, sched, cfg
+
+
+# -------------------------------------------------------------------------
+# UnsupportedFeature: every declared rejection seam, with hints
+# -------------------------------------------------------------------------
+
+def test_fused_impair_seam_is_unsupported_feature_with_hint():
+    ft, sched, cfg = _fabric_anchor()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    imp = no_impairment(ft.topology())
+    with pytest.raises(UnsupportedFeature, match="fused") as ei:
+        simulate(ft.topology(), schedule_as_flows(sched), "powertcp", lcfg,
+                 cfg, backend="fused", impair=imp)
+    assert ei.value.hint           # names the supported route
+    assert isinstance(ei.value, NotImplementedError)   # legacy contract
+
+
+def test_sharded_impair_seam_is_unsupported_feature_with_hint():
+    ft, sched, cfg = _fabric_anchor()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    imp = no_impairment(ft.topology())
+    with pytest.raises(UnsupportedFeature, match="sharded") as ei:
+        simulate_slots_sharded(ft.topology(), sched, "powertcp", 16, lcfg,
+                               cfg, impair=imp)
+    assert "megakernel" in ei.value.hint or "simulate_slots" in ei.value.hint
+
+
+def test_sharded_feedback_seam_is_unsupported_feature_with_hint():
+    ft, sched, cfg = _fabric_anchor()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    with pytest.raises(UnsupportedFeature, match="feedback") as ei:
+        simulate_slots_sharded(ft.topology(), sched, "fncc", 16, lcfg, cfg)
+    assert ei.value.hint
+
+
+def test_fused_checkpoint_seam_is_unsupported_feature():
+    """Checkpoint/fault/guard execution rides the chunk-streamed driver,
+    which the fused backend does not support — the rejection is eager."""
+    topo, flows, cfg = _scenario()
+    sched = make_schedule(flows)
+    from repro.core import CheckpointSpec
+    with pytest.raises(UnsupportedFeature):
+        simulate_slots(topo, sched, "powertcp", 8, cfg=cfg,
+                       backend="fused",
+                       checkpoint=CheckpointSpec(path="/tmp/x", every=100))
+
+
+# -------------------------------------------------------------------------
+# crash injectors and the transient predicate
+# -------------------------------------------------------------------------
+
+def test_crash_injector_validation():
+    assert crash_at_tick(5) == FaultSpec(crash_tick=5)
+    assert crash_at_chunk(3) == FaultSpec(crash_segment=3)
+    with pytest.raises(ValueError):
+        crash_at_tick(0)
+    with pytest.raises(ValueError):
+        crash_at_chunk(-1)
+
+
+def test_injected_crash_carries_tick_and_segment(tmp_path):
+    topo, flows, cfg = _scenario(steps=1000)
+    sched = make_schedule(flows)
+    with pytest.raises(InjectedCrash) as ei:
+        simulate_slots(topo, sched, "powertcp", 8, cfg=cfg, chunk=8,
+                       faults=crash_at_tick(600))
+    assert ei.value.tick == 600
+    assert ei.value.segment >= 1
+
+
+def test_is_transient_classification():
+    assert is_transient(TransientFault("allocator pressure"))
+    assert is_transient(RuntimeError("RESOURCE_EXHAUSTED"))
+    assert not is_transient(UnsupportedFeature("nope"))
+    assert not is_transient(InjectedCrash(5, 1))
+    assert not is_transient(DivergenceError("l", 1, "w"))
+    assert not is_transient(ValueError("shape"))
+    assert not is_transient(TypeError("dtype"))
+
+
+# -------------------------------------------------------------------------
+# divergence guards: structured error, never silent NaN when guarded
+# -------------------------------------------------------------------------
+
+def test_poisoned_law_raises_structured_divergence_error():
+    topo, flows, cfg = _scenario(n=18, steps=2500, seed=2, spread=1.2e-3)
+    sched = make_schedule(flows)
+    bad = poison_law("powertcp", at_t=0.5e-3)
+    assert bad.name == "poisoned_powertcp"
+    with pytest.raises(DivergenceError) as ei:
+        simulate_slots(topo, sched, bad, 8, cfg=cfg, chunk=8, guard=True)
+    e = ei.value
+    assert e.law == "poisoned_powertcp"
+    assert e.tick >= int(0.5e-3 / 1e-6)      # at or after the poison time
+    assert e.field                            # names the first bad leaf
+    assert e.field in str(e) and "poisoned_powertcp" in str(e)
+
+
+def test_unguarded_poison_passes_nan_through():
+    """Guards are off the hot path by default: without ``guard=True``
+    the NaN reaches the output (the documented trade-off — and exactly
+    what ``first_divergent_field`` flags post-hoc)."""
+    topo, flows, cfg = _scenario(n=18, steps=2500, seed=2, spread=1.2e-3)
+    sched = make_schedule(flows)
+    bad = poison_law("powertcp", at_t=0.5e-3)
+    st, _ = simulate_slots(topo, sched, bad, 8, cfg=cfg, chunk=8)
+    assert first_divergent_field(st) != ""
+
+
+def test_clean_law_never_trips_guard():
+    topo, flows, cfg = _scenario(steps=1000)
+    sched = make_schedule(flows)
+    st, _ = simulate_slots(topo, sched, "powertcp", 8, cfg=cfg, chunk=8,
+                           guard=True)
+    assert first_divergent_field(st) == ""
+
+
+# -------------------------------------------------------------------------
+# run_sweep degradation ladder
+# -------------------------------------------------------------------------
+
+def _flaky_law(fail_times, exc=TransientFault):
+    """A law whose init raises ``exc`` for the first ``fail_times``
+    calls (host-side, at trace time) then behaves normally."""
+    calls = {"n": 0}
+    inner = get_law("powertcp", "reference")
+
+    def init(n, lcfg):
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise exc("injected")
+        return inner.init(n, lcfg)
+    return inner._replace(name="flaky_powertcp", init=init), calls
+
+
+def test_sweep_retries_transient_failures():
+    topo, flows, cfg = _scenario(n=10, steps=1000, spread=0.5e-3)
+    law, calls = _flaky_law(1)
+    spec = SweepSpec(laws=(law,), flows=(flows,), law_cfg_overrides=({},),
+                     expected_flows=8.0, slots=8)
+    res = run_sweep(spec, topo, cfg, fault_tolerant=True, retries=2,
+                    backoff_s=0.01)
+    assert not res.failures
+    assert calls["n"] >= 2             # first attempt failed, retry ran
+    assert np.isfinite(np.asarray(res.state(0).fct)).all()
+
+
+def test_sweep_records_persistent_failure_and_isolates_it():
+    """A point that fails every attempt (non-transient) lands in
+    ``failures`` with its error; reading its state raises, the healthy
+    point is untouched."""
+    topo, flows, cfg = _scenario(n=10, steps=1000, spread=0.5e-3)
+    law, _ = _flaky_law(10**9, exc=ValueError)
+    spec = SweepSpec(laws=("powertcp", law), flows=(flows,),
+                     law_cfg_overrides=({},), expected_flows=8.0, slots=8)
+    res = run_sweep(spec, topo, cfg, fault_tolerant=True, retries=1,
+                    backoff_s=0.0)
+    assert [f.index for f in res.failures] == [1]
+    assert res.failures[0].stage == "run"
+    assert "ValueError" in res.failures[0].error
+    with pytest.raises(RuntimeError):
+        res.state(1)
+    assert np.isfinite(np.asarray(res.state(0).fct)).all()
+
+
+def test_sweep_falls_back_from_fused_to_reference():
+    """The declared chain: a backend raising ``UnsupportedFeature``
+    degrades to the next entry; the substitution is recorded, the
+    results come from the fallback backend, and strict mode (the
+    default) still raises."""
+    topo, flows, cfg = _scenario(n=10, steps=1000, spread=0.5e-3)
+    imp = no_impairment(topo)
+    spec = SweepSpec(laws=("powertcp",), flows=(flows,),
+                     law_cfg_overrides=({},), expected_flows=8.0, slots=8,
+                     backends=("fused",), impairments=(imp,))
+    res = run_sweep(spec, topo, cfg, fault_tolerant=True)
+    assert not res.failures
+    assert any(used == "reference" for _, _, used in res.fallbacks)
+    assert np.isfinite(np.asarray(res.state(0).fct)).all()
+    with pytest.raises(UnsupportedFeature):
+        run_sweep(spec, topo, cfg)
+
+
+def test_legacy_strict_mode_is_unchanged():
+    """Without ``fault_tolerant`` the sweep is the exact legacy batched
+    path — same grouped programs, bit-identical results to a
+    fault-tolerant run with nothing failing."""
+    topo, flows, cfg = _scenario(n=10, steps=1000, spread=0.5e-3)
+    spec = SweepSpec(laws=("powertcp", "hpcc"), flows=(flows,),
+                     law_cfg_overrides=({},), expected_flows=8.0, slots=8)
+    a = run_sweep(spec, topo, cfg)
+    b = run_sweep(spec, topo, cfg, fault_tolerant=True)
+    assert not b.failures and not b.fallbacks
+    for i in range(len(a.points)):
+        assert np.array_equal(np.asarray(a.state(i).fct),
+                              np.asarray(b.state(i).fct), equal_nan=True)
+        assert np.array_equal(np.asarray(a.state(i).w),
+                              np.asarray(b.state(i).w))

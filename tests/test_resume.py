@@ -1,0 +1,316 @@
+"""Chunk-boundary checkpointing and bit-exact resume (DESIGN.md s18).
+
+The contract under test: ``simulate_slots(..., checkpoint=...)``
+snapshots the full scan carry at chunk boundaries, an injected crash
+kills the process after its last durable write, and ``resume_slots``
+continues the trajectory BIT-FOR-BIT — queue trace, FCTs, windows,
+per-slot rates, ring histories and cursor all identical to the
+uninterrupted run. The argument rests on the segmentation-invariance
+property (test_chunk_stream.py): resume only changes how the remaining
+ticks are cut into segments, which is already proven not to move a
+single ulp.
+
+Round-trip identity of the serialized carry (including NaN patterns and
+f64-leaf rejection via ``audit_carry_dtypes``) is covered below;
+``hypothesis`` fuzzing rides along when the optional package is
+installed (the container image does not ship it).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (GBPS, LAWS, US, CheckpointSpec, CircuitSchedule,
+                        InjectedCrash, SimConfig, SweepSpec,
+                        checkpoint_ticks, crash_at_chunk, crash_at_tick,
+                        default_law_config, fat_tree, latest_checkpoint,
+                        load_checkpoint, make_flows_single, make_schedule,
+                        poison_law, poisson_websearch, read_meta,
+                        resume_slots, run_sweep, save_checkpoint,
+                        schedule_as_flows, simulate_slots,
+                        single_bottleneck)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+B = 100 * GBPS
+DT = 1e-6
+S = 8
+N = 18
+
+
+def _scenario(steps=2500, seed=2):
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(seed)
+    flows = make_flows_single(N, tau=20 * US, nic=B,
+                              sizes=rng.uniform(6e4, 3e5, N),
+                              starts=rng.uniform(0.0, 1.2e-3, N),
+                              sim_dt=1e-6)
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=1e-6, steps=steps, hist=256)
+    return topo, sched, cfg
+
+
+def _anchor_law_cfg(sched, **kw):
+    kw.setdefault("sched", CircuitSchedule(day=50 * US, night=10 * US,
+                                           matchings=4).params())
+    return default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              **kw)
+
+
+def _assert_bitmatch(resumed, single):
+    st_c, rec_c = resumed
+    st_0, rec_0 = single
+    assert np.array_equal(np.asarray(rec_c.q), np.asarray(rec_0.q))
+    assert np.array_equal(np.asarray(st_c.fct), np.asarray(st_0.fct),
+                          equal_nan=True)
+    assert np.array_equal(np.asarray(st_c.w), np.asarray(st_0.w))
+    assert np.array_equal(np.asarray(rec_c.lam_f), np.asarray(rec_0.lam_f))
+    assert np.array_equal(np.asarray(rec_c.w_sum), np.asarray(rec_0.w_sum))
+    assert np.array_equal(np.asarray(rec_c.n_active),
+                          np.asarray(rec_0.n_active))
+    assert np.array_equal(np.asarray(st_c.hist_q), np.asarray(st_0.hist_q))
+    assert np.array_equal(np.asarray(st_c.hist_w), np.asarray(st_0.hist_w))
+    assert int(st_c.cursor) == int(st_0.cursor)
+
+
+def _crash_resume(topo, sched, cfg, law, slots, lcfg, path, backend,
+                  chunk, every, fault):
+    """Inject -> crash -> resume; returns (resumed, uninterrupted)."""
+    ck = CheckpointSpec(path=path, every=every, keep=2)
+    single = simulate_slots(topo, sched, law, slots, lcfg, cfg,
+                            backend=backend, chunk=chunk)
+    with pytest.raises(InjectedCrash):
+        simulate_slots(topo, sched, law, slots, lcfg, cfg, backend=backend,
+                       chunk=chunk, checkpoint=ck, faults=fault)
+    assert latest_checkpoint(path) is not None
+    resumed = resume_slots(topo, sched, law, slots, ck, law_cfg=lcfg,
+                           cfg=cfg, backend=backend, chunk=chunk)
+    return resumed, single
+
+
+# -------------------------------------------------------------------------
+# the k=4 fat-tree anchor: every registered law crash-resumes bit-exactly
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_anchor_crash_resume_bitmatch(law, tmp_path):
+    """Web-search on the k=4 fat-tree: for EVERY law in the live
+    registry, a crash-injected run resumed from its last chunk-boundary
+    snapshot reproduces the uninterrupted trajectory bit-for-bit (a law
+    registered tomorrow is anchored with zero test edits)."""
+    ft = fat_tree(4)
+    topo = ft.topology()
+    flows = poisson_websearch(ft, 0.25, 0.003, DT, seed=3)
+    n = int(flows.tau.shape[0])
+    sched = make_schedule(flows)
+    cfg = SimConfig(dt=DT, steps=3000, hist=512, update_period=2e-6)
+    lcfg = _anchor_law_cfg(sched)
+    resumed, single = _crash_resume(
+        topo, sched, cfg, law, n + 4, lcfg, str(tmp_path / law),
+        backend="reference", chunk=256, every=1100,
+        fault=crash_at_tick(1800))
+    _assert_bitmatch(resumed, single)
+
+
+def test_megakernel_crash_resume_bitmatch(tmp_path):
+    """The whole-tick fused backend honours the same recovery contract
+    (its MegaCarry is plain carried data; DESIGN.md section 13/18)."""
+    topo, sched, cfg = _scenario()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    resumed, single = _crash_resume(
+        topo, sched, cfg, "powertcp", S, lcfg, str(tmp_path),
+        backend="megakernel", chunk=8, every=600,
+        fault=crash_at_chunk(6))
+    _assert_bitmatch(resumed, single)
+
+
+def test_crash_on_checkpoint_boundary_still_resumes(tmp_path):
+    """Worst recoverable case: the crash tick IS a checkpoint boundary —
+    the snapshot must be written BEFORE the crash fires (process dies
+    after its last durable write), so resume replays only the tail."""
+    topo, sched, cfg = _scenario()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    ck = CheckpointSpec(path=str(tmp_path), every=900, keep=2)
+    single = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8)
+    with pytest.raises(InjectedCrash) as ei:
+        simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8,
+                       checkpoint=ck, faults=crash_at_tick(900))
+    assert ei.value.tick == 900
+    assert latest_checkpoint(str(tmp_path)) == 900   # durable pre-crash
+    resumed = resume_slots(topo, sched, "powertcp", S, ck, law_cfg=lcfg,
+                           cfg=cfg, chunk=8)
+    _assert_bitmatch(resumed, single)
+
+
+# -------------------------------------------------------------------------
+# cadence, GC, and structured failure modes
+# -------------------------------------------------------------------------
+
+def test_checkpoint_cadence_and_gc(tmp_path):
+    """Segments land EXACTLY on cadence multiples (the driver clamps the
+    pow2-floored segment length), the final tick is always snapshotted,
+    and GC keeps only the newest ``keep`` snapshots."""
+    topo, sched, cfg = _scenario(steps=2500)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    ck = CheckpointSpec(path=str(tmp_path), every=700, keep=2)
+    simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8,
+                   checkpoint=ck)
+    assert checkpoint_ticks(str(tmp_path)) == [2100, 2500]
+    meta = read_meta(str(tmp_path), 2500)
+    assert meta["tick"] == 2500 and meta["law"] == "powertcp"
+    assert meta["steps"] == 2500 and meta["slots"] == S
+    assert not os.listdir(str(tmp_path))[0].startswith(".tmp")
+
+
+def test_resume_without_snapshot_raises(tmp_path):
+    topo, sched, cfg = _scenario(steps=500)
+    ck = CheckpointSpec(path=str(tmp_path / "empty"), every=100)
+    with pytest.raises(FileNotFoundError):
+        resume_slots(topo, sched, "powertcp", S, ck, cfg=cfg, chunk=8)
+
+
+def test_resume_scenario_mismatch_rejected(tmp_path):
+    """A snapshot taken under one scenario (law/steps/slots/flows) must
+    refuse to seed a different one — silent cross-scenario resume would
+    produce garbage with no diagnostic."""
+    topo, sched, cfg = _scenario(steps=800)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    ck = CheckpointSpec(path=str(tmp_path), every=300)
+    simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8,
+                   checkpoint=ck)
+    with pytest.raises(ValueError, match="mismatch"):
+        resume_slots(topo, sched, "swift", S, ck, cfg=cfg, chunk=8)
+
+
+def test_guard_is_bit_neutral_on_clean_runs(tmp_path):
+    """Divergence guards run at chunk boundaries on the host — enabling
+    them must not move a single ulp of a healthy trajectory."""
+    topo, sched, cfg = _scenario()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    plain = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg, chunk=8)
+    guarded = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg,
+                             chunk=8, guard=True)
+    _assert_bitmatch(guarded, plain)
+
+
+# -------------------------------------------------------------------------
+# sweep isolation: one poisoned point cannot take down the grid
+# -------------------------------------------------------------------------
+
+def test_sweep_poisoned_point_isolated_and_clean_points_bitmatch():
+    topo = single_bottleneck(bandwidth=B, buffer=16e6)
+    rng = np.random.default_rng(3)
+    fl = make_flows_single(14, tau=20 * US, nic=B,
+                           sizes=rng.uniform(6e4, 2e5, 14),
+                           starts=rng.uniform(0.0, 0.8e-3, 14), sim_dt=1e-6)
+    cfg = SimConfig(dt=1e-6, steps=1500, hist=256)
+    bad = poison_law("powertcp", at_t=0.3e-3)
+    spec = SweepSpec(laws=("powertcp", bad, "hpcc"), flows=(fl,),
+                     law_cfg_overrides=({},), expected_flows=8.0, slots=8)
+    res = run_sweep(spec, topo, cfg, fault_tolerant=True)
+    assert [(f.index, f.stage) for f in res.failures] == [(1, "divergence")]
+    assert res.failure(1) is not None
+
+    clean = run_sweep(
+        SweepSpec(laws=("powertcp", "hpcc"), flows=(fl,),
+                  law_cfg_overrides=({},), expected_flows=8.0, slots=8),
+        topo, cfg)
+    for i, j in ((0, 0), (2, 1)):
+        a, b = res.state(i), clean.state(j)
+        assert np.array_equal(np.asarray(a.fct), np.asarray(b.fct),
+                              equal_nan=True)
+        assert np.array_equal(np.asarray(a.w), np.asarray(b.w))
+        assert np.array_equal(np.asarray(a.q), np.asarray(b.q))
+
+
+# -------------------------------------------------------------------------
+# serialize -> restore identity of the carry pytree
+# -------------------------------------------------------------------------
+
+def _final_carry(seed=2):
+    """A realistic carry: the final SlotState of a short run (occupied
+    slots, wrapped rings, NaN FCT sentinels for unfinished flows)."""
+    topo, sched, cfg = _scenario(steps=900, seed=seed)
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
+    st, _ = simulate_slots(topo, sched, "powertcp", S, lcfg, cfg)
+    return st
+
+
+def _roundtrip_identical(carry, tmpdir, tick=123, audit=True):
+    ck = CheckpointSpec(path=str(tmpdir), every=0)
+    save_checkpoint(ck, tick, carry)
+    meta, back, _ = load_checkpoint(str(tmpdir), tick, carry,
+                                    to_device=False, audit=audit)
+    assert meta["tick"] == tick
+    import jax
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(
+                carry, is_leaf=lambda x: x is None)[0],
+            jax.tree_util.tree_flatten_with_path(
+                back, is_leaf=lambda x: x is None)[0]):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        if a is None:
+            assert b is None
+            continue
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(a, b, equal_nan=(a.dtype.kind == "f"))
+
+
+def test_slot_state_roundtrip_identity(tmp_path):
+    _roundtrip_identical(_final_carry(), tmp_path)
+
+
+def test_law_config_roundtrip_identity(tmp_path):
+    """LawConfig pytrees round-trip exactly too (scalar python-float
+    leaves land as f64 in the npz — legal for configs, so the carry
+    dtype audit is off here; it stays on for engine carries)."""
+    topo, sched, cfg = _scenario(steps=100)
+    lcfg = _anchor_law_cfg(sched)
+    _roundtrip_identical(lcfg, tmp_path, audit=False)
+
+
+def test_f64_leaf_rejected_on_load(tmp_path):
+    """A snapshot carrying a float64 leaf must be refused at load time —
+    the same ``audit_carry_dtypes`` contract the engines enforce at init
+    (a silent f64 restore would double the carry and break bitmatch)."""
+    carry = _final_carry()
+    bad = carry._replace(w=np.asarray(carry.w, np.float64))
+    ck = CheckpointSpec(path=str(tmp_path), every=0)
+    save_checkpoint(ck, 7, bad)
+    with pytest.raises(TypeError, match="float32"):
+        load_checkpoint(str(tmp_path), 7, carry)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=6,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=hst.integers(min_value=0, max_value=2**16),
+           tick=hst.integers(min_value=0, max_value=2**20))
+    def test_fuzzed_carry_roundtrip_identity(tmp_path_factory, seed, tick):
+        """Arbitrary NaN/inf patterns injected into a real carry survive
+        serialize -> restore bit-for-bit."""
+        import jax
+        rng = np.random.default_rng(seed)
+        carry = _final_carry()
+
+        def scramble(leaf):
+            if leaf is None or np.asarray(leaf).dtype.kind != "f":
+                return leaf
+            a = np.array(np.asarray(leaf), copy=True)
+            flat = a.reshape(-1)
+            if flat.size:
+                idx = rng.integers(0, flat.size, size=max(1, flat.size // 7))
+                flat[idx] = rng.choice(
+                    np.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0],
+                               np.float32), size=idx.size)
+            return a
+        carry = jax.tree_util.tree_map(scramble, carry,
+                                       is_leaf=lambda x: x is None)
+        _roundtrip_identical(carry,
+                             tmp_path_factory.mktemp("fuzz"), tick=tick)

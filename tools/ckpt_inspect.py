@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Inspect chunk-boundary checkpoints (core/ckpt.py, DESIGN.md s18).
+
+  PYTHONPATH=src python tools/ckpt_inspect.py <dir> [--tick N]
+
+Prints the snapshot inventory of a checkpoint directory, and for one
+snapshot (the newest by default) the scenario metadata plus every stored
+leaf with dtype, shape and byte size — enough to sanity-check what a
+crashed run left behind before resuming it, without constructing the
+scenario (inspection reads the raw npz; only ``resume_slots`` needs the
+carry template).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.ckpt import checkpoint_ticks, read_meta  # noqa: E402
+
+
+def inspect(path: str, tick: int | None = None) -> int:
+    ticks = checkpoint_ticks(path)
+    if not ticks:
+        print(f"no ckpt-*.npz snapshots in {path}")
+        return 1
+    print(f"{path}: {len(ticks)} snapshot(s) at ticks {ticks}")
+    tick = ticks[-1] if tick is None else tick
+    if tick not in ticks:
+        print(f"no snapshot at tick {tick} (have {ticks})")
+        return 1
+
+    meta = read_meta(path, tick)
+    print(f"\nckpt-{tick}.npz meta:")
+    print(json.dumps(meta, indent=2, sort_keys=True))
+
+    total = 0
+    rows = []
+    with np.load(os.path.join(path, f"ckpt-{tick}.npz")) as z:
+        for key in sorted(z.files):
+            if key == "__meta__":
+                continue
+            a = z[key]
+            total += a.nbytes
+            rows.append((key, str(a.dtype), str(a.shape), a.nbytes))
+    w = max(len(r[0]) for r in rows)
+    print(f"\n{'leaf':{w}s}  {'dtype':8s} {'shape':18s} bytes")
+    for key, dt, shape, nbytes in rows:
+        print(f"{key:{w}s}  {dt:8s} {shape:18s} {nbytes}")
+    print(f"\ntotal: {total} bytes ({total / 1e6:.2f} MB) "
+          f"in {len(rows)} leaves")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="checkpoint directory (CheckpointSpec.path)")
+    ap.add_argument("--tick", type=int, default=None,
+                    help="snapshot tick (default: newest)")
+    a = ap.parse_args()
+    return inspect(a.path, a.tick)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
