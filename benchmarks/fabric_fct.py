@@ -26,13 +26,16 @@ import numpy as np
 
 import jax
 
-from repro.core import (CircuitSchedule, SimConfig, US, default_law_config,
-                        ecmp_hash, fat_tree, incast_burst, make_schedule,
-                        poisson_websearch, schedule_as_flows, simulate,
+from repro.core import (CircuitSchedule, LinkProcess, SimConfig, US,
+                        comm_census, default_law_config, ecmp_hash,
+                        fabric_impairments, fat_tree, incast_burst,
+                        make_schedule, netem, poisson_websearch,
+                        schedule_as_flows, shard_geometry, simulate,
                         simulate_slots, simulate_slots_sharded,
                         suggest_slots)
 from repro.core import LAWS as LAW_REGISTRY
-from repro.core.fabric import leaf_spine_fabric, compile_routes
+from repro.core.fabric import (AGG, CORE, HOST, TOR, leaf_spine_fabric,
+                               compile_routes)
 from repro.core.fluid import resolve_devices
 from repro.core.network import LeafSpine
 from .common import emit, fct_stats, run_law_slots, table
@@ -201,13 +204,17 @@ def fabric16_scenario(load: float = 0.6, duration: float = 0.085,
     return ft, make_schedule(fl)
 
 
-def _fabric16_anchor_bitmatch(devices) -> bool:
+def _fabric16_anchor_bitmatch(devices):
     """Sharded == reference slot engine, bit for bit, for EVERY law in
-    the registry at the 256-host leaf-spine anchor (the fig6 paper
+    the registry — feedback-channel laws (pause, incast, hop-local)
+    included — at the 256-host leaf-spine anchor (the fig6 paper
     fabric), plus a megakernel spot-check. Queue trace, FCT vector,
     final windows and per-slot rate trajectories all compared with
     ``array_equal`` — any reordered reduction or FMA contraction in the
-    sharded tick would trip this."""
+    sharded tick would trip this. A second pass reruns a feedback-
+    channel-covering law subset under the mixed impairment regime
+    (oscillating edge capacity + stochastic loss + jitter) and returns
+    its verdict separately: (clean_ok, impaired_ok)."""
     ls = compile_routes(leaf_spine_fabric(racks=8, hosts_per_rack=32,
                                           spines=2))
     sched = make_schedule(poisson_websearch(ls, 0.3, 0.0012, DT, seed=11))
@@ -217,24 +224,26 @@ def _fabric16_anchor_bitmatch(devices) -> bool:
     sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=4).params()
     lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0,
                               sched=sp)
-    ok = True
-    for law in LAW_REGISTRY:
-        spec = LAW_REGISTRY[law]
-        if (spec.feedback != "receiver" or spec.uses_pause
-                or spec.uses_incast):
-            # feedback-channel laws raise in the sharded engine by design;
-            # their three-engine bitmatch gate lives in feedback_fct.py
-            continue
-        st_r, rec_r = simulate_slots(topo, sched, law, S, lcfg, cfg)
+    imp = fabric_impairments(
+        ls, rules={(TOR, HOST): LinkProcess(kind="oscillate", bw_lo=2.5e9,
+                                            period=200e-6, seed=5)},
+        default=netem(loss=0.01, jitter=1e-6, seed=9))
+
+    def _same(law, **kw):
+        st_r, rec_r = simulate_slots(topo, sched, law, S, lcfg, cfg, **kw)
         st_d, rec_d = simulate_slots_sharded(topo, sched, law, S, lcfg,
-                                             cfg, devices=devices)
-        same = bool(
+                                             cfg, devices=devices, **kw)
+        return bool(
             np.array_equal(np.asarray(rec_d.q), np.asarray(rec_r.q))
             and np.array_equal(np.asarray(st_d.fct), np.asarray(st_r.fct),
                                equal_nan=True)
             and np.array_equal(np.asarray(st_d.w), np.asarray(st_r.w))
             and np.array_equal(np.asarray(rec_d.lam_f),
                                np.asarray(rec_r.lam_f)))
+
+    ok = True
+    for law in LAW_REGISTRY:
+        same = _same(law)
         if not same:
             print(f"fabric16 anchor MISMATCH: {law}")
         ok &= same
@@ -247,7 +256,17 @@ def _fabric16_anchor_bitmatch(devices) -> bool:
         and np.array_equal(np.asarray(st_d.fct), np.asarray(st_m.fct),
                            equal_nan=True)
         and np.array_equal(np.asarray(st_d.w), np.asarray(st_m.w)))
-    return bool(ok)
+
+    # impaired pass: one law per feedback channel (receiver telemetry,
+    # pause frames, incast notifications) — the full 13-law impaired
+    # conformance matrix lives in tests/test_shard_scenario.py
+    imp_ok = True
+    for law in ("powertcp", "backpressure", "pulser"):
+        same = _same(law, impair=imp)
+        if not same:
+            print(f"fabric16 impaired anchor MISMATCH: {law}")
+        imp_ok &= same
+    return bool(ok), bool(imp_ok)
 
 
 def smoke_fabric16(devices=None) -> dict:
@@ -255,41 +274,44 @@ def smoke_fabric16(devices=None) -> dict:
     BENCH_sweep.json.
 
     One k=16 fat-tree scenario is chunk-streamed through the sharded
-    slot engine twice — across the device mesh and pinned to one
+    slot engine twice — across the FULL device mesh and pinned to one
     device — over a bounded tick horizon (the schedule itself spans
-    ~85 ms; the leg simulates the first 10 ms of it). Headline figures:
+    ~85 ms; the leg simulates the first 10 ms of it). Both timed legs
+    run a degraded-spine impairment regime: every AGG<->CORE link's
+    capacity oscillates (a flapping spine) and every other link takes
+    light stochastic loss — the headline is a multi-device run of an
+    *impaired* fabric, not just the clean one. Headline figures:
     completed flows per wall-second and the sharded-vs-single-device
-    wall-clock speedup. ``fct_fabric16_devices_bitmatch`` additionally
-    pins the mesh run to the 1-device run bit-for-bit at full scale.
-
-    The timed mesh width is the largest power of two no wider than both
-    the local device count and the physical core count: the replicated
-    half of the tick (admission, queue integration) is recomputed per
-    device, so forcing more shards than cores (CI pins 8 XLA host
-    devices onto a 4-core runner) only oversubscribes it. The exactness
-    anchor still runs at the full forced device count — bit-identity
-    must hold on the widest mesh, not just the fastest one."""
-    import os
+    wall-clock speedup (CI gates ``>= 2.0`` on its 8-device mesh).
+    ``fct_fabric16_devices_bitmatch`` additionally pins the mesh run to
+    the 1-device run bit-for-bit at full scale, and the exactness
+    anchors (`fct_fabric16_exact_bitmatch`, ``_impaired_bitmatch``)
+    compare sharded vs reference for the whole law registry on the
+    256-host leaf-spine. ``fct_fabric16_comm_*`` reports the analytic
+    per-steady-tick communication volume of the mesh run (halo
+    all_to_all + packed gather) next to the pre-diet baseline layout."""
     ndev = resolve_devices("auto" if devices is None else devices)
-    cores = os.cpu_count() or 1
-    width = 1
-    while width * 2 <= min(ndev, cores):
-        width *= 2
     ft, sched = fabric16_scenario()
     n = int(sched.start.shape[0])
     S, steps, chunk = 1024, 10_000, 2048
     cfg = SimConfig(dt=DT, steps=steps, hist=512, update_period=2e-6)
     lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0)
     topo = ft.topology()
+    # degraded spine: AGG<->CORE capacity flaps between 40G and line
+    # rate twice a millisecond; everything else sees 0.2% random loss
+    deg = LinkProcess(kind="oscillate", bw_lo=40e9, period=500e-6, seed=7)
+    imp = fabric_impairments(ft, rules={(AGG, CORE): deg, (CORE, AGG): deg},
+                             default=netem(loss=0.002, jitter=0.0, seed=13))
 
     t0 = time.time()
     st_n, _ = simulate_slots_sharded(topo, sched, "powertcp", S, lcfg, cfg,
-                                     record=False, devices=width,
-                                     chunk=chunk)
+                                     record=False, devices=ndev,
+                                     chunk=chunk, impair=imp)
     wall_n = time.time() - t0
     t0 = time.time()
     st_1, _ = simulate_slots_sharded(topo, sched, "powertcp", S, lcfg, cfg,
-                                     record=False, devices=1, chunk=chunk)
+                                     record=False, devices=1, chunk=chunk,
+                                     impair=imp)
     wall_1 = time.time() - t0
 
     completed = int(np.isfinite(np.asarray(st_n.fct)).sum())
@@ -298,6 +320,10 @@ def smoke_fabric16(devices=None) -> dict:
                        equal_nan=True)
         and np.array_equal(np.asarray(st_n.w), np.asarray(st_1.w))
         and np.array_equal(np.asarray(st_n.q), np.asarray(st_1.q)))
+    mi = shard_geometry(sched, S, ft.num_queues, ndev)
+    census = comm_census(mi, S, int(np.asarray(sched.path).shape[1]),
+                         ft.num_queues, record=False)
+    exact_bits, impaired_bits = _fabric16_anchor_bitmatch(ndev)
     out = {
         "fct_fabric16_hosts": ft.n_hosts,
         "fct_fabric16_queues": ft.num_queues,
@@ -305,15 +331,24 @@ def smoke_fabric16(devices=None) -> dict:
         "fct_fabric16_slots": S,
         "fct_fabric16_steps": steps,
         "fct_fabric16_chunk": chunk,
-        "fct_fabric16_devices": width,
+        "fct_fabric16_devices": ndev,
         "fct_fabric16_devices_avail": ndev,
+        "fct_fabric16_impaired": True,
         "fct_fabric16_wall_s": round(wall_n, 3),
         "fct_fabric16_wall_1dev_s": round(wall_1, 3),
         "fct_fabric16_completed": completed,
         "fct_fabric16_flows_per_wall_s": round(completed / wall_n, 1),
         "fct_fabric16_shard_speedup": round(wall_1 / wall_n, 3),
+        "fct_fabric16_comm_exchanges_per_tick": census[
+            "exchanges_per_tick"],
+        "fct_fabric16_comm_bytes_per_tick": census["bytes_per_tick"],
+        "fct_fabric16_comm_rebuild_every": census["rebuild_every"],
+        "fct_fabric16_comm_rebuild_bytes": census["rebuild_bytes"],
+        "fct_fabric16_comm_baseline_bytes_per_tick": census[
+            "baseline_bytes_per_tick"],
         "fct_fabric16_devices_bitmatch": dev_bits,
-        "fct_fabric16_exact_bitmatch": _fabric16_anchor_bitmatch(ndev),
+        "fct_fabric16_exact_bitmatch": exact_bits,
+        "fct_fabric16_impaired_bitmatch": impaired_bits,
     }
     for k, v in out.items():
         emit(k, v)

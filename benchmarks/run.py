@@ -533,17 +533,30 @@ def smoke_ok(data: dict) -> bool:
               and data["fct_fabric_leafspine_paths_match"]
               and data["fct_fabric_ecmp_deterministic"]
               # sharded-scenario leg (DESIGN.md section 15): the k=16
-              # fat-tree must stream >=100k flows, the 256-host anchor
-              # must bit-match the reference engine for every registry
-              # law on the full mesh, and the mesh run must bit-match
-              # the 1-device run at full scale. The speedup floor only
-              # applies when the timed mesh is actually parallel (>= 2
-              # physical cores backing >= 2 shards) — on a 1-core host
-              # the two timed runs are the same program.
+              # fat-tree must stream >=100k flows on the degraded-spine
+              # impaired fabric, the 256-host anchor must bit-match the
+              # reference engine for every registry law (clean AND the
+              # impaired subset) on the full mesh, the mesh run must
+              # bit-match the 1-device run at full scale, and the
+              # halo-diet tick must move fewer bytes than the pre-diet
+              # gather layout. The speedup floor only applies when the
+              # timed mesh is actually parallel (>= 2 physical cores
+              # backing >= 2 shards) — on a 1-core host the two timed
+              # runs are the same program serialized; CI's own leg
+              # additionally gates >= 2.0 on its 8-device mesh.
               and data["fct_fabric16_flows"] >= 100_000
+              and data["fct_fabric16_impaired"]
               and data["fct_fabric16_exact_bitmatch"]
+              and data["fct_fabric16_impaired_bitmatch"]
               and data["fct_fabric16_devices_bitmatch"]
+              # ... the diet comparison only means something on a mesh
+              # that actually exchanges (a 1-wide mesh runs zero
+              # collectives; its analytic census is vacuous)
               and (data["fct_fabric16_devices"] < 2
+                   or data["fct_fabric16_comm_bytes_per_tick"]
+                   < data["fct_fabric16_comm_baseline_bytes_per_tick"])
+              and (data["fct_fabric16_devices"] < 2
+                   or os.cpu_count() < 2
                    or data["fct_fabric16_shard_speedup"] > 1.0)
               # feedback-channel laws (DESIGN.md section 16): every new
               # family bit-for-bit across all three engines on the

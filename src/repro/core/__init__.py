@@ -21,7 +21,7 @@ from .ckpt import (checkpoint_ticks, latest_checkpoint, load_checkpoint,
                    read_meta, save_checkpoint)
 from . import backends  # noqa: F401  (registers the fused Pallas backends)
 from . import megakernel  # noqa: F401  (whole-tick fused slot engine)
-from .shardslots import simulate_slots_sharded
+from .shardslots import comm_census, shard_geometry, simulate_slots_sharded
 from .network import (LeafSpine, make_flows_single, make_schedule,
                       schedule_as_flows, single_bottleneck)
 from .fabric import (CompiledPaths, Fabric, FabricBuilder, FabricRoutes,
@@ -66,6 +66,7 @@ __all__ = [
     "default_law_config",
     "init_slot_state", "init_state", "pad_flows", "pad_schedule",
     "resolve_devices", "simulate", "simulate_batch", "simulate_slots",
+    "comm_census", "shard_geometry",
     "simulate_slots_batch", "simulate_slots_sharded", "slot_step",
     "stack_flow_schedules",
     "stack_flows", "stack_law_configs", "step",

@@ -236,13 +236,57 @@ def _bandwidth(topo: Topology, bw_fn, t_sec, impair=None):
     return jnp.concatenate([bw, jnp.asarray([1e15], jnp.float32)])
 
 
+_SWITCH_TABLE_MAX_DEG = 64
+_switch_table_cache: dict = {}
+
+
+def _switch_queue_table(sw: np.ndarray, num_switches: int) -> np.ndarray:
+    """Static ``[num_switches, max_deg]`` table of each switch's queue ids in
+    ascending order, padded with ``len(sw)`` (points at an appended 0.0).
+
+    Replays ``segment_sum``'s per-switch accumulation exactly: XLA:CPU lowers
+    the scatter-add to a loop over updates in ascending queue order, so each
+    switch's sum is the left fold over its queues sorted ascending — which is
+    precisely a column-wise fold over this table (pads add +0.0, an exact
+    identity for the non-negative queue depths). Memoized per topology.
+    """
+    key = (sw.tobytes(), num_switches)
+    tab = _switch_table_cache.get(key)
+    if tab is None:
+        counts = np.bincount(sw, minlength=num_switches)
+        deg = int(counts.max()) if counts.size else 0
+        tab = np.full((num_switches, deg), len(sw), dtype=np.int32)
+        order = np.argsort(sw, kind="stable")   # per switch: queues ascending
+        col = np.concatenate([np.arange(c) for c in counts]) \
+            if counts.size else np.zeros((0,), np.int64)
+        tab[sw[order], col] = order.astype(np.int32)
+        _switch_table_cache[key] = tab
+    return tab
+
+
 def _buffer_caps(topo: Topology, q: jnp.ndarray) -> jnp.ndarray:
     """Per-queue caps; Dynamic Thresholds [17] when dt_alpha > 0."""
     buf = jnp.concatenate([topo.buffer, jnp.asarray([1e30], jnp.float32)])
     if topo.dt_alpha <= 0:
         return buf
-    used = jax.ops.segment_sum(q[:-1], topo.switch_of_queue,
-                               num_segments=topo.num_switches)
+    try:                              # concrete at trace time (closed-over)
+        sw_np = np.asarray(topo.switch_of_queue)
+    except Exception:                 # traced topology: keep the scatter
+        sw_np = None
+    if sw_np is not None and sw_np.size:
+        tab = _switch_queue_table(sw_np, int(topo.num_switches))
+    else:
+        tab = None
+    if tab is not None and 0 < tab.shape[1] <= _SWITCH_TABLE_MAX_DEG:
+        # Exact gather/fold replay of the scatter-add (see table docstring):
+        # ~deg fused vector adds instead of a serial per-element scatter.
+        qp = jnp.concatenate([q[:-1], jnp.zeros((1,), q.dtype)])
+        used = jnp.zeros((int(topo.num_switches),), q.dtype)
+        for j in range(tab.shape[1]):
+            used = used + qp[tab[:, j]]
+    else:
+        used = jax.ops.segment_sum(q[:-1], topo.switch_of_queue,
+                                   num_segments=topo.num_switches)
     free = jnp.maximum(topo.switch_buffer - used, 0.0)
     thr = topo.dt_alpha * free[topo.switch_of_queue]
     thr = jnp.concatenate([jnp.minimum(thr, topo.buffer),

@@ -51,9 +51,14 @@ the PR-7 feedback-channel discipline); a zero-valued process multiplies
 by 1.0 and adds +0.0 — exact in f32 — so the zero preset is bitwise
 identical to the unimpaired engine (CI-gated).
 
-The fused (dense Pallas) backend and ``shardslots.simulate_slots_sharded``
-reject impairments eagerly with ``NotImplementedError`` rather than run
-them approximately.
+``shardslots.simulate_slots_sharded`` runs impairments bit-identically
+to the single-device engines: the draws are stateless counter hashes of
+the GLOBAL link id, so each shard evaluates only its own queue-block
+slice of the regime (the ``qid0`` offset below) and one small all-gather
+assembles the full per-tick vectors. The fused (dense Pallas) backend
+still rejects impairments eagerly (``UnsupportedFeature``) rather than
+run them approximately — its incidence matmul reassociates the arrival
+sums the loss fold depends on.
 """
 from __future__ import annotations
 
@@ -137,25 +142,35 @@ def _epoch(t_sec, p: ImpairmentParams) -> jnp.ndarray:
     uint32 cast — still a deterministic counter."""
     ph = (jnp.asarray(t_sec, jnp.float32) - p.t0 +
           jnp.float32(_EDGE_NUDGE))
-    e = jnp.floor(ph / jnp.maximum(p.period, 1e-6)).astype(jnp.int32)
+    # the divisor is pinned so XLA cannot fold a constant period into a
+    # reciprocal multiply: the sharded engine evaluates dynamic [Qb] row
+    # slices (non-constant to the compiler) while the reference evaluates
+    # the full constant rows, and a recip-mul vs true-div 1-ulp quotient
+    # difference would flip the floor at epoch knife edges.
+    e = jnp.floor(ph / _pin(jnp.maximum(p.period, 1e-6))).astype(jnp.int32)
     return e.astype(jnp.uint32)
 
 
-def _u01(t_sec, p: ImpairmentParams, salt: int) -> jnp.ndarray:
+def _u01(t_sec, p: ImpairmentParams, salt: int, qid0=0) -> jnp.ndarray:
     """[Q] uniform draws in [0, 1): counter-based, stateless, per-link.
 
     The chain hashes (seed ^ salt) -> link id -> epoch, so links sharing
     a class seed still decorrelate (the link id is folded in here, not in
     the seed), and consecutive epochs of one link are independent. The
-    top 24 bits scale to f32 exactly (f32 has a 24-bit significand)."""
-    qid = jnp.arange(p.kind.shape[-1], dtype=jnp.uint32)
+    top 24 bits scale to f32 exactly (f32 has a 24-bit significand).
+    ``qid0`` offsets the link ids when ``p`` is a contiguous row slice of
+    the full regime (the sharded engine evaluates its own queue block
+    only): draws depend on the GLOBAL link id, so a slice evaluated at
+    its offset is bitwise the slice of the full evaluation."""
+    qid = (jnp.asarray(qid0, jnp.uint32) +
+           jnp.arange(p.kind.shape[-1], dtype=jnp.uint32))
     h = _mix32(p.seed ^ jnp.uint32(salt))
     h = _mix32(h ^ (qid * jnp.uint32(0x9E3779B9)))
     h = _mix32(h ^ _epoch(t_sec, p))
     return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
-def link_bw_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+def link_bw_at(t_sec, p: ImpairmentParams, qid0=0) -> jnp.ndarray:
     """[Q] per-link service rates at ``t_sec`` (bytes/s).
 
     All four kinds are evaluated and ``where``-selected (branch-free, so
@@ -169,12 +184,16 @@ def link_bw_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
     ph = jnp.mod(t - p.t0 + _EDGE_NUDGE, p.period)
     up = (ph >= 0.0) & (ph < p.up)
     sched = jnp.where(up, p.bw_hi, p.bw_lo)
-    # oscillate: triangle wave bw_lo -> bw_hi -> bw_lo over one period
-    frac = _pin(ph / p.period)
+    # oscillate: triangle wave bw_lo -> bw_hi -> bw_lo over one period.
+    # The pinned divisor keeps the quotient a true division in every
+    # compiled program: with constant rows XLA rewrites x / c into
+    # x * (1 / c), with dynamically sliced rows (sharded block eval) it
+    # cannot, and the two round differently by 1 ulp.
+    frac = _pin(ph / _pin(p.period))
     tri = 1.0 - jnp.abs(_nofma(2.0 * frac) - 1.0)
     osc = p.bw_lo + _nofma(_pin((p.bw_hi - p.bw_lo) * tri))
     # fading: piecewise-constant uniform draw per epoch
-    u = _u01(t, p, _SALT_BW)
+    u = _u01(t, p, _SALT_BW, qid0)
     fad = p.bw_lo + _nofma(_pin((p.bw_hi - p.bw_lo) * u))
     bw = jnp.where(p.kind == KIND_SCHEDULE, sched,
                    jnp.where(p.kind == KIND_OSCILLATE, osc,
@@ -183,26 +202,26 @@ def link_bw_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
     return _pin(jnp.asarray(bw, jnp.float32))
 
 
-def link_loss_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+def link_loss_at(t_sec, p: ImpairmentParams, qid0=0) -> jnp.ndarray:
     """[Q] per-link loss fractions at ``t_sec``, clipped to
     [0, ``LOSS_MAX``]. ``LOSS_RANDOM`` draws uniformly in [0, loss) per
     epoch; ``LOSS_CONST`` is the fraction itself. A zero ``loss`` row is
     exactly 0.0 either way (0 * u == +0.0), which is what keeps the
     zero-impairment keep factor an exact 1.0."""
     t = jnp.asarray(t_sec, jnp.float32)
-    u = _u01(t, p, _SALT_LOSS)
+    u = _u01(t, p, _SALT_LOSS, qid0)
     loss = jnp.where(p.loss_kind == LOSS_RANDOM,
                      _nofma(_pin(p.loss * u)), p.loss)
     return jnp.clip(jnp.asarray(loss, jnp.float32), 0.0, LOSS_MAX)
 
 
-def link_jitter_at(t_sec, p: ImpairmentParams) -> jnp.ndarray:
+def link_jitter_at(t_sec, p: ImpairmentParams, qid0=0) -> jnp.ndarray:
     """[Q] per-link added queuing delay at ``t_sec`` (seconds): a
     per-epoch uniform draw in [0, jitter] — netem-style delay variation.
     A zero ``jitter`` row is exactly +0.0, the additive identity the
     theta hop-sum needs for the zero-impairment bitwise contract."""
     t = jnp.asarray(t_sec, jnp.float32)
-    u = _u01(t, p, _SALT_JIT)
+    u = _u01(t, p, _SALT_JIT, qid0)
     return jnp.maximum(_nofma(_pin(p.jitter * u)), 0.0)
 
 

@@ -400,10 +400,11 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
     spec (``spec.slots``), the reference backend, and no RDCN schedule
     axis; points run sequentially, bit-identical to the batched slot
     path. ``chunk`` streams each point's schedule in C-entry windows.
-    Feedback-channel laws (``Law.feedback != "receiver"`` or the
-    pause/incast channels, DESIGN.md section 16) raise here — the
-    sharded tick does not carry their channels; sweep them through the
-    batched slot path or the megakernel backend axis instead.
+    Feedback-channel laws (pause, incast, hop-local telemetry) and an
+    ``impairments`` axis both run here: the sharded tick carries every
+    feedback channel, and impairment regimes are evaluated per queue
+    block (DESIGN.md sections 15-17) — each point takes its own regime,
+    un-stacked, since a shard-scenario point is one program.
 
     ``fault_tolerant=True`` turns hard failures into per-point
     bookkeeping (DESIGN.md section 18): each (topology, law, backend)
@@ -430,10 +431,6 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
         if spec.schedules is not None:
             raise ValueError("shard_scenario does not support an RDCN "
                              "schedule axis")
-        if spec.impairments is not None:
-            raise ValueError("shard_scenario does not support an "
-                             "impairment axis (the sharded slot engine "
-                             "splits the queue axis; see shardslots)")
     if spec.topologies is not None:
         if topo is not None:
             raise ValueError("spec carries a topology axis; pass topo=None")
@@ -491,18 +488,22 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
 
                 if shard_scenario:
                     def run_shard_point(p, lcfg, be_):
+                        # a shard-scenario point is one program, so its
+                        # impairment regime rides along un-stacked
+                        imp_p = (imp_group[p.impair_idx]
+                                 if imp_group is not None else None)
                         if be_ != "reference":
                             # the isolation fallback route for a point
-                            # the sharded engine rejects: the unsharded
+                            # whose sharded run failed: the unsharded
                             # slot engine implements every channel
                             return simulate_slots(
                                 topo_t, scheds[p.flows_idx], law,
                                 spec.slots, lcfg, cfg, record=record,
-                                chunk=chunk)
+                                chunk=chunk, impair=imp_p)
                         return simulate_slots_sharded(
                             topo_t, scheds[p.flows_idx], law,
                             spec.slots, lcfg, cfg, record=record,
-                            devices=devices, chunk=chunk)
+                            devices=devices, chunk=chunk, impair=imp_p)
 
                     sts, rcs = [], []
                     for p, lcfg in zip(rows, lcfgs):
@@ -513,8 +514,8 @@ def run_sweep(spec: SweepSpec, topo: Optional[Topology] = None,
                             try:
                                 # "sharded" -> unsharded slot engine is
                                 # this path's declared degradation (the
-                                # sharded engine's UnsupportedFeature
-                                # hints exactly that route)
+                                # unsharded engine implements the same
+                                # channels on one device)
                                 (st_i, rec_i), used, att = _run_degraded(
                                     "reference",
                                     lambda b, p=p, lcfg=lcfg:

@@ -120,6 +120,27 @@ def tick_roofline(flops: float, bytes_accessed: float,
     }
 
 
+def tick_collective(census: Dict, ici_bw: float = ICI_BW) -> Dict:
+    """Collective roofline term for one sharded-simulator tick.
+
+    ``census`` is ``core.shardslots.comm_census``'s table (analytic f32
+    payload bytes per device per steady tick). Returns the wire time the
+    tick's exchanges would take on the reference interconnect, with the
+    rebuild traffic amortized over its cadence, next to the pre-diet
+    gather layout — the ratio is the halo diet's bandwidth win
+    independent of any host's core count."""
+    amortized = (census["bytes_per_tick"]
+                 + census["rebuild_bytes"] / max(census["rebuild_every"], 1))
+    base = census["baseline_bytes_per_tick"]
+    return {
+        "collective_us": amortized / ici_bw * 1e6,
+        "baseline_collective_us": base / ici_bw * 1e6,
+        "bytes_per_tick": amortized,
+        "baseline_bytes_per_tick": base,
+        "diet_ratio": base / max(amortized, 1e-9),
+    }
+
+
 def render_row(cell: Dict) -> str:
     r = roofline_terms(cell)
     return (f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "

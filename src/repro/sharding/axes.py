@@ -28,6 +28,11 @@ DEFAULT_RULES = {
     "batch": ("pod", "data"),
     "slot": "data",
     "queue": "data",
+    # per-shard halo-exchange buffers of the sharded slot engine: the
+    # [ndev, cap] per-destination-block contribution rows moved by
+    # all_to_all (core/shardslots.py). Axis 0 enumerates destination
+    # shards, so it rides the same data axis.
+    "halo": "data",
     "vocab": "model",
     "heads": "model",
     "kv": "model",

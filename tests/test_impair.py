@@ -11,10 +11,10 @@ registry).
 
 Structural contracts ride along: the all-zero impairment preset must
 reproduce the unimpaired run bitwise (keep == 1.0 / jit == 0.0 are
-exact f32 identities), the sharded slot engine must reject impairments
-EAGERLY (its queue-axis split would fork the per-link hash streams),
-and the sweep's ``impairments`` axis must thread regimes through the
-batched programs bit-exactly.
+exact f32 identities), the sharded slot engine must evaluate its
+qid0-offset per-block impairment draws bit-identically to the reference
+fold, and the sweep's ``impairments`` axis must thread regimes through
+the batched programs bit-exactly.
 """
 import numpy as np
 import pytest
@@ -145,16 +145,21 @@ def test_zero_impairment_bitwise_baseline():
 # engine/API seams: rejections are EAGER, not mid-scan surprises
 # -------------------------------------------------------------------------
 
-def test_sharded_engine_rejects_impairments_eagerly():
-    """``simulate_slots_sharded`` splits the queue axis across the mesh;
-    a per-shard replay of the counter-based hash streams would not
-    bit-match the batched path, so the engine must refuse impairments
-    before tracing anything."""
+def test_sharded_engine_bitmatches_impaired():
+    """``simulate_slots_sharded`` accepts impairments: the draws are
+    stateless counter hashes of the GLOBAL link id, so each shard
+    evaluates its own queue-block slice (``qid0`` offset) and the result
+    is bitwise the single-device engine's. Width > 1 conformance lives in
+    tests/test_shard_scenario.py; this anchors the lifted seam itself."""
     ft, sched, cfg, imp = _anchor()
+    topo = ft.topology()
     lcfg = _anchor_law_cfg(sched)
-    with pytest.raises(NotImplementedError, match="sharded"):
-        simulate_slots_sharded(ft.topology(), sched, "powertcp", 16, lcfg,
-                               cfg, impair=imp)
+    st_r, rec_r = simulate_slots(topo, sched, "powertcp", 16, lcfg, cfg,
+                                 impair=imp)
+    st_s, rec_s = simulate_slots_sharded(topo, sched, "powertcp", 16, lcfg,
+                                         cfg, impair=imp)
+    np.testing.assert_array_equal(np.asarray(rec_s.q), np.asarray(rec_r.q))
+    np.testing.assert_array_equal(np.asarray(st_s.fct), np.asarray(st_r.fct))
 
 
 def test_fused_backend_rejects_impairments():
@@ -181,13 +186,28 @@ def test_spec_rejects_impairments_plus_schedules():
                   schedules=[CircuitSchedule()])
 
 
-def test_shard_scenario_rejects_impairment_axis():
+def test_shard_scenario_impairment_axis_bitexact():
+    """``run_sweep(..., shard_scenario=True)`` takes the ``impairments``
+    axis: each point's regime rides its sharded program un-stacked, and
+    the per-point results are bitwise the direct ``simulate_slots`` run
+    under the same regime."""
     ft, sched, cfg, imp = _anchor()
+    topo = ft.topology()
     fl = schedule_as_flows(sched)
-    spec = SweepSpec(laws=["powertcp"], flows=[fl], impairments=[imp],
-                     slots=16)
-    with pytest.raises(ValueError, match="impairment"):
-        run_sweep(spec, ft.topology(), cfg, shard_scenario=True)
+    lcfg = _anchor_law_cfg(sched)
+    spec = SweepSpec(laws=["powertcp"], flows=[fl],
+                     impairments=[no_impairment(topo), imp], slots=16,
+                     expected_flows=8.0)
+    shd = run_sweep(spec, topo, cfg, record=False, shard_scenario=True)
+    for i, p in enumerate(shd.points):
+        st = shd.state(i)
+        st_r, _ = simulate_slots(topo, sched, "powertcp", 16, lcfg, cfg,
+                                 impair=spec.impairments[p.impair_idx])
+        np.testing.assert_array_equal(np.asarray(st.fct),
+                                      np.asarray(st_r.fct))
+    # the two regime rows genuinely differ (the axis is live)
+    assert not np.array_equal(np.asarray(shd.state(0).fct),
+                              np.asarray(shd.state(1).fct))
 
 
 # -------------------------------------------------------------------------

@@ -17,10 +17,13 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core import (GBPS, US, SimConfig, SweepSpec, default_law_config,
-                        make_flows_single, make_schedule, run_sweep,
+from repro.core import (CircuitSchedule, GBPS, LAWS, LinkProcess, SimConfig,
+                        SweepSpec, US, default_law_config,
+                        fabric_impairments, fat_tree, make_flows_single,
+                        make_schedule, netem, poisson_websearch, run_sweep,
                         schedule_as_flows, simulate_slots,
                         simulate_slots_sharded, single_bottleneck)
+from repro.core.fabric import HOST, TOR
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 B = 100 * GBPS
@@ -94,6 +97,134 @@ def test_sweep_shard_scenario_matches_batched_slots():
         for a, b in zip(np.asarray(base.states[li].fct),
                         np.asarray(shd.states[li].fct)):
             np.testing.assert_array_equal(a, b)
+
+
+# -------------------------------------------------------------------------
+# registry conformance: every law, clean AND impaired, sharded == reference
+# -------------------------------------------------------------------------
+
+_ANCHOR_CACHE: dict = {}
+
+
+def _registry_anchor():
+    """k=4 fat-tree web-search plus the mixed impairment regime (the
+    test_impair anchor shape), with a law config satisfying every
+    registered law (retcp needs a circuit schedule). Built once per
+    test session — the parametrized conformance tests share it."""
+    if not _ANCHOR_CACHE:
+        ft = fat_tree(4)
+        flows = poisson_websearch(ft, 0.25, 0.002, 1e-6, seed=3)
+        sched = make_schedule(flows)
+        cfg = SimConfig(dt=1e-6, steps=2000, hist=512, update_period=2e-6)
+        sp = CircuitSchedule(day=50 * US, night=10 * US,
+                             matchings=4).params()
+        lcfg = default_law_config(schedule_as_flows(sched),
+                                  expected_flows=8.0, sched=sp)
+        imp = fabric_impairments(
+            ft, rules={(TOR, HOST): LinkProcess(kind="oscillate",
+                                                bw_lo=2.5e9,
+                                                period=200e-6, seed=5)},
+            default=netem(loss=0.01, jitter=1e-6, seed=9))
+        _ANCHOR_CACHE.update(topo=ft.topology(), sched=sched, cfg=cfg,
+                             lcfg=lcfg, imp=imp)
+    return _ANCHOR_CACHE
+
+
+@pytest.mark.parametrize("law", sorted(LAWS))
+def test_registry_conformance_1device(law):
+    """EVERY registry law — feedback channels (pause, incast, hop-local
+    telemetry) and congestion-point clocks included — through the
+    sharded engine on the impaired fat-tree anchor: bit-identical to the
+    reference slot engine, whole-schedule clean and chunk-streamed
+    impaired. Mesh widths {2, 4, 8} run in the forced-8-device
+    subprocess test below."""
+    a = _registry_anchor()
+    S = 64
+    ref_c = simulate_slots(a["topo"], a["sched"], law, S, a["lcfg"],
+                           a["cfg"])
+    shd_c = simulate_slots_sharded(a["topo"], a["sched"], law, S,
+                                   a["lcfg"], a["cfg"], devices=1)
+    _assert_bitmatch(shd_c, ref_c)
+    ref_i = simulate_slots(a["topo"], a["sched"], law, S, a["lcfg"],
+                           a["cfg"], impair=a["imp"])
+    shd_i = simulate_slots_sharded(a["topo"], a["sched"], law, S,
+                                   a["lcfg"], a["cfg"], devices=1,
+                                   chunk=96, impair=a["imp"])
+    _assert_bitmatch(shd_i, ref_i)
+
+
+_SHARD8_REGISTRY_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+    assert jax.local_device_count() == 8, jax.local_device_count()
+
+    from repro.core import (CircuitSchedule, SimConfig, US,
+                            default_law_config, fabric_impairments,
+                            fat_tree, LinkProcess, make_schedule, netem,
+                            poisson_websearch, schedule_as_flows,
+                            simulate_slots, simulate_slots_sharded)
+    from repro.core.fabric import HOST, TOR
+
+    LAWS_GROUP = %r
+    ft = fat_tree(4)
+    sched = make_schedule(poisson_websearch(ft, 0.25, 0.002, 1e-6, seed=3))
+    topo = ft.topology()
+    cfg = SimConfig(dt=1e-6, steps=2000, hist=512, update_period=2e-6)
+    sp = CircuitSchedule(day=50 * US, night=10 * US, matchings=4).params()
+    lcfg = default_law_config(schedule_as_flows(sched), expected_flows=8.0,
+                              sched=sp)
+    imp = fabric_impairments(
+        ft, rules={(TOR, HOST): LinkProcess(kind="oscillate", bw_lo=2.5e9,
+                                            period=200e-6, seed=5)},
+        default=netem(loss=0.01, jitter=1e-6, seed=9))
+    S = 64
+
+    def check(law, ref, nd, chunk, **kw):
+        ckw = {"chunk": 96} if chunk else {}
+        shd = simulate_slots_sharded(topo, sched, law, S, lcfg, cfg,
+                                     devices=nd, **ckw, **kw)
+        ok = (np.array_equal(np.asarray(shd[1].q), np.asarray(ref[1].q))
+              and np.array_equal(np.asarray(shd[0].fct),
+                                 np.asarray(ref[0].fct), equal_nan=True)
+              and np.array_equal(np.asarray(shd[0].w),
+                                 np.asarray(ref[0].w))
+              and np.array_equal(np.asarray(shd[1].lam_f),
+                                 np.asarray(ref[1].lam_f)))
+        assert ok, (law, nd, chunk, bool(kw))
+
+    # widths cycle per law so the group covers {2, 4, 8}; the chunked /
+    # whole split alternates — every law runs sharded clean AND
+    # sharded impaired
+    for i, law in enumerate(LAWS_GROUP):
+        ref_c = simulate_slots(topo, sched, law, S, lcfg, cfg)
+        ref_i = simulate_slots(topo, sched, law, S, lcfg, cfg, impair=imp)
+        check(law, ref_c, (2, 4, 8)[i %% 3], chunk=(i %% 2 == 0))
+        check(law, ref_i, (4, 8, 2)[i %% 3], chunk=(i %% 2 == 1),
+              impair=imp)
+    print("SHARD8-REGISTRY-OK")
+""")
+
+_LAW_GROUPS = [tuple(sorted(LAWS))[i::3] for i in range(3)]
+
+
+@pytest.mark.parametrize("group", range(3))
+def test_registry_conformance_mesh_widths(group):
+    """Acceptance (DESIGN.md section 15): the whole law registry runs
+    sharded on real multi-device meshes — widths 2, 4 and 8 of the
+    forced-8-CPU-device mesh, chunked and whole-schedule, clean and
+    under the mixed impairment regime — and every run bit-matches the
+    reference slot engine. Split into three law groups so one failure
+    localizes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep +
+                         env.get("PYTHONPATH", ""))
+    script = _SHARD8_REGISTRY_SCRIPT % (list(_LAW_GROUPS[group]),)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARD8-REGISTRY-OK" in r.stdout
 
 
 _SHARD8_SCRIPT = textwrap.dedent("""

@@ -187,6 +187,43 @@ def aggregate_trace(trace_dir: str, steps: int, top: int = 12):
     return {k: round(v / steps, 2) for k, v in ev.most_common(top)}
 
 
+def comm_report(topo, sched, slots: int, devices: int):
+    """Analytic per-steady-tick communication census of the sharded
+    engine at this mesh width (core.shardslots.comm_census): f32 payload
+    bytes per device per tick for each exchange, the rebuild traffic and
+    its amortization cadence, the pre-diet gather layout alongside, and
+    the reference-interconnect wire time (launch.roofline). Analytic by
+    design — collective payloads are static shapes, so the census needs
+    no mesh to run on and no profiler to read."""
+    import numpy as np
+    from repro.core import comm_census, shard_geometry
+    from repro.launch.roofline import tick_collective
+
+    mi = shard_geometry(sched, slots, topo.num_queues, devices)
+    H = int(np.asarray(sched.path).shape[1])
+    census = comm_census(mi, slots, H, int(topo.num_queues), record=False)
+    wire = tick_collective(census)
+    print(f"\n== sharded comm census (devices={devices}) ==")
+    print(f"  geometry: Sl={mi.Sl} Qb={mi.Qb} cap={mi.cap} "
+          f"maxdeg={mi.maxdeg} rb_every={mi.rb_every} "
+          f"csr={mi.use_csr}")
+    for name, b in census["bytes_per_exchange"].items():
+        print(f"  {name:42s} {b} B/tick")
+    print(f"  {'rebuild (every ' + str(census['rebuild_every']) + ' ticks)':42s} "
+          f"{census['rebuild_bytes']} B")
+    print(f"  exchanges/tick: {census['exchanges_per_tick']} "
+          f"(baseline {census['baseline_exchanges_per_tick']})")
+    print(f"  bytes/tick: {census['bytes_per_tick']} "
+          f"(baseline {census['baseline_bytes_per_tick']}, "
+          f"diet {wire['diet_ratio']:.2f}x)")
+    print(f"  wire time: {wire['collective_us']:.3f} us/tick "
+          f"(baseline {wire['baseline_collective_us']:.3f})")
+    print(f"BENCH,profile_tick.comm.bytes_per_tick,"
+          f"{census['bytes_per_tick']},B")
+    print(f"BENCH,profile_tick.comm.diet_ratio,"
+          f"{wire['diet_ratio']:.2f},x")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--hosts", type=int, default=256)
@@ -198,14 +235,24 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--trace", action="store_true",
                     help="also aggregate a profiler trace per backend")
+    ap.add_argument("--shard-devices", type=int, default=0,
+                    help="also print the sharded engine's per-tick "
+                         "communication census for this mesh width "
+                         "(analytic bytes per exchange, rebuild "
+                         "amortization, pre-diet baseline, roofline "
+                         "wire time)")
     a = ap.parse_args(argv)
 
     topo, sched = build_scenario(a.hosts, a.load, 1e-6)
     print(f"scenario: hosts={a.hosts} load={a.load} "
           f"flows={int(sched.start.shape[0])} queues={topo.num_queues} "
           f"slots={a.slots} steps={a.steps} law={a.law}")
+    if a.shard_devices > 0:
+        comm_report(topo, sched, a.slots, a.shard_devices)
     results = []
     for be in a.backends.split(","):
+        if not be.strip():
+            continue
         trace_dir = f"/tmp/profile_tick_{be}" if a.trace else None
         r = profile_backend(topo, sched, a.law, a.slots, a.steps,
                             be.strip(), a.repeats, trace_dir)
